@@ -1,0 +1,211 @@
+"""Figure 3 analogue: VM/JIT runtime efficiency micro-suite.
+
+The paper compares its LLVM JIT against ubpf/rbpf interpreters, native code
+and wasm on: log2_int, prime, memcpy, simple, switch, strcmp_fail,
+memory_a_plus_b. We run the SAME workloads, written in our eBPF asm, on:
+
+  interp      reference interpreter (the ubpf analogue)
+  jax_jit     bytecode->JAX JIT, compiled (the LLVM-JIT analogue)
+  native      hand-written jnp equivalent (the native-code bar)
+
+Reported: ns per program execution.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import asm, jit as J, verifier, vm
+
+BENCHES: dict[str, dict] = {}
+
+
+def bench(name, text, ctx=(0,) * 8, native=None):
+    BENCHES[name] = {"text": text, "ctx": list(ctx), "native": native}
+
+
+bench("simple", """
+    mov r0, 1
+    add r0, 2
+    lsh r0, 4
+    sub r0, 3
+    exit
+""", native=lambda c: ((1 + 2) << 4) - 3)
+
+bench("memory_a_plus_b", """
+    ldxdw r2, [r1+0]
+    ldxdw r3, [r1+8]
+    add r2, r3
+    stxdw [r10-8], r2
+    ldxdw r0, [r10-8]
+    exit
+""", ctx=(17, 25, 0, 0, 0, 0, 0, 0),
+    native=lambda c: c[0] + c[1])
+
+bench("log2_int", """
+    ldxdw r6, [r1+0]
+    mov r0, 0
+    loop:
+    rsh r6, 1
+    jeq r6, 0, out
+    add r0, 1
+    ja loop
+    out:
+    exit
+""", ctx=(1 << 20, 0, 0, 0, 0, 0, 0, 0),
+    native=lambda c: int(jnp.log2(jnp.float32(c[0]))))
+
+bench("prime", """
+    ldxdw r6, [r1+0]     ; candidate
+    mov r7, 2
+    mov r0, 1            ; assume prime
+    loop:
+    mov r8, r7
+    mul r8, r7
+    jgt r8, r6, out      ; i*i > n -> prime
+    mov r8, r6
+    mod r8, r7
+    jne r8, 0, next
+    mov r0, 0            ; divisible -> not prime
+    ja out
+    next:
+    add r7, 1
+    ja loop
+    out:
+    exit
+""", ctx=(10007, 0, 0, 0, 0, 0, 0, 0))
+
+bench("memcpy", """
+    lddw r4, 0x1122334455667788   ; init source (verifier demands it)
+    stxdw [r10-256], r4
+    stxdw [r10-248], r4
+    stxdw [r10-240], r4
+    stxdw [r10-232], r4
+    mov r6, 0            ; iteration count
+    loop:
+    mov r2, r10
+    add r2, -256
+    mov r3, r10
+    add r3, -128
+    ldxdw r4, [r2+0]
+    stxdw [r3+0], r4
+    ldxdw r4, [r2+8]
+    stxdw [r3+8], r4
+    ldxdw r4, [r2+16]
+    stxdw [r3+16], r4
+    ldxdw r4, [r2+24]
+    stxdw [r3+24], r4
+    add r6, 1
+    jlt r6, 8, loop
+    ldxdw r0, [r10-128]
+    exit
+""")
+
+bench("switch", """
+    ldxdw r6, [r1+0]
+    mov r0, 0
+    jeq r6, 1, c1
+    jeq r6, 2, c2
+    jeq r6, 3, c3
+    jeq r6, 4, c4
+    jeq r6, 5, c5
+    mov r0, 99
+    ja out
+    c1:
+    mov r0, 11
+    ja out
+    c2:
+    mov r0, 22
+    ja out
+    c3:
+    mov r0, 33
+    ja out
+    c4:
+    mov r0, 44
+    ja out
+    c5:
+    mov r0, 55
+    out:
+    exit
+""", ctx=(4, 0, 0, 0, 0, 0, 0, 0), native=lambda c: 44)
+
+bench("strcmp_fail", """
+    mov r6, 0x41424344   ; "ABCD"
+    stxw [r10-8], r6
+    mov r6, 0x41424345   ; "ABCE" -> mismatch at byte 3
+    stxw [r10-16], r6
+    mov r7, 0
+    loop:
+    mov r2, r10
+    add r2, -8
+    mov r3, r10
+    add r3, -16
+    ldxb r4, [r2+0]
+    ldxb r5, [r3+0]
+    jne r4, r5, fail
+    add r7, 1
+    jlt r7, 4, loop
+    mov r0, 0
+    ja out
+    fail:
+    mov r0, 1
+    out:
+    exit
+""")
+
+
+def _run_one(name, spec, iters=300):
+    a = asm.assemble(spec["text"])
+    vprog = verifier.verify(a.insns, [], ctx_words=8)
+    ctx_bytes = vm.pack_ctx(spec["ctx"])
+
+    # interpreter
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        res = vm.run(a.insns, ctx_bytes, [], {})
+    t_interp = (time.perf_counter() - t0) / iters
+
+    # JAX JIT (tier follows CFG: dag->T1, loop->T2)
+    prog = J.compile_program(vprog)
+    ctx = jnp.asarray([vm.s64(x) for x in spec["ctx"]], jnp.int64)
+    aux = J.make_aux()
+    f = jax.jit(lambda c: prog(c, {}, aux)[0])
+    r0 = f(ctx)
+    assert int(r0) & ((1 << 64) - 1) == res.r0 & ((1 << 64) - 1), name
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(ctx)
+    jax.block_until_ready(out)
+    t_jit = (time.perf_counter() - t0) / iters
+
+    # native python/jnp
+    t_nat = float("nan")
+    if spec["native"] is not None:
+        nat = spec["native"]
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            nat(spec["ctx"])
+        t_nat = (time.perf_counter() - t0) / iters
+
+    return {"name": name, "tier": vprog.tier,
+            "interp_ns": t_interp * 1e9, "jit_ns": t_jit * 1e9,
+            "native_ns": t_nat * 1e9,
+            "speedup": t_interp / t_jit if t_jit else 0.0}
+
+
+def run():
+    return [_run_one(n, s) for n, s in BENCHES.items()]
+
+
+def main():
+    print("name,tier,interp_ns,jit_ns,native_ns,jit_speedup")
+    for r in run():
+        print(f"{r['name']},{r['tier']},{r['interp_ns']:.0f},"
+              f"{r['jit_ns']:.0f},{r['native_ns']:.0f},"
+              f"{r['speedup']:.1f}x")
+
+
+if __name__ == "__main__":
+    main()

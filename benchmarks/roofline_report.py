@@ -1,0 +1,60 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md §Roofline table."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(results_dir="results"):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(p) as f:
+            d = json.load(f)
+        if "error" in d:
+            d["status"] = "FAIL"
+        elif "skip" in d:
+            d["status"] = "skip"
+        else:
+            d["status"] = "ok"
+        rows.append(d)
+    return rows
+
+
+def fmt_row(d):
+    if d["status"] == "skip":
+        return (f"| {d.get('arch','?')} | {d.get('shape','?')} | - | skip | "
+                f"{d.get('skip','')[:40]} | | | | |")
+    if d["status"] == "FAIL":
+        return (f"| {d.get('arch','?')} | {d.get('shape','?')} | - | FAIL | "
+                f"{d.get('error','')[:40]} | | | | |")
+    r = d["roofline"]
+    mesh = "x".join(str(x) for x in d["mesh"])
+    return ("| {arch} | {shape} | {mesh} | {c:.4f} | {m:.4f} | {n:.4f} | "
+            "{dom} | {useful:.2f} | {frac:.3f} |".format(
+                arch=d["arch"], shape=d["shape"], mesh=mesh,
+                c=r["compute_s"], m=r["memory_s"], n=r["collective_s"],
+                dom=r["dominant"], useful=r["useful_flops_ratio"],
+                frac=r["roofline_fraction"]))
+
+
+def main(results_dir="results"):
+    rows = load(results_dir)
+    sp = [d for d in rows if not d.get("multi_pod") and
+          not d.get("probes")]
+    print("| arch | shape | mesh | compute_s | memory_s | collective_s |"
+          " dominant | model/HLO flops | roofline_frac |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for d in sp:
+        print(fmt_row(d))
+    ok = [d for d in rows if d["status"] == "ok"]
+    mp = [d for d in rows if d.get("multi_pod")]
+    print(f"\n# cells: {len(rows)} total, {len(ok)} compiled, "
+          f"{len([d for d in rows if d['status'] == 'skip'])} skipped, "
+          f"{len([d for d in rows if d['status'] == 'FAIL'])} failed; "
+          f"multi-pod compiled: {len([d for d in mp if d['status'] == 'ok'])}")
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1] if len(sys.argv) > 1 else "results")

@@ -1,0 +1,192 @@
+"""Table 1 analogue: per-event probe overhead, kernel-mode vs bpftime-mode.
+
+Paper's comparison          ->  ours (boundary isomorphism, DESIGN.md §2)
+  kernel uprobe (int3 trap)     host-callback probe (io_callback round-trip)
+  bpftime userspace uprobe      in-graph compiled probe (fused into step)
+  syscall tracepoint            framework-syscall hook (host interpreter)
+  embedding runtime             probe_stage alone on a ready event tape
+
+Reported: ns per probe event (CPU wall clock; the RATIO kernel/user is the
+reproduced claim — paper reports ~10x on x86, see EXPERIMENTS.md §Table-1).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events as E, jit as J, maps as M
+from repro.core.runtime import BpftimeRuntime
+from repro.core import callback_probe
+
+COUNT_PROG = """
+    ldxdw r6, [r1+ctx:layer]
+    stxdw [r10-8], r6
+    lddw r1, map:counts
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+ARR = M.MapSpec("counts", M.MapKind.ARRAY, max_entries=256)
+
+N_EVENTS = 64      # probe events per step
+N_LAYERS = 64
+
+
+def _model_step(x):
+    """Stand-in compute: a few matmuls per 'layer' with a probe site."""
+    for i in range(4):
+        x = jnp.tanh(x @ x.T @ x * 1e-3)
+    return x
+
+
+def _timeit(fn, *args, iters=30, warmup=5, repeats=3):
+    """min-of-repeats mean (standard microbenchmark practice: the minimum
+    is the least-contended estimate)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(*args)
+        jax.block_until_ready(out)
+        best = min(best, (time.perf_counter() - t0) / iters)
+    return best
+
+
+def _make_runtime(target):
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("count", COUNT_PROG, [ARR], "uprobe")
+    rt.attach(pid, target)
+    return rt
+
+
+def _probed_step_fn(rt, kind, mode="scan"):
+    def step(x, maps, step_idx):
+        with rt.collector() as col:
+            def body(c, i):
+                h = E.probe_site("site", c * 1.0, kind=kind)
+                return c + h.mean() * 0.0 + 1.0, None
+            c, _ = E.probed_scan(body, x.mean(), jnp.arange(N_EVENTS))
+            y = _model_step(x) + c * 0.0
+            rows = col.take_all_rows()
+        aux = J.make_aux(time_ns=step_idx)
+        maps, aux = rt.probe_stage(rows, maps, aux, mode=mode)
+        return y, maps
+    return step
+
+
+def _callback_step_fn(rt, kind):
+    def step(x, step_idx):
+        with rt.collector() as col:
+            def body(c, i):
+                h = E.probe_site("site", c * 1.0, kind=kind)
+                return c + h.mean() * 0.0 + 1.0, None
+            c, _ = E.probed_scan(body, x.mean(), jnp.arange(N_EVENTS))
+            y = _model_step(x) + c * 0.0
+            rows = col.take_all_rows()
+        tok = callback_probe.host_probe_stage(rt, rows, step_idx)
+        return y + tok.astype(y.dtype) * 0.0
+    return step
+
+
+def run() -> list[tuple[str, float, str]]:
+    x = jax.random.normal(jax.random.PRNGKey(0), (128, 128), jnp.float32)
+    results = []
+
+    # baseline: same step, no probes attached (sites = nops)
+    rt_none = BpftimeRuntime()
+    base = jax.jit(_probed_step_fn(rt_none, E.KIND_ENTRY))
+    maps0 = rt_none.init_device_maps()
+    t_base = _timeit(base, x, maps0, jnp.int64(0))
+
+    for label, kind, target in (
+            ("uprobe", E.KIND_ENTRY, "uprobe:site"),
+            ("uretprobe", E.KIND_EXIT, "uretprobe:site")):
+        # bpftime mode (in-graph)
+        rt = _make_runtime(target)
+        f = jax.jit(_probed_step_fn(rt, kind))
+        maps = rt.init_device_maps()
+        t_user = _timeit(f, x, maps, jnp.int64(0))
+        user_ns = (t_user - t_base) / N_EVENTS * 1e9
+        noise_ns = 0.02 * t_base / N_EVENTS * 1e9   # 2% of step ~= noise
+        if user_ns < noise_ns:
+            results.append((f"{label}_user", max(user_ns, 0.0),
+                            f"below step noise floor (~{noise_ns:.0f}ns); "
+                            "see embedding_runtime for the stage cost"))
+        else:
+            results.append((f"{label}_user", user_ns,
+                            "in-graph compiled probe (bpftime mode)"))
+
+        # kernel mode (host callback round-trip)
+        rt2 = _make_runtime(target)
+        g = jax.jit(_callback_step_fn(rt2, kind))
+        t_kern = _timeit(g, x, jnp.int64(0), iters=10)
+        kern_ns = max(t_kern - t_base, 0) / N_EVENTS * 1e9
+        results.append((f"{label}_kernel", kern_ns,
+                        "host-callback probe (kernel-uprobe analogue)"))
+
+    # syscall tracepoint: host-side hook around a framework syscall
+    rt3 = BpftimeRuntime()
+    sys_prog = COUNT_PROG.replace("ctx:layer", "ctx:arg0")
+    pid = rt3.load_asm("count", sys_prog, [ARR], "tracepoint")
+    rt3.attach(pid, "tracepoint:sys_log:enter")
+    iters = 2000
+    t0 = time.perf_counter()
+    for i in range(iters):
+        rt3.syscalls.invoke("sys_log", [i], impl=lambda: None)
+    t_hook = (time.perf_counter() - t0) / iters
+    t0 = time.perf_counter()
+    for i in range(iters):
+        pass
+    t_plain = (time.perf_counter() - t0) / iters
+    results.append(("syscall_tracepoint", (t_hook - t_plain) * 1e9,
+                    "host syscall hook (interpreter)"))
+
+    # embedding runtime: probe_stage alone over a ready tape
+    rt4 = _make_runtime("uprobe:site")
+    rows = np.zeros((N_EVENTS, E.EVENT_WIDTH), np.int64)
+    sid = E.SITES.get_or_create("site")
+    rows[:, 0] = sid
+    rows[:, 2] = np.arange(N_EVENTS)
+    rows = jnp.asarray(rows)
+
+    @jax.jit
+    def stage_only(rows, maps):
+        maps, _ = rt4.probe_stage(rows, maps, J.make_aux())
+        return maps
+
+    maps = rt4.init_device_maps()
+    t_stage = _timeit(stage_only, rows, maps)
+    results.append(("embedding_runtime", t_stage / N_EVENTS * 1e9,
+                    "probe_stage alone (per event)"))
+
+    # vectorized mode (beyond-paper TPU adaptation)
+    rt5 = _make_runtime("uprobe:site")
+
+    @jax.jit
+    def stage_vec(rows, maps):
+        maps, _ = rt5.probe_stage(rows, maps, J.make_aux(),
+                                  mode="vectorized")
+        return maps
+
+    t_vec = _timeit(stage_vec, rows, rt5.init_device_maps())
+    results.append(("embedding_runtime_vectorized", t_vec / N_EVENTS * 1e9,
+                    "batched probe stage (beyond-paper)"))
+    return results
+
+
+def main():
+    print("name,ns_per_event,notes")
+    for name, ns, note in run():
+        print(f"{name},{ns:.1f},{note}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""opensnoop analogue: trace framework syscalls (data fetches, checkpoint
+saves) with enter/exit tracepoints + a ring buffer, and FILTER some of them
+(syscall-hook override, paper C2).
+
+    PYTHONPATH=src python examples/opensnoop_syscalls.py
+"""
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.core import maps as M
+from repro.core.runtime import BpftimeRuntime
+from repro.ckpt import checkpoint as CK
+from repro.data.pipeline import SyntheticDataset
+from repro.train.train_step import init_train_state, make_train_step
+
+SNOOP = """
+    ldxdw r6, [r1+ctx:sys_id]
+    stxdw [r10-32], r6
+    ldxdw r6, [r1+ctx:arg0]
+    stxdw [r10-24], r6
+    ldxdw r6, [r1+ctx:ret]
+    stxdw [r10-16], r6
+    lddw r1, map:events
+    mov r2, r10
+    add r2, -32
+    mov r3, 24
+    mov r4, 0
+    call ringbuf_output
+    mov r0, 0
+    exit
+"""
+
+NO_CKPT_BEFORE_STEP5 = """
+    ldxdw r6, [r1+ctx:arg0]     ; step number
+    jge r6, 5, allow
+    mov r1, -13                 ; -EACCES
+    call override_return
+    allow:
+    mov r0, 0
+    exit
+"""
+
+rt = BpftimeRuntime()
+rb = M.MapSpec("events", M.MapKind.RINGBUF, max_entries=64, rec_width=3)
+pid = rt.load_asm("snoop", SNOOP, [rb], "tracepoint")
+rt.attach(pid, "tracepoint:sys_data_fetch:exit")
+rt.attach(pid, "tracepoint:sys_checkpoint_save:exit")
+flt = rt.load_asm("nockpt", NO_CKPT_BEFORE_STEP5, [], "filter")
+rt.attach(flt, "filter:sys_checkpoint_save")
+
+cfg = registry.smoke("mamba2-780m")
+tcfg = TrainConfig(warmup=2)
+state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg, rt)
+step = jax.jit(make_train_step(cfg, tcfg, rt))
+data = SyntheticDataset(cfg, ShapeConfig("o", 32, 4, "train"), tcfg,
+                        runtime=rt)
+
+ckpt_dir = tempfile.mkdtemp(prefix="opensnoop_ckpt_")
+for i in range(8):
+    state, m = step(state, data.next())
+    CK.save(ckpt_dir, int(state["step"]), state, runtime=rt)
+
+print(f"latest committed checkpoint: step {CK.latest(ckpt_dir)} "
+      "(steps 1-4 were vetoed by the filter)\n")
+
+from repro.core.syscalls import SYSCALL_IDS
+names = {v: k for k, v in SYSCALL_IDS.items()}
+recs, _ = M.n_ringbuf_drain(rt.host_maps["events"], 0)
+print(f"{'SYSCALL':24s} {'ARG0':>6s} {'RET':>5s}")
+for sid, arg0, ret in recs[-16:]:
+    print(f"{names.get(sid, sid):24s} {arg0:6d} {ret:5d}")

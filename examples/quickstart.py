@@ -1,0 +1,58 @@
+"""Quickstart: write an eBPF program, verify it, attach it to a model's
+probe sites, run a few training steps, read the maps.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.core import maps as M
+from repro.core.daemon import render_log2_hist
+from repro.core.runtime import BpftimeRuntime
+from repro.data.pipeline import SyntheticDataset
+from repro.train.train_step import init_train_state, make_train_step
+
+# 1. an eBPF program, in our assembler (the clang stand-in): count events
+#    per layer and histogram activation RMS — bcc-style, zero model changes
+PROG = """
+    mov r9, r1                    ; save ctx (calls clobber r1-r5)
+    ldxdw r6, [r1+ctx:layer]      ; CO-RE-lite ctx field relocation
+    stxdw [r10-8], r6
+    lddw r1, map:layer_hits       ; symbolic map reloc (libbpf-style)
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    ldxdw r2, [r9+ctx:rms]        ; Q47.16 fixed-point activation RMS
+    lddw r1, map:rms_hist
+    call hist_add
+    mov r0, 0
+    exit
+"""
+
+rt = BpftimeRuntime()
+pid = rt.load_asm(                      # load = relocate + VERIFY + jit
+    "quickstart", PROG,
+    maps=[M.MapSpec("layer_hits", M.MapKind.ARRAY, max_entries=64),
+          M.MapSpec("rms_hist", M.MapKind.LOG2HIST)])
+rt.attach(pid, "uprobe:block")          # fire on every block entry
+
+# 2. train a small model — the probe runs INSIDE the jitted step
+cfg = registry.smoke("llama3.2-1b")
+tcfg = TrainConfig(warmup=2)
+state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg, rt)
+step = jax.jit(make_train_step(cfg, tcfg, rt))
+data = SyntheticDataset(cfg, ShapeConfig("q", 64, 8, "train"), tcfg,
+                        runtime=rt)
+for i in range(5):
+    state, metrics = step(state, data.next())
+    print(f"step {i}: loss={float(metrics['loss']):.4f}")
+
+# 3. read the maps (still functional state — no host round-trips happened)
+hits = np.asarray(state["maps"]["layer_hits"]["values"])
+print(f"\nper-layer probe hits: {hits[:cfg.num_layers].tolist()}")
+print("\nactivation RMS histogram (bcc-style):")
+print(render_log2_hist(np.asarray(state["maps"]["rms_hist"]["bins"]),
+                       label="rms"))

@@ -1,0 +1,77 @@
+"""The paper's flagship scenario on a trainer: attach to a RUNNING training
+loop without restarting it (ptrace-injection analogue), stream metrics to a
+shared-memory control plane another process can watch live.
+
+    PYTHONPATH=src python examples/trace_training.py
+    # in another shell, while it runs:
+    PYTHONPATH=src python -m repro.core.daemon /tmp/bpftime_shm --once
+"""
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.core import loader, maps as M
+from repro.core.daemon import render_log2_hist, request_load_attach
+from repro.core.runtime import BpftimeRuntime
+from repro.core.shm import ShmRegion
+from repro.data.pipeline import SyntheticDataset
+from repro.train.train_step import init_train_state, make_train_step
+
+SHM = os.environ.get("BPFTIME_SHM", "/tmp/bpftime_shm")
+
+GRAD_WATCH = """
+    ldxdw r2, [r1+ctx:rms]
+    lddw r1, map:grad_hist
+    call hist_add
+    mov r0, 0
+    exit
+"""
+
+rt = BpftimeRuntime()
+rt.create_map(M.MapSpec("grad_hist", M.MapKind.LOG2HIST))
+rt.setup_shm(SHM)
+print(f"shm control plane at {SHM}")
+
+cfg = registry.smoke("qwen2-0.5b")
+tcfg = TrainConfig(warmup=2)
+state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg, rt)
+data = SyntheticDataset(cfg, ShapeConfig("t", 64, 8, "train"), tcfg,
+                        runtime=rt)
+
+jit_cache = {}
+def step_fn():
+    e = rt.attach_epoch
+    if e not in jit_cache:
+        jit_cache[e] = jax.jit(make_train_step(cfg, tcfg, rt))
+    return jit_cache[e]
+
+# --- steps 0-4: UNinstrumented (probe sites are nops)
+for i in range(5):
+    state, m = step_fn()(state, data.next())
+print(f"steps 0-4 uninstrumented: loss={float(m['loss']):.4f}, "
+      f"hist events={int(np.asarray(state['maps']['grad_hist']['bins']).sum())}")
+
+# --- a 'daemon' injects a grad-norm watcher into the RUNNING loop
+obj = loader.build_object(
+    "grad_watch", GRAD_WATCH,
+    [M.MapSpec("grad_hist", M.MapKind.LOG2HIST)],
+    prog_type="uprobe", attach_to="probe:grad.norm")
+other = ShmRegion.attach(SHM)
+request_load_attach(other, obj.to_json())
+
+applied = rt.poll_control()             # trainer picks it up between steps
+print(f"live-injected: {applied[0]['op']} (epoch {rt.attach_epoch}) — "
+      "training did NOT restart")
+
+# --- steps 5-14: instrumented; publish maps for the daemon each step
+for i in range(10):
+    state, m = step_fn()(state, data.next())
+    rt.publish(state["maps"])
+print(f"steps 5-14 instrumented: loss={float(m['loss']):.4f}")
+print("\ngradient-norm histogram (live in shm for the daemon):")
+print(render_log2_hist(np.asarray(state["maps"]["grad_hist"]["bins"]),
+                       label="grad_norm"))

@@ -1,0 +1,13 @@
+"""repro: bpftime-on-TPU — userspace-eBPF-style observability/control runtime
+for JAX training & serving, plus the surrounding production framework.
+
+x64 note: the probe VM is a faithful 64-bit eBPF subset, so 64-bit integer
+types must be real. We enable jax_enable_x64 globally and keep EVERY model
+dtype explicit (bf16/f32/i32) — a test asserts no f64 leaks into lowered
+step functions.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

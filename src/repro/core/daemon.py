@@ -1,0 +1,104 @@
+"""bpftime-daemon analogue: a separate monitor/control process that
+
+  * attaches to the shm region (no privileges over the trainer needed —
+    plain file permissions, paper SP4);
+  * reads live host maps and seqlocked device-map snapshots;
+  * renders bcc-style log2 histograms / counters;
+  * queues load+attach requests the trainer applies at the next step
+    boundary (injection-without-restart, paper C5).
+
+Usable as a library (tests) or CLI:
+    python -m repro.core.daemon <shm_dir> [--watch SECONDS] [--once]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from .maps import MapKind
+from .shm import ShmRegion
+
+
+def render_log2_hist(bins: np.ndarray, label: str = "value") -> str:
+    """bcc/bpftrace-style ASCII histogram (fixed-point Q47.16 bins)."""
+    total = int(bins.sum())
+    out = [f"{label:>16} : count    distribution"]
+    if total == 0:
+        return "\n".join(out + ["(empty)"])
+    top = int(bins.max())
+    nz = np.nonzero(bins)[0]
+    lo, hi = int(nz.min()), int(nz.max())
+    for b in range(lo, hi + 1):
+        c = int(bins[b])
+        bar = "*" * int(40 * c / top)
+        # bin k holds fx values with bit_length == k; fx = v * 2^16
+        lo_v = 0.0 if b == 0 else (1 << (b - 1)) / 65536.0
+        hi_v = (1 << b) / 65536.0
+        out.append(f"{lo_v:10.4g} -> {hi_v:<10.4g} : {c:<8d} |{bar}|")
+    return "\n".join(out)
+
+
+def summarize(shm: ShmRegion, section: str = "device") -> str:
+    lines = []
+    for spec in shm.specs:
+        st = (shm.snapshot_device(spec.name) if section == "device"
+              else {f: np.array(a) for f, a in shm.host[spec.name].items()})
+        if spec.kind == MapKind.LOG2HIST:
+            lines.append(f"[{spec.name}] log2 histogram:")
+            lines.append(render_log2_hist(st["bins"]))
+        elif spec.kind == MapKind.ARRAY:
+            nz = np.nonzero(st["values"])[0]
+            kv = {int(i): int(st["values"][i]) for i in nz[:16]}
+            lines.append(f"[{spec.name}] array: {kv}")
+        elif spec.kind == MapKind.HASH:
+            used = np.nonzero(st["used"])[0]
+            kv = {int(st['keys'][i]): int(st['values'][i]) for i in used[:16]}
+            lines.append(f"[{spec.name}] hash: {kv}")
+        elif spec.kind == MapKind.PERCPU_ARRAY:
+            tot = st["values"].sum(axis=0)
+            nz = np.nonzero(tot)[0]
+            lines.append(f"[{spec.name}] percpu (summed): "
+                         f"{ {int(i): int(tot[i]) for i in nz[:16]} }")
+        elif spec.kind == MapKind.RINGBUF:
+            lines.append(f"[{spec.name}] ringbuf head={int(st['head'][0])}")
+    return "\n".join(lines)
+
+
+def request_load_attach(shm: ShmRegion, obj_json: str,
+                        target: str | None = None) -> None:
+    shm.request({"op": "load_attach", "object": obj_json, "target": target})
+
+
+def request_detach(shm: ShmRegion, link_id: int) -> None:
+    shm.request({"op": "detach", "link_id": link_id})
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("shm_dir")
+    ap.add_argument("--watch", type=float, default=2.0)
+    ap.add_argument("--once", action="store_true")
+    ap.add_argument("--attach", help="path to a ProgramObject json to inject")
+    ap.add_argument("--target", help="attach target for --attach")
+    args = ap.parse_args(argv)
+
+    shm = ShmRegion.attach(args.shm_dir)
+    if args.attach:
+        with open(args.attach) as f:
+            request_load_attach(shm, f.read(), args.target)
+        print(f"queued load+attach of {args.attach}")
+        return
+    while True:
+        print(f"=== {time.strftime('%H:%M:%S')} "
+              f"programs: {list(shm.read_programs())}")
+        print(summarize(shm))
+        if args.once:
+            break
+        time.sleep(args.watch)
+
+
+if __name__ == "__main__":
+    main()

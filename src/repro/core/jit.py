@@ -1,0 +1,519 @@
+"""Bytecode -> JAX JIT: the LLVM-JIT analogue, emitting jnp ops that fuse
+into the enclosing XLA step function (the "inline in the target process"
+property that gives bpftime its 10x).
+
+Two tiers, selected by the verifier's CFG analysis:
+
+  T1 ("dag")  : programs whose CFG is acyclic are fully if-converted into
+                straight-line predicated dataflow. Registers/stack are merged
+                per-block with selects; map/aux side effects are gated by the
+                block's arrival predicate and threaded linearly (disjoint
+                predicates make the order across sibling branches
+                irrelevant). Zero control flow in the lowered HLO.
+  T2 ("loop") : programs with (fuel-bounded) loops become a
+                lax.while_loop over a basic-block dispatcher (lax.switch),
+                the classic JIT block-threading scheme.
+
+The verifier has already proven every memory access static and in-bounds, so
+codegen performs NO runtime checks — verify once, run fast (paper SP1).
+
+A third compiler, `compile_vectorized`, is the TPU-native beyond-paper path:
+for DAG programs whose side effects are all commutative (fetch-add family),
+events are executed as one batched tensor program (scatter-adds) instead of a
+sequential scan. See DESIGN.md §2 adaptation 1.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from . import isa, maps as M
+from .isa import (BPF_ALU, BPF_ALU64, BPF_JMP, BPF_JMP32, BPF_LDX, BPF_ST,
+                  BPF_STX, CTX_BASE, OP_MASK, SIZE_BYTES, SIZE_MASK, SRC_MASK,
+                  STACK_BASE, STACK_SIZE)
+from .verifier import CallAnn, MemAnn, VerifiedProgram
+
+I64 = jnp.int64
+U8 = jnp.uint8
+
+# helpers safe for the vectorized (batched-events) compiler: commutative
+# side effects only.
+VECTOR_SAFE_HELPERS = {1001, 1005, 1004, 5, 8, 14, 1002, 7, 6, 1003, 130}
+
+
+def make_aux(time_ns=0, cpu=0, pid=0, rand=0x12345678):
+    return {
+        "time_ns": jnp.asarray(time_ns, I64),
+        "cpu": jnp.asarray(cpu, I64),
+        "pid": jnp.asarray(pid, I64),
+        "rand": jnp.asarray(rand, I64),
+        "override_set": jnp.asarray(0, I64),
+        "override_val": jnp.asarray(0, I64),
+        "printk_buf": jnp.zeros((8, 2), I64),
+        "printk_n": jnp.asarray(0, I64),
+    }
+
+
+# --------------------------------------------------------------------------
+# shared scalar machinery
+# --------------------------------------------------------------------------
+
+def _u(x):  # bit-pattern reinterpret to unsigned for u64 compares/shifts
+    return x.astype(jnp.uint64)
+
+
+def _alu_jax(op: int, d, s, is64: bool):
+    """d, s: i64 traced. 32-bit ops work on the low 32 bits, zero-extend."""
+    if not is64:
+        d = jnp.bitwise_and(d, jnp.int64(0xFFFFFFFF))
+        s = jnp.bitwise_and(s, jnp.int64(0xFFFFFFFF))
+    bits = jnp.int64(63 if is64 else 31)
+    if op == isa.BPF_ADD:
+        r = d + s
+    elif op == isa.BPF_SUB:
+        r = d - s
+    elif op == isa.BPF_MUL:
+        r = d * s
+    elif op == isa.BPF_DIV:
+        r = jnp.where(s == 0, jnp.int64(0),
+                      (_u(d) // _u(jnp.where(s == 0, 1, s))).astype(I64))
+    elif op == isa.BPF_MOD:
+        r = jnp.where(s == 0, d,
+                      (_u(d) % _u(jnp.where(s == 0, 1, s))).astype(I64))
+    elif op == isa.BPF_OR:
+        r = d | s
+    elif op == isa.BPF_AND:
+        r = d & s
+    elif op == isa.BPF_XOR:
+        r = d ^ s
+    elif op == isa.BPF_LSH:
+        r = (_u(d) << _u(s & bits)).astype(I64)
+    elif op == isa.BPF_RSH:
+        r = (_u(d) >> _u(s & bits)).astype(I64)
+    elif op == isa.BPF_ARSH:
+        if is64:
+            r = d >> (s & bits)
+        else:
+            r = _s32_view(d) >> (s & bits)
+    elif op == isa.BPF_MOV:
+        r = s
+    elif op == isa.BPF_NEG:
+        r = -d
+    else:
+        raise AssertionError(f"alu op {op:#x}")
+    if not is64:
+        r = jnp.bitwise_and(r, jnp.int64(0xFFFFFFFF))
+    return r
+
+
+def _s32_view(x):
+    """low 32 bits of i64, sign-extended (as i64)."""
+    lo = jnp.bitwise_and(x, jnp.int64(0xFFFFFFFF))
+    return jnp.where(lo >> 31 != 0, lo - jnp.int64(1 << 32), lo)
+
+
+def _jmp_cond_jax(op: int, lhs, rhs, is64: bool):
+    if is64:
+        ul, ur = _u(lhs), _u(rhs)
+        sl, sr = lhs, rhs
+    else:
+        ul = _u(jnp.bitwise_and(lhs, jnp.int64(0xFFFFFFFF)))
+        ur = _u(jnp.bitwise_and(rhs, jnp.int64(0xFFFFFFFF)))
+        sl, sr = _s32_view(lhs), _s32_view(rhs)
+    if op == isa.BPF_JEQ:
+        return ul == ur
+    if op == isa.BPF_JNE:
+        return ul != ur
+    if op == isa.BPF_JGT:
+        return ul > ur
+    if op == isa.BPF_JGE:
+        return ul >= ur
+    if op == isa.BPF_JLT:
+        return ul < ur
+    if op == isa.BPF_JLE:
+        return ul <= ur
+    if op == isa.BPF_JSGT:
+        return sl > sr
+    if op == isa.BPF_JSGE:
+        return sl >= sr
+    if op == isa.BPF_JSLT:
+        return sl < sr
+    if op == isa.BPF_JSLE:
+        return sl <= sr
+    if op == isa.BPF_JSET:
+        return (ul & ur) != jnp.uint64(0)
+    raise AssertionError(f"jmp op {op:#x}")
+
+
+def _stack_load(stack, off: int, size: int):
+    """static-offset little-endian load, zero-extended to i64."""
+    b = stack[off:off + size].astype(I64)
+    out = jnp.int64(0)
+    for i in range(size):
+        out = out | (b[i] << (8 * i))
+    return out
+
+
+def _stack_store(stack, off: int, size: int, val):
+    lanes = [jnp.bitwise_and(val >> (8 * i), jnp.int64(0xFF)).astype(U8)
+             for i in range(size)]
+    return stack.at[off:off + size].set(jnp.stack(lanes))
+
+
+def _imm_src(ins, is64: bool):
+    if is64:
+        return jnp.int64(ins.imm)          # sign-extended s32 -> s64
+    return jnp.int64(ins.imm & 0xFFFFFFFF)
+
+
+@dataclass
+class _Machine:
+    regs: list          # 11 traced i64 scalars
+    stack: object       # u8[512]
+
+
+def _exec_straightline(vprog: VerifiedProgram, lo: int, hi: int, m: _Machine,
+                       maps_state, aux, pred, ctx, helper_cb=None):
+    """Execute insns [lo, hi) except a trailing terminator handled by caller.
+    Side effects gated by `pred` (traced bool scalar). helper_cb overrides
+    helper execution (used by the vectorized shadow pass)."""
+    helper_cb = helper_cb or _exec_helper
+    for pc in range(lo, hi):
+        ins = vprog.insns[pc]
+        cls = ins.cls
+        if ins.is_lddw():
+            m.regs[ins.dst] = jnp.int64(isa.s64(ins.imm64 or 0))
+        elif cls in (BPF_ALU64, BPF_ALU):
+            op = ins.op & OP_MASK
+            is64 = cls == BPF_ALU64
+            if op == isa.BPF_NEG:
+                m.regs[ins.dst] = _alu_jax(op, m.regs[ins.dst],
+                                           jnp.int64(0), is64)
+            else:
+                s = (m.regs[ins.src] if ins.op & SRC_MASK
+                     else _imm_src(ins, is64))
+                m.regs[ins.dst] = _alu_jax(op, m.regs[ins.dst], s, is64)
+        elif cls == BPF_LDX:
+            ann: MemAnn = vprog.anns[pc]
+            size = SIZE_BYTES[ins.op & SIZE_MASK]
+            if ann.region == "stack":
+                m.regs[ins.dst] = _stack_load(m.stack, ann.off, size)
+            else:  # ctx — i64 word array, static offset
+                word, rem = divmod(ann.off, 8)
+                v = ctx[word]
+                if rem or size != 8:
+                    v = (v >> (8 * rem))
+                    if size < 8:
+                        v = jnp.bitwise_and(
+                            v, jnp.int64((1 << (8 * size)) - 1))
+                m.regs[ins.dst] = v
+        elif cls in (BPF_STX, BPF_ST):
+            ann = vprog.anns[pc]
+            size = SIZE_BYTES[ins.op & SIZE_MASK]
+            # ST: imm sign-extended, low `size` bytes written (oracle parity)
+            val = m.regs[ins.src] if cls == BPF_STX else jnp.int64(ins.imm)
+            m.stack = _stack_store(m.stack, ann.off, size, val)
+        elif cls in (BPF_JMP, BPF_JMP32) and (ins.op & OP_MASK) == isa.BPF_CALL:
+            ann = vprog.anns[pc]
+            r0, maps_state, aux = helper_cb(vprog, ann, m, maps_state,
+                                            aux, pred)
+            m.regs[0] = r0
+            for r in range(1, 6):
+                m.regs[r] = jnp.int64(0)
+        else:
+            raise AssertionError(f"terminator {pc} inside straight-line run")
+    return m, maps_state, aux
+
+
+def _neg7():
+    return jnp.int64(-7)
+
+
+def _exec_helper(vprog, ann: CallAnn, m: _Machine, maps_state, aux, pred):
+    name, st_args = ann.name, ann.statics
+    specs = vprog.map_specs
+
+    def load_key(off):
+        return _stack_load(m.stack, off, 8)
+
+    zero = jnp.int64(0)
+
+    if name == "map_lookup_elem":
+        fd, koff = st_args
+        sp = specs[fd]
+        key = load_key(koff)
+        mstate = maps_state[sp.name]
+        if sp.kind == M.MapKind.ARRAY:
+            r0 = M.j_array_lookup(mstate, key, pred)
+        elif sp.kind == M.MapKind.PERCPU_ARRAY:
+            r0 = M.j_percpu_lookup(mstate, aux["cpu"], key, pred)
+        else:
+            r0 = M.j_hash_lookup(mstate, key, pred)
+        return r0, maps_state, aux
+
+    if name == "map_update_elem":
+        fd, koff, voff, _ = st_args
+        sp = specs[fd]
+        key, val = load_key(koff), load_key(voff)
+        mstate = maps_state[sp.name]
+        if sp.kind == M.MapKind.ARRAY:
+            new = M.j_array_update(mstate, key, val, pred)
+            r0 = zero
+        else:
+            new, ok = M.j_hash_update(mstate, key, val, pred)
+            r0 = jnp.where(ok, zero, _neg7())
+        return r0, {**maps_state, sp.name: new}, aux
+
+    if name == "map_delete_elem":
+        fd, koff = st_args
+        sp = specs[fd]
+        new, found = M.j_hash_delete(maps_state[sp.name], load_key(koff), pred)
+        r0 = jnp.where(found, zero, jnp.int64(-2))
+        return r0, {**maps_state, sp.name: new}, aux
+
+    if name == "map_fetch_add":
+        fd, koff, _ = st_args
+        sp = specs[fd]
+        key, delta = load_key(koff), m.regs[3]
+        mstate = maps_state[sp.name]
+        if sp.kind == M.MapKind.ARRAY:
+            new, old = M.j_array_fetch_add(mstate, key, delta, pred)
+        else:
+            new, old = M.j_hash_fetch_add(mstate, key, delta, pred)
+        return old, {**maps_state, sp.name: new}, aux
+
+    if name == "percpu_fetch_add":
+        fd, koff, _ = st_args
+        sp = specs[fd]
+        new, old = M.j_percpu_fetch_add(maps_state[sp.name], aux["cpu"],
+                                        load_key(koff), m.regs[3], pred)
+        return old, {**maps_state, sp.name: new}, aux
+
+    if name == "hist_add":
+        fd, _ = st_args
+        sp = specs[fd]
+        new = M.j_hist_add(maps_state[sp.name], m.regs[2], pred)
+        return zero, {**maps_state, sp.name: new}, aux
+
+    if name == "ringbuf_output":
+        fd, doff, size, _ = st_args
+        sp = specs[fd]
+        rec = [_stack_load(m.stack, doff + 8 * i, 8) for i in range(size // 8)]
+        rec += [zero] * (sp.rec_width - len(rec))
+        new = M.j_ringbuf_emit(maps_state[sp.name], jnp.stack(rec), pred)
+        return zero, {**maps_state, sp.name: new}, aux
+
+    if name == "ktime_get_ns":
+        return aux["time_ns"], maps_state, aux
+    if name == "get_smp_processor_id":
+        return aux["cpu"], maps_state, aux
+    if name == "get_current_pid_tgid":
+        return aux["pid"], maps_state, aux
+    if name == "log2":
+        return M.jnp_log2_bin(m.regs[1]).astype(I64), maps_state, aux
+    if name == "get_prandom_u32":
+        x = jnp.bitwise_and(aux["rand"], jnp.int64(0xFFFFFFFF))
+        x = jnp.where(x == 0, jnp.int64(1), x)
+        x = jnp.bitwise_and(x ^ (x << 13), jnp.int64(0xFFFFFFFF))
+        x = x ^ (x >> 17)
+        x = jnp.bitwise_and(x ^ (x << 5), jnp.int64(0xFFFFFFFF))
+        new_rand = jnp.where(pred, x, aux["rand"])
+        return jnp.where(pred, x, jnp.int64(0)), maps_state, \
+            {**aux, "rand": new_rand}
+    if name == "trace_printk":
+        slot = jnp.clip(aux["printk_n"], 0, 7).astype(jnp.int32)
+        row = jnp.stack([m.regs[1], m.regs[2]])
+        buf = aux["printk_buf"].at[slot].set(
+            jnp.where(pred, row, aux["printk_buf"][slot]))
+        n = aux["printk_n"] + jnp.where(pred, jnp.int64(1), jnp.int64(0))
+        return zero, maps_state, {**aux, "printk_buf": buf, "printk_n": n}
+    if name == "override_return":
+        ov_s = jnp.where(pred, jnp.int64(1), aux["override_set"])
+        ov_v = jnp.where(pred, m.regs[1], aux["override_val"])
+        return zero, maps_state, {**aux, "override_set": ov_s,
+                                  "override_val": ov_v}
+    raise AssertionError(f"helper {name} not implemented in JIT")
+
+
+# --------------------------------------------------------------------------
+# Tier 1: DAG if-conversion
+# --------------------------------------------------------------------------
+
+def _topo_order(vprog: VerifiedProgram) -> list[int]:
+    """Kahn's algorithm from the entry block; unreachable blocks excluded."""
+    from collections import deque
+    n = len(vprog.blocks)
+    indeg = [0] * n
+    for b in vprog.blocks:
+        for s in b.succ:
+            indeg[s] += 1
+    dq = deque([0])
+    seen = {0}
+    out: list[int] = []
+    while dq:
+        u = dq.popleft()
+        out.append(u)
+        for s in vprog.blocks[u].succ:
+            indeg[s] -= 1
+            if indeg[s] <= 0 and s not in seen:
+                seen.add(s)
+                dq.append(s)
+    return out
+
+
+def compile_t1(vprog: VerifiedProgram, helper_cb=None):
+    assert vprog.tier == "dag"
+    order = _topo_order(vprog)
+
+    def run(ctx, maps_state, aux):
+        """ctx: i64[ctx_words]; returns (r0, maps_state, aux)."""
+        regs0 = [jnp.int64(0)] * 11
+        regs0[isa.R1] = jnp.int64(CTX_BASE)
+        regs0[isa.R10] = jnp.int64(STACK_BASE + STACK_SIZE)
+        entry = (jnp.asarray(True), regs0, jnp.zeros((STACK_SIZE,), U8))
+        incoming: dict[int, tuple] = {0: entry}
+        exits = []  # (pred, r0)
+
+        for bid in order:
+            if bid not in incoming:
+                continue
+            pred, regs, stack = incoming[bid]
+            m = _Machine(list(regs), stack)
+            blk = vprog.blocks[bid]
+            term_pc = blk.end - 1
+            body_hi = blk.end if blk.term == "fall" else term_pc
+            m, maps_state, aux = _exec_straightline(
+                vprog, blk.start, body_hi, m, maps_state, aux, pred, ctx,
+                helper_cb)
+
+            def send(tgt: int, p, mm):
+                if tgt in incoming:
+                    p0, r0s, st0 = incoming[tgt]
+                    merged_regs = [jnp.where(p, a, b)
+                                   for a, b in zip(mm.regs, r0s)]
+                    merged_stack = jnp.where(p, mm.stack, st0)
+                    incoming[tgt] = (p0 | p, merged_regs, merged_stack)
+                else:
+                    incoming[tgt] = (p, list(mm.regs), mm.stack)
+
+            if blk.term == "fall":
+                send(blk.succ[0], pred, m)
+            elif blk.term == "ja":
+                send(blk.succ[0], pred, m)
+            elif blk.term == "exit":
+                exits.append((pred, m.regs[0]))
+            else:  # cond
+                ins = vprog.insns[term_pc]
+                is64 = ins.cls == BPF_JMP
+                lhs = m.regs[ins.dst]
+                rhs = (m.regs[ins.src] if ins.op & SRC_MASK
+                       else _imm_src(ins, is64))
+                c = _jmp_cond_jax(ins.op & OP_MASK, lhs, rhs, is64)
+                send(blk.succ[0], pred & c, m)
+                send(blk.succ[1], pred & ~c, m)
+
+        r0 = jnp.int64(0)
+        for p, v in exits:
+            r0 = jnp.where(p, v, r0)
+        return r0, maps_state, aux
+
+    return run
+
+
+# --------------------------------------------------------------------------
+# Tier 2: while_loop block dispatcher
+# --------------------------------------------------------------------------
+
+def compile_t2(vprog: VerifiedProgram):
+    nblocks = len(vprog.blocks)
+    true_ = None  # placeholder
+
+    def block_fn(bid: int):
+        blk = vprog.blocks[bid]
+        term_pc = blk.end - 1
+        body_hi = blk.end if blk.term == "fall" else term_pc
+
+        def f(carry):
+            regs_arr, stack, maps_state, aux, r0, _bid = carry
+            m = _Machine([regs_arr[i] for i in range(11)], stack)
+            pred = jnp.asarray(True)
+            m, maps_state2, aux2 = _exec_straightline(
+                vprog, blk.start, body_hi, m, maps_state, aux, pred, f.ctx)
+            if blk.term == "exit":
+                nxt = jnp.int32(nblocks)           # sentinel: done
+                r0n = m.regs[0]
+            elif blk.term in ("ja", "fall"):
+                nxt = jnp.int32(blk.succ[0])
+                r0n = r0
+            else:
+                ins = vprog.insns[term_pc]
+                is64 = ins.cls == BPF_JMP
+                lhs = m.regs[ins.dst]
+                rhs = (m.regs[ins.src] if ins.op & SRC_MASK
+                       else _imm_src(ins, is64))
+                c = _jmp_cond_jax(ins.op & OP_MASK, lhs, rhs, is64)
+                nxt = jnp.where(c, jnp.int32(blk.succ[0]),
+                                jnp.int32(blk.succ[1]))
+                r0n = r0
+            return (jnp.stack(m.regs), m.stack, maps_state2, aux2, r0n, nxt)
+
+        return f
+
+    fns = [block_fn(b) for b in range(nblocks)]
+
+    def run(ctx, maps_state, aux):
+        for f in fns:
+            f.ctx = ctx  # bind ctx for this trace
+
+        regs0 = jnp.zeros((11,), I64)
+        regs0 = regs0.at[isa.R1].set(jnp.int64(CTX_BASE))
+        regs0 = regs0.at[isa.R10].set(jnp.int64(STACK_BASE + STACK_SIZE))
+        stack0 = jnp.zeros((STACK_SIZE,), U8)
+
+        def cond(state):
+            carry, fuel = state
+            return (carry[5] < nblocks) & (fuel > 0)
+
+        def body(state):
+            carry, fuel = state
+            bid = carry[5]
+            new_carry = jax.lax.switch(jnp.clip(bid, 0, nblocks - 1),
+                                       fns, carry)
+            return new_carry, fuel - 1
+
+        init = ((regs0, stack0, maps_state, aux, jnp.int64(0), jnp.int32(0)),
+                jnp.int32(vprog.max_insns))
+        (carry, _fuel) = jax.lax.while_loop(cond, body, init)
+        _regs, _stack, maps_out, aux_out, r0, _bid = carry
+        return r0, maps_out, aux_out
+
+    return run
+
+
+def compile_program(vprog: VerifiedProgram):
+    """Scalar probe function: (ctx i64[W], maps, aux) -> (r0, maps, aux)."""
+    return compile_t1(vprog) if vprog.tier == "dag" else compile_t2(vprog)
+
+
+def run_over_events(vprog: VerifiedProgram, ctxs, valid, maps_state, aux):
+    """Sequentially-consistent batched execution: lax.scan the compiled
+    program over event rows. ctxs: i64[B, W]; valid: bool[B]."""
+    prog = compile_program(vprog)
+
+    def step(carry, xs):
+        maps_state, aux = carry
+        ctx, ok = xs
+        # gate: invalid rows are no-ops. T1 gating via entry pred would be
+        # cheaper but T2 has no pred; use a state-select for uniformity.
+        r0, maps2, aux2 = prog(ctx, maps_state, aux)
+        sel = lambda a, b: jnp.where(ok, a, b)
+        maps3 = jax.tree.map(sel, maps2, maps_state)
+        aux3 = jax.tree.map(sel, aux2, aux)
+        return (maps3, aux3), r0
+
+    (maps_out, aux_out), r0s = jax.lax.scan(step, (maps_state, aux),
+                                            (ctxs, valid))
+    return r0s, maps_out, aux_out

@@ -1,0 +1,360 @@
+"""eBPF maps, bpftime-style: shared state between probe programs, the host
+control plane, and (here) the compiled XLA step function.
+
+Each map kind has two twin implementations with IDENTICAL semantics:
+  * jnp ops (predicated, functional) — used by the bytecode->JAX JIT so map
+    updates fuse into the step graph;
+  * numpy ops (in-place) — used by the reference interpreter (the "ubpf"
+    oracle), by host-side ("kernel-mode") probes, and by the shm daemon.
+
+Kinds (subset of Linux's bpf_map_type):
+  ARRAY         values i64[N], key = index
+  HASH          fixed-capacity open-addressing (linear probe), i64 key/value
+  PERCPU_ARRAY  values i64[S, N], one row per device shard
+  LOG2HIST      64 power-of-two latency-style bins (bcc's log2 histogram)
+  RINGBUF       i64[cap, width] records + monotonic head + dropped counter
+
+Values are 64-bit integers, faithful to eBPF's word size. map_lookup returns
+the value (not a pointer) — see DESIGN.md §7 deviation 2.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_HASH_MULT = 0x9E3779B97F4A7C15  # splitmix64 golden-ratio constant
+_U64 = (1 << 64) - 1
+
+
+class MapKind(enum.Enum):
+    ARRAY = "array"
+    HASH = "hash"
+    PERCPU_ARRAY = "percpu_array"
+    LOG2HIST = "log2hist"
+    RINGBUF = "ringbuf"
+
+
+@dataclass(frozen=True)
+class MapSpec:
+    name: str
+    kind: MapKind
+    max_entries: int = 64
+    # RINGBUF record width in i64 lanes; PERCPU shard count.
+    rec_width: int = 4
+    num_shards: int = 1
+    flags: dict = field(default_factory=dict)
+
+    def validate(self) -> None:
+        if self.max_entries <= 0:
+            raise ValueError(f"map {self.name}: max_entries must be > 0")
+        if self.kind == MapKind.RINGBUF and self.rec_width <= 0:
+            raise ValueError(f"map {self.name}: rec_width must be > 0")
+
+
+# --------------------------------------------------------------------------
+# state construction
+# --------------------------------------------------------------------------
+
+def _zeros(shape, np_mod):
+    return np_mod.zeros(shape, dtype=np_mod.int64)
+
+
+def init_state(spec: MapSpec, np_mod=jnp):
+    """Build the (j)np pytree for one map."""
+    n = spec.max_entries
+    if spec.kind == MapKind.ARRAY:
+        return {"values": _zeros((n,), np_mod)}
+    if spec.kind == MapKind.HASH:
+        return {"keys": _zeros((n,), np_mod),
+                "used": _zeros((n,), np_mod),
+                "values": _zeros((n,), np_mod)}
+    if spec.kind == MapKind.PERCPU_ARRAY:
+        return {"values": _zeros((spec.num_shards, n), np_mod)}
+    if spec.kind == MapKind.LOG2HIST:
+        return {"bins": _zeros((64,), np_mod)}
+    if spec.kind == MapKind.RINGBUF:
+        return {"data": _zeros((n, spec.rec_width), np_mod),
+                "head": _zeros((1,), np_mod),
+                "dropped": _zeros((1,), np_mod)}
+    raise ValueError(spec.kind)
+
+
+def init_states(specs: list[MapSpec], np_mod=jnp) -> dict:
+    for s in specs:
+        s.validate()
+    return {s.name: init_state(s, np_mod) for s in specs}
+
+
+def state_nbytes(specs: list[MapSpec]) -> int:
+    st = init_states(specs, np)
+    return sum(a.nbytes for m in st.values() for a in m.values())
+
+
+# --------------------------------------------------------------------------
+# shared helpers
+# --------------------------------------------------------------------------
+
+def _np_hash_idx(key: int, n: int) -> int:
+    h = (int(key) * _HASH_MULT) & _U64
+    return int((h >> 33) % n)
+
+
+def _jnp_hash_idx(key, n: int):
+    h = key.astype(jnp.uint64) * jnp.uint64(_HASH_MULT)
+    return (h >> jnp.uint64(33)) % jnp.uint64(n)
+
+
+def np_log2_bin(v: int) -> int:
+    v = int(v)
+    if v <= 0:
+        return 0
+    return min(63, v.bit_length())
+
+
+_POW2 = np.array([1 << k for k in range(63)], dtype=np.int64)
+
+
+def jnp_log2_bin(v):
+    return jnp.where(v <= 0, 0,
+                     jnp.minimum(63, jnp.sum((v >= _POW2).astype(jnp.int32))))
+
+
+# --------------------------------------------------------------------------
+# JAX ops (functional, predicated). `pred` gates the side effect so the JIT
+# can if-convert branches; lookups return 0 when not found / out of bounds.
+# All take and return the per-map pytree.
+# --------------------------------------------------------------------------
+
+def _as_i64(x):
+    return jnp.asarray(x, dtype=jnp.int64)
+
+
+def j_array_lookup(st, key, pred):
+    n = st["values"].shape[0]
+    idx = jnp.clip(key, 0, n - 1).astype(jnp.int32)
+    ok = pred & (key >= 0) & (key < n)
+    return jnp.where(ok, st["values"][idx], jnp.int64(0))
+
+
+def j_array_update(st, key, value, pred):
+    n = st["values"].shape[0]
+    idx = jnp.clip(key, 0, n - 1).astype(jnp.int32)
+    ok = pred & (key >= 0) & (key < n)
+    new = st["values"].at[idx].set(jnp.where(ok, value, st["values"][idx]))
+    return {"values": new}
+
+
+def j_array_fetch_add(st, key, delta, pred):
+    n = st["values"].shape[0]
+    idx = jnp.clip(key, 0, n - 1).astype(jnp.int32)
+    ok = pred & (key >= 0) & (key < n)
+    old = jnp.where(ok, st["values"][idx], jnp.int64(0))
+    new = st["values"].at[idx].add(jnp.where(ok, delta, jnp.int64(0)))
+    return {"values": new}, old
+
+
+def j_percpu_lookup(st, shard, key, pred):
+    s, n = st["values"].shape
+    idx = jnp.clip(key, 0, n - 1).astype(jnp.int32)
+    sh = jnp.clip(shard, 0, s - 1).astype(jnp.int32)
+    ok = pred & (key >= 0) & (key < n)
+    return jnp.where(ok, st["values"][sh, idx], jnp.int64(0))
+
+
+def j_percpu_fetch_add(st, shard, key, delta, pred):
+    s, n = st["values"].shape
+    idx = jnp.clip(key, 0, n - 1).astype(jnp.int32)
+    sh = jnp.clip(shard, 0, s - 1).astype(jnp.int32)
+    ok = pred & (key >= 0) & (key < n)
+    old = jnp.where(ok, st["values"][sh, idx], jnp.int64(0))
+    new = st["values"].at[sh, idx].add(jnp.where(ok, delta, jnp.int64(0)))
+    return {"values": new}, old
+
+
+def _j_hash_find(st, key):
+    """Return (slot, found, free_slot, has_free) via full linear probe.
+
+    Scans the whole table from the hash position — identical to the numpy
+    twin. Vectorized (no data-dependent loop) so it is vmap/scan friendly:
+    capacity is small (probe maps, not model state).
+    """
+    n = st["keys"].shape[0]
+    start = _jnp_hash_idx(_as_i64(key), n).astype(jnp.int32)
+    order = (start + jnp.arange(n, dtype=jnp.int32)) % n          # probe seq
+    used = st["used"][order] != 0
+    match = used & (st["keys"][order] == key)
+    free = ~used
+    # first index in probe order where match / free occurs
+    big = jnp.int32(n)
+    first_match = jnp.min(jnp.where(match, jnp.arange(n, dtype=jnp.int32), big))
+    first_free = jnp.min(jnp.where(free, jnp.arange(n, dtype=jnp.int32), big))
+    found = first_match < big
+    has_free = first_free < big
+    # an empty slot BEFORE the first match terminates probing in the numpy
+    # twin; replicate: a match only counts if it occurs before the first free
+    found = found & (first_match < jnp.where(has_free, first_free, big))
+    slot = order[jnp.clip(first_match, 0, n - 1)]
+    free_slot = order[jnp.clip(first_free, 0, n - 1)]
+    return slot, found, free_slot, has_free
+
+
+def j_hash_lookup(st, key, pred):
+    slot, found, _, _ = _j_hash_find(st, key)
+    ok = pred & found
+    return jnp.where(ok, st["values"][slot], jnp.int64(0))
+
+
+def j_hash_update(st, key, value, pred):
+    slot, found, free_slot, has_free = _j_hash_find(st, key)
+    tgt = jnp.where(found, slot, free_slot)
+    ok = pred & (found | has_free)
+    keys = st["keys"].at[tgt].set(jnp.where(ok, key, st["keys"][tgt]))
+    used = st["used"].at[tgt].set(jnp.where(ok, jnp.int64(1), st["used"][tgt]))
+    vals = st["values"].at[tgt].set(jnp.where(ok, value, st["values"][tgt]))
+    return {"keys": keys, "used": used, "values": vals}, (found | has_free)
+
+
+def j_hash_fetch_add(st, key, delta, pred):
+    slot, found, free_slot, has_free = _j_hash_find(st, key)
+    tgt = jnp.where(found, slot, free_slot)
+    ok = pred & (found | has_free)
+    old = jnp.where(pred & found, st["values"][slot], jnp.int64(0))
+    newv = jnp.where(found, st["values"][slot] + delta, delta)
+    keys = st["keys"].at[tgt].set(jnp.where(ok, key, st["keys"][tgt]))
+    used = st["used"].at[tgt].set(jnp.where(ok, jnp.int64(1), st["used"][tgt]))
+    vals = st["values"].at[tgt].set(jnp.where(ok, newv, st["values"][tgt]))
+    return {"keys": keys, "used": used, "values": vals}, old
+
+
+def j_hash_delete(st, key, pred):
+    # tombstone-free delete: mark unused (probe chains may break for keys
+    # inserted past this slot — same limitation in the numpy twin, tested).
+    slot, found, _, _ = _j_hash_find(st, key)
+    ok = pred & found
+    used = st["used"].at[slot].set(jnp.where(ok, jnp.int64(0), st["used"][slot]))
+    return {"keys": st["keys"], "used": used, "values": st["values"]}, found
+
+
+def j_hist_add(st, value, pred):
+    b = jnp_log2_bin(_as_i64(value))
+    bins = st["bins"].at[b].add(jnp.where(pred, jnp.int64(1), jnp.int64(0)))
+    return {"bins": bins}
+
+
+def j_ringbuf_emit(st, record, pred):
+    """record: i64[width]. Overwrite mode (head always advances when pred)."""
+    cap = st["data"].shape[0]
+    head = st["head"][0]
+    slot = (head % cap).astype(jnp.int32)
+    row = jnp.where(pred, record, st["data"][slot])
+    data = st["data"].at[slot].set(row)
+    head2 = st["head"].at[0].add(jnp.where(pred, jnp.int64(1), jnp.int64(0)))
+    return {"data": data, "head": head2, "dropped": st["dropped"]}
+
+
+# --------------------------------------------------------------------------
+# numpy twins (in-place) — oracle + host-side maps
+# --------------------------------------------------------------------------
+
+def n_array_lookup(st, key):
+    n = st["values"].shape[0]
+    return int(st["values"][key]) if 0 <= key < n else 0
+
+
+def n_array_update(st, key, value):
+    n = st["values"].shape[0]
+    if 0 <= key < n:
+        st["values"][key] = _to_i64(value)
+
+
+def n_array_fetch_add(st, key, delta):
+    n = st["values"].shape[0]
+    if not 0 <= key < n:
+        return 0
+    old = int(st["values"][key])
+    st["values"][key] = _to_i64((old + delta))
+    return old
+
+
+def _to_i64(v: int):
+    v &= _U64
+    return np.int64(v - (1 << 64)) if v >> 63 else np.int64(v)
+
+
+def _n_hash_find(st, key):
+    n = st["keys"].shape[0]
+    start = _np_hash_idx(key, n)
+    for j in range(n):
+        i = (start + j) % n
+        if not st["used"][i]:
+            return None, i          # (no match before first free), free slot
+        if int(st["keys"][i]) == _s64(key):
+            return i, None
+    return None, None
+
+
+def _s64(v: int) -> int:
+    v &= _U64
+    return v - (1 << 64) if v >> 63 else v
+
+
+def n_hash_lookup(st, key):
+    slot, _ = _n_hash_find(st, key)
+    return int(st["values"][slot]) if slot is not None else 0
+
+
+def n_hash_update(st, key, value):
+    slot, free = _n_hash_find(st, key)
+    tgt = slot if slot is not None else free
+    if tgt is None:
+        return False
+    st["keys"][tgt] = _to_i64(key)
+    st["used"][tgt] = 1
+    st["values"][tgt] = _to_i64(value)
+    return True
+
+
+def n_hash_fetch_add(st, key, delta):
+    slot, free = _n_hash_find(st, key)
+    if slot is not None:
+        old = int(st["values"][slot])
+        st["values"][slot] = _to_i64(old + delta)
+        return old
+    if free is not None:
+        st["keys"][free] = _to_i64(key)
+        st["used"][free] = 1
+        st["values"][free] = _to_i64(delta)
+    return 0
+
+
+def n_hash_delete(st, key):
+    slot, _ = _n_hash_find(st, key)
+    if slot is None:
+        return False
+    st["used"][slot] = 0
+    return True
+
+
+def n_hist_add(st, value):
+    st["bins"][np_log2_bin(value)] += 1
+
+
+def n_ringbuf_emit(st, record):
+    cap = st["data"].shape[0]
+    slot = int(st["head"][0]) % cap
+    st["data"][slot, :len(record)] = [_to_i64(x) for x in record]
+    st["head"][0] += 1
+
+
+def n_ringbuf_drain(st, last_read: int) -> tuple[list[list[int]], int]:
+    """Read records in [last_read, head); returns (records, new_cursor).
+    Skips overwritten records (reports via dropped semantics)."""
+    cap = st["data"].shape[0]
+    head = int(st["head"][0])
+    lo = max(last_read, head - cap)
+    out = [list(map(int, st["data"][i % cap])) for i in range(lo, head)]
+    return out, head

@@ -1,0 +1,226 @@
+"""BpftimeRuntime — the runtime manager (bpftime's agent + syscall-compat
+library rolled into one).
+
+Responsibilities:
+  * global map registry (create/bind by name — objects share maps by name);
+  * program load: relocate (CO-RE-lite) -> verify -> store;
+  * attachments:
+      device:  uprobe:SITE / uretprobe:SITE / probe:SITE   (in-graph)
+      host:    tracepoint:SYS:enter|exit / filter:SYS      (interpreter)
+  * the per-step probe-execution stage (compiled into the train/serve step);
+  * attach/detach WITHOUT restart: every device change bumps `attach_epoch`;
+    the training loop re-jits its step on epoch change and carries state
+    over — the ptrace-pause analogue;
+  * shm control plane: publish device maps, poll daemon attach requests.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import events as E, jit as J, loader, maps as M, syscalls as S, vm
+from .loader import ProgramObject
+from .maps import MapSpec
+from .verifier import VerifiedProgram, verify
+
+
+@dataclass
+class LoadedProg:
+    pid: int
+    name: str
+    prog_type: str
+    insns: list
+    vprog: VerifiedProgram
+
+
+@dataclass
+class Link:
+    link_id: int
+    pid: int
+    target: str
+
+
+class BpftimeRuntime:
+    def __init__(self, pid: int = 0):
+        self.map_specs: list[MapSpec] = []
+        self.fd_of: dict[str, int] = {}
+        self.progs: dict[int, LoadedProg] = {}
+        self._next_pid = itertools.count(1)
+        self._next_link = itertools.count(1)
+        self.links: dict[int, Link] = {}
+        # device attachments: (site_id, kind) -> [pid]
+        self.device_attach: dict[tuple[int, int], list[int]] = {}
+        self.attach_epoch = 0
+        # host side
+        self.host_maps: dict = {}
+        self.syscalls = S.SyscallTable(self.host_maps, self.map_specs,
+                                       pid=pid)
+        self.shm = None
+        self._req_cursor = 0
+        self._objects: dict[str, str] = {}   # name -> serialized object
+        self.exec_mode = "scan"      # 'scan' | 'vectorized' (perf path)
+
+    # ---------------------------------------------------------------- maps
+    def create_map(self, spec: MapSpec) -> int:
+        if spec.name in self.fd_of:
+            old = self.map_specs[self.fd_of[spec.name]]
+            if (old.kind, old.max_entries, old.rec_width, old.num_shards) != \
+               (spec.kind, spec.max_entries, spec.rec_width, spec.num_shards):
+                raise loader.LoadError(
+                    f"map {spec.name!r} redeclared with incompatible spec")
+            return self.fd_of[spec.name]
+        fd = len(self.map_specs)
+        self.map_specs.append(spec)
+        self.fd_of[spec.name] = fd
+        self.host_maps[spec.name] = M.init_state(spec, np)
+        return fd
+
+    def init_device_maps(self) -> dict:
+        return M.init_states(self.map_specs, jnp)
+
+    # ---------------------------------------------------------------- load
+    def load_object(self, obj: ProgramObject) -> int:
+        for spec in obj.map_specs():
+            self.create_map(spec)
+        insns = loader.relocate(obj, self.fd_of)
+        vprog = verify(insns, self.map_specs, ctx_words=obj.ctx_words)
+        pid = next(self._next_pid)
+        self.progs[pid] = LoadedProg(pid, obj.name, obj.prog_type, insns,
+                                     vprog)
+        self._objects[obj.name] = obj.to_json()
+        if self.shm is not None:
+            self.shm.publish_program(obj.to_json(), obj.name)
+        return pid
+
+    def load_asm(self, name: str, text: str, maps: list[MapSpec] = (),
+                 prog_type: str = "uprobe", ctx_words: int = 16) -> int:
+        obj = loader.build_object(name, text, list(maps), prog_type,
+                                  ctx_words=ctx_words)
+        return self.load_object(obj)
+
+    # ---------------------------------------------------------------- attach
+    def attach(self, pid: int, target: str) -> int:
+        """target: uprobe:SITE | uretprobe:SITE | probe:SITE |
+        tracepoint:SYS:enter|exit | filter:SYS"""
+        prog = self.progs[pid]
+        parts = target.split(":")
+        kind = parts[0]
+        if kind in ("uprobe", "uretprobe", "probe"):
+            site = parts[1]
+            ev_kind = {"uprobe": E.KIND_ENTRY, "uretprobe": E.KIND_EXIT,
+                       "probe": E.KIND_TRACEPOINT}[kind]
+            sid = E.SITES.get_or_create(site)
+            self.device_attach.setdefault((sid, ev_kind), []).append(pid)
+            self.attach_epoch += 1
+        elif kind == "tracepoint":
+            sys_name, phase = parts[1], parts[2]
+            self.syscalls.attach(sys_name, phase, prog.name, prog.insns,
+                                 self.map_specs)
+        elif kind == "filter":
+            sys_name = parts[1]
+            self.syscalls.attach(sys_name, "enter", prog.name, prog.insns,
+                                 self.map_specs)
+        else:
+            raise ValueError(f"bad attach target {target!r}")
+        lid = next(self._next_link)
+        self.links[lid] = Link(lid, pid, target)
+        return lid
+
+    def detach(self, link_id: int) -> None:
+        link = self.links.pop(link_id)
+        prog = self.progs[link.pid]
+        parts = link.target.split(":")
+        kind = parts[0]
+        if kind in ("uprobe", "uretprobe", "probe"):
+            ev_kind = {"uprobe": E.KIND_ENTRY, "uretprobe": E.KIND_EXIT,
+                       "probe": E.KIND_TRACEPOINT}[kind]
+            sid = E.SITES.get_or_create(parts[1])
+            lst = self.device_attach.get((sid, ev_kind), [])
+            if link.pid in lst:
+                lst.remove(link.pid)
+            if not lst:
+                self.device_attach.pop((sid, ev_kind), None)
+            self.attach_epoch += 1
+        elif kind == "tracepoint":
+            self.syscalls.detach(parts[1], parts[2], prog.name)
+        elif kind == "filter":
+            self.syscalls.detach(parts[1], "enter", prog.name)
+
+    # ---------------------------------------------------------------- device
+    def wanted_sites(self) -> set[tuple[int, int]]:
+        return set(self.device_attach.keys())
+
+    def collector(self, stats_fn=None) -> E.Collector:
+        return E.Collector(self.wanted_sites(), stats_fn=stats_fn)
+
+    def probe_stage(self, event_rows, map_states, aux, mode=None):
+        """Run all attached device programs over the step's event tape.
+        Traced inside the step function. event_rows: i64[N, 16]."""
+        mode = mode or self.exec_mode
+        if event_rows.shape[0] == 0 or not self.device_attach:
+            return map_states, aux
+        for (sid, kind), pids in sorted(self.device_attach.items()):
+            valid = ((event_rows[:, 0] == sid) &
+                     (event_rows[:, 1] == kind))
+            for pid in pids:
+                vprog = self.progs[pid].vprog
+                if mode == "vectorized":
+                    from . import vectorized as V
+                    if V.is_vector_safe(vprog):
+                        map_states, aux = V.run_vectorized(
+                            vprog, event_rows, valid, map_states, aux)
+                        continue
+                _, map_states, aux = J.run_over_events(
+                    vprog, event_rows, valid, map_states, aux)
+        return map_states, aux
+
+    # ---------------------------------------------------------------- shm
+    def setup_shm(self, root: str):
+        from .shm import ShmRegion
+        self.shm = ShmRegion.create(root, self.map_specs)
+        # host maps become shm-backed (live for the daemon)
+        for spec in self.map_specs:
+            self.host_maps[spec.name] = self.shm.host[spec.name]
+        for name, obj_json in self._objects.items():
+            self.shm.publish_program(obj_json, name)
+        return self.shm
+
+    def publish(self, map_states) -> None:
+        if self.shm is None:
+            return
+        host_states = jax.tree.map(np.asarray, map_states)
+        self.syscalls.invoke(
+            "sys_shm_publish", [len(host_states)],
+            impl=lambda: self.shm.publish_device(host_states))
+
+    def poll_control(self) -> list[dict]:
+        """Pick up daemon attach/detach/load requests (between steps)."""
+        if self.shm is None:
+            return []
+        reqs, self._req_cursor = self.shm.poll_requests(self._req_cursor)
+        applied = []
+        for r in reqs:
+            try:
+                if r["op"] == "load_attach":
+                    obj = ProgramObject.from_json(r["object"])
+                    pid = self.load_object(obj)
+                    tgt = r.get("target") or obj.attach_to
+                    self.attach(pid, tgt)
+                elif r["op"] == "detach":
+                    self.detach(int(r["link_id"]))
+                applied.append(r)
+            except Exception as e:  # control plane must not kill training
+                applied.append({**r, "error": str(e)})
+        return applied
+
+    # ---------------------------------------------------------------- misc
+    def ringbuf_drain(self, map_states, name: str, cursor: int):
+        st = jax.tree.map(np.asarray, map_states[name])
+        return M.n_ringbuf_drain(st, cursor)
+
+    def hist_snapshot(self, map_states, name: str):
+        return np.asarray(map_states[name]["bins"])

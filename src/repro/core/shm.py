@@ -1,0 +1,159 @@
+"""mmap-backed shared-memory control plane — bpftime's shm maps + daemon
+handshake, adapted to the host side of a TPU trainer.
+
+Layout under a shm directory (SP3 segregation: program text, device-map
+snapshots, and host-map data live in separate sections; the agent may write
+only map-data sections — enforced here by API shape, in production by file
+permissions, see DESIGN.md §5):
+
+    <dir>/meta.json                 map specs + layout (control plane writes once)
+    <dir>/progs/<name>.json         program objects (read-only to agents)
+    <dir>/host/<map>.<field>.npy    live host-side maps (memmapped, rw)
+    <dir>/device/<map>.<field>.npy  per-step snapshots of device maps
+    <dir>/device/.seq.npy           seqlock (odd while a publish is in flight)
+    <dir>/control/requests.json     daemon -> trainer attach/detach requests
+    <dir>/control/.reqseq.npy       request counter
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from dataclasses import dataclass
+
+import numpy as np
+
+from . import maps as M
+from .maps import MapKind, MapSpec
+
+
+def _memmap(path, shape, mode):
+    if mode == "w+":
+        return np.lib.format.open_memmap(path, mode="w+", dtype=np.int64,
+                                         shape=shape)
+    return np.lib.format.open_memmap(path, mode=mode)
+
+
+@dataclass
+class ShmRegion:
+    root: str
+    specs: list[MapSpec]
+    host: dict          # name -> {field: memmap}
+    device: dict
+    seq: np.memmap
+    reqseq: np.memmap
+
+    # ---------------------------------------------------------------- create
+    @staticmethod
+    def create(root: str, specs: list[MapSpec]) -> "ShmRegion":
+        for sub in ("progs", "host", "device", "control"):
+            os.makedirs(os.path.join(root, sub), exist_ok=True)
+        meta = {"specs": [{"name": s.name, "kind": s.kind.value,
+                           "max_entries": s.max_entries,
+                           "rec_width": s.rec_width,
+                           "num_shards": s.num_shards} for s in specs],
+                "version": 1}
+        with open(os.path.join(root, "meta.json"), "w") as f:
+            json.dump(meta, f)
+        host, device = {}, {}
+        for s in specs:
+            tmpl = M.init_state(s, np)
+            host[s.name], device[s.name] = {}, {}
+            for field, arr in tmpl.items():
+                for sec, d in (("host", host), ("device", device)):
+                    p = os.path.join(root, sec, f"{s.name}.{field}.npy")
+                    mm = _memmap(p, arr.shape, "w+")
+                    mm[...] = 0
+                    d[s.name][field] = mm
+        seq = _memmap(os.path.join(root, "device", ".seq.npy"), (1,), "w+")
+        seq[0] = 0
+        reqseq = _memmap(os.path.join(root, "control", ".reqseq.npy"),
+                         (1,), "w+")
+        reqseq[0] = 0
+        with open(os.path.join(root, "control", "requests.json"), "w") as f:
+            json.dump([], f)
+        return ShmRegion(root, specs, host, device, seq, reqseq)
+
+    # ---------------------------------------------------------------- attach
+    @staticmethod
+    def attach(root: str, mode: str = "r+") -> "ShmRegion":
+        with open(os.path.join(root, "meta.json")) as f:
+            meta = json.load(f)
+        specs = [MapSpec(name=m["name"], kind=MapKind(m["kind"]),
+                         max_entries=m["max_entries"],
+                         rec_width=m["rec_width"],
+                         num_shards=m["num_shards"]) for m in meta["specs"]]
+        host, device = {}, {}
+        for s in specs:
+            host[s.name], device[s.name] = {}, {}
+            tmpl = M.init_state(s, np)
+            for field in tmpl:
+                host[s.name][field] = _memmap(
+                    os.path.join(root, "host", f"{s.name}.{field}.npy"),
+                    None, mode)
+                device[s.name][field] = _memmap(
+                    os.path.join(root, "device", f"{s.name}.{field}.npy"),
+                    None, "r")
+        seq = _memmap(os.path.join(root, "device", ".seq.npy"), None, "r+")
+        reqseq = _memmap(os.path.join(root, "control", ".reqseq.npy"),
+                         None, "r+")
+        return ShmRegion(root, specs, host, device, seq, reqseq)
+
+    # ---------------------------------------------------------------- publish
+    def publish_device(self, states: dict) -> None:
+        """Seqlocked snapshot of (host-fetched) device map states."""
+        self.seq[0] += 1          # odd: write in flight
+        self.seq.flush()
+        for name, st in states.items():
+            if name not in self.device:
+                continue
+            for field, arr in st.items():
+                self.device[name][field][...] = np.asarray(arr)
+        self.seq[0] += 1          # even: consistent
+        self.seq.flush()
+
+    def snapshot_device(self, name: str, retries: int = 100) -> dict:
+        for _ in range(retries):
+            s0 = int(self.seq[0])
+            if s0 % 2 == 0:
+                out = {f: np.array(a) for f, a in self.device[name].items()}
+                if int(self.seq[0]) == s0:
+                    return out
+            time.sleep(0.001)
+        raise TimeoutError("seqlock retry budget exceeded")
+
+    # ---------------------------------------------------------------- progs
+    def publish_program(self, obj_json: str, name: str) -> None:
+        with open(os.path.join(self.root, "progs", f"{name}.json"), "w") as f:
+            f.write(obj_json)
+
+    def read_programs(self) -> dict[str, str]:
+        d = os.path.join(self.root, "progs")
+        out = {}
+        for fn in sorted(os.listdir(d)):
+            if fn.endswith(".json"):
+                with open(os.path.join(d, fn)) as f:
+                    out[fn[:-5]] = f.read()
+        return out
+
+    # ---------------------------------------------------------------- control
+    def request(self, req: dict) -> None:
+        """daemon side: queue an attach/detach/load request."""
+        p = os.path.join(self.root, "control", "requests.json")
+        with open(p) as f:
+            reqs = json.load(f)
+        reqs.append(req)
+        with open(p, "w") as f:
+            json.dump(reqs, f)
+        self.reqseq[0] += 1
+        self.reqseq.flush()
+
+    def poll_requests(self, last_seen: int) -> tuple[list[dict], int]:
+        """trainer side: fetch requests newer than last_seen."""
+        cur = int(self.reqseq[0])
+        if cur == last_seen:
+            return [], last_seen
+        p = os.path.join(self.root, "control", "requests.json")
+        with open(p) as f:
+            reqs = json.load(f)
+        return reqs[last_seen:cur], cur

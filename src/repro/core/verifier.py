@@ -1,0 +1,460 @@
+"""Static verifier — the userspace analogue of the kernel eBPF verifier (SP1).
+
+Abstract interpretation over the CFG with a small lattice per register:
+
+    uninit < {scalar, const(v), ptr_stack(off), ptr_ctx(off)} < conflict
+
+plus a per-state set of initialized stack bytes. Guarantees provided to the
+JIT (which therefore needs NO runtime checks — the paper's "verify once,
+run fast" property):
+
+  * every memory access has a statically known (region, offset, size),
+    in bounds, and reads only initialized bytes;
+  * ctx is read-only; r10 is never written; no variable pointer arithmetic;
+  * helper args are well-typed; map fds and ringbuf sizes are compile-time
+    constants resolving to bound maps of the right kind;
+  * r0 is set before EXIT; execution is bounded (DAG, or loops with an
+    explicit fuel bound — the analogue of the kernel's 1M-insn budget);
+  * no unknown opcodes / helpers; program length capped.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from . import isa, vm
+from .helpers import HELPERS
+from .isa import (BPF_ALU, BPF_ALU64, BPF_JMP, BPF_JMP32, BPF_LDX, BPF_ST,
+                  BPF_STX, COND_JMP_OPS, Insn, OP_MASK, SIZE_BYTES, SIZE_MASK,
+                  SRC_MASK, STACK_SIZE, s64, u32, u64)
+from .maps import MapSpec
+
+MAX_PROG_INSNS = 4096
+
+
+class VerifierError(ValueError):
+    pass
+
+
+# ---------------------------------------------------------------- reg lattice
+UNINIT, SCALAR, CONST, PTR_STACK, PTR_CTX, CONFLICT = range(6)
+_KIND_NAMES = {UNINIT: "uninit", SCALAR: "scalar", CONST: "const",
+               PTR_STACK: "ptr_stack", PTR_CTX: "ptr_ctx",
+               CONFLICT: "conflict"}
+
+
+@dataclass(frozen=True)
+class Reg:
+    kind: int = UNINIT
+    val: int = 0  # const value (u64) or pointer offset from region base
+
+    def __repr__(self):
+        return f"{_KIND_NAMES[self.kind]}({self.val})"
+
+
+def _merge_reg(a: Reg, b: Reg) -> Reg:
+    if a == b:
+        return a
+    if UNINIT in (a.kind, b.kind):
+        return Reg(UNINIT)
+    ka, kb = a.kind, b.kind
+    if {ka, kb} <= {SCALAR, CONST}:
+        return Reg(SCALAR)
+    if ka == kb and ka in (PTR_STACK, PTR_CTX):
+        return Reg(CONFLICT)  # same region, different offset
+    return Reg(CONFLICT)
+
+
+@dataclass(frozen=True)
+class AbsState:
+    regs: tuple[Reg, ...]
+    stack_init: frozenset[int]
+
+    def with_reg(self, i: int, r: Reg) -> "AbsState":
+        rs = list(self.regs)
+        rs[i] = r
+        return AbsState(tuple(rs), self.stack_init)
+
+
+def _merge_state(a: AbsState, b: AbsState) -> AbsState:
+    return AbsState(tuple(_merge_reg(x, y) for x, y in zip(a.regs, b.regs)),
+                    a.stack_init & b.stack_init)
+
+
+# ---------------------------------------------------------------- annotations
+@dataclass
+class MemAnn:
+    region: str     # 'stack' | 'ctx'
+    off: int        # byte offset from region base
+    size: int
+
+
+@dataclass
+class CallAnn:
+    hid: int
+    name: str
+    # per-arg resolved statics: for mapfd -> fd int; kptr -> stack off;
+    # cscalar -> value; scalar -> None
+    statics: list
+
+
+@dataclass
+class Block:
+    start: int
+    end: int                      # exclusive, insn indices
+    succ: list[int] = field(default_factory=list)   # successor block ids
+    # terminator kind: 'cond' (succ=[taken, fall]), 'ja', 'exit', 'fall'
+    term: str = "fall"
+
+
+@dataclass
+class VerifiedProgram:
+    insns: list[Insn]
+    map_specs: list[MapSpec]
+    ctx_words: int
+    anns: dict[int, object]       # insn idx -> MemAnn | CallAnn
+    blocks: list[Block]
+    block_of: dict[int, int]      # leader insn idx -> block id
+    tier: str                     # 'dag' | 'loop'
+    max_insns: int
+    helper_ids_used: set[int] = field(default_factory=set)
+
+
+def verify(insns: list[Insn], map_specs: list[MapSpec], ctx_words: int = 16,
+           max_insns: int = 65536) -> VerifiedProgram:
+    if not insns:
+        raise VerifierError("empty program")
+    if len(insns) > MAX_PROG_INSNS:
+        raise VerifierError(f"program too long ({len(insns)} insns)")
+    if ctx_words * 8 > isa.MAX_CTX_BYTES:
+        raise VerifierError("ctx too large")
+    ctx_bytes = ctx_words * 8
+
+    slots = isa.insn_slots(insns)
+    slot2idx = {s: i for i, s in enumerate(slots)}
+
+    def jump_target(pc: int) -> int:
+        tgt_slot = slots[pc] + 1 + insns[pc].off
+        if tgt_slot not in slot2idx:
+            raise VerifierError(f"insn {pc}: jump to invalid slot {tgt_slot}")
+        return slot2idx[tgt_slot]
+
+    # ---------------- successor graph on insn indices
+    succs: dict[int, list[int]] = {}
+    for pc, ins in enumerate(insns):
+        cls = ins.cls
+        if cls in (BPF_JMP, BPF_JMP32):
+            op = ins.op & OP_MASK
+            if op == isa.BPF_EXIT:
+                succs[pc] = []
+                continue
+            if op == isa.BPF_JA:
+                succs[pc] = [jump_target(pc)]
+                continue
+            if op in COND_JMP_OPS:
+                fall = pc + 1
+                if fall >= len(insns):
+                    raise VerifierError(f"insn {pc}: cond jump falls off end")
+                succs[pc] = [jump_target(pc), fall]
+                continue
+        if pc + 1 >= len(insns):
+            raise VerifierError(f"insn {pc}: program falls off end")
+        succs[pc] = [pc + 1]
+
+    # ---------------- abstract interpretation (worklist to fixpoint)
+    entry_regs = [Reg(UNINIT)] * 11
+    entry_regs[isa.R1] = Reg(PTR_CTX, 0)
+    entry_regs[isa.R10] = Reg(PTR_STACK, STACK_SIZE)
+    entry = AbsState(tuple(entry_regs), frozenset())
+
+    in_states: dict[int, AbsState] = {0: entry}
+    work = [0]
+    anns: dict[int, object] = {}
+    helper_ids_used: set[int] = set()
+    iters = 0
+    while work:
+        iters += 1
+        if iters > 200_000:
+            raise VerifierError("verifier fixpoint did not converge")
+        pc = work.pop()
+        out = _transfer(pc, insns[pc], in_states[pc], map_specs, ctx_bytes,
+                        anns, helper_ids_used)
+        for s in succs[pc]:
+            merged = out if s not in in_states else _merge_state(in_states[s], out)
+            if s not in in_states or merged != in_states[s]:
+                in_states[s] = merged
+                work.append(s)
+
+    reachable = set(in_states)
+
+    # ---------------- blocks
+    leaders = {0}
+    for pc in reachable:
+        ins = insns[pc]
+        cls = ins.cls
+        if cls in (BPF_JMP, BPF_JMP32):
+            op = ins.op & OP_MASK
+            if op in COND_JMP_OPS or op == isa.BPF_JA:
+                for s in succs[pc]:
+                    leaders.add(s)
+                if pc + 1 < len(insns):
+                    leaders.add(pc + 1)
+            elif op == isa.BPF_EXIT and pc + 1 < len(insns):
+                leaders.add(pc + 1)
+    leaders = sorted(x for x in leaders if x in reachable)
+    block_of: dict[int, int] = {l: i for i, l in enumerate(leaders)}
+    blocks: list[Block] = []
+    for bi, start in enumerate(leaders):
+        end = start
+        while True:
+            ins = insns[end]
+            cls = ins.cls
+            is_term = (cls in (BPF_JMP, BPF_JMP32) and
+                       (ins.op & OP_MASK) in
+                       (*COND_JMP_OPS, isa.BPF_JA, isa.BPF_EXIT))
+            nxt = end + 1
+            if is_term or (nxt < len(insns) and nxt in block_of) or nxt >= len(insns):
+                break
+            end = nxt
+        blk = Block(start=start, end=end + 1)
+        op = insns[end].op
+        cls = insns[end].cls
+        jop = op & OP_MASK
+        if cls in (BPF_JMP, BPF_JMP32) and jop == isa.BPF_EXIT:
+            blk.term = "exit"
+        elif cls in (BPF_JMP, BPF_JMP32) and jop == isa.BPF_JA:
+            blk.term = "ja"
+            blk.succ = [block_of[succs[end][0]]]
+        elif cls in (BPF_JMP, BPF_JMP32) and jop in COND_JMP_OPS:
+            blk.term = "cond"
+            blk.succ = [block_of[s] for s in succs[end]]
+        else:
+            blk.term = "fall"
+            blk.succ = [block_of[end + 1]]
+        blocks.append(blk)
+
+    # ---------------- loop detection (back edges on block graph)
+    tier = "dag"
+    color = {}
+
+    def dfs(b: int) -> bool:
+        color[b] = 1
+        for s in blocks[b].succ:
+            if color.get(s, 0) == 1:
+                return True
+            if color.get(s, 0) == 0 and dfs(s):
+                return True
+        color[b] = 2
+        return False
+
+    if dfs(0):
+        tier = "loop"
+
+    return VerifiedProgram(insns=insns, map_specs=list(map_specs),
+                           ctx_words=ctx_words, anns=anns, blocks=blocks,
+                           block_of=block_of, tier=tier, max_insns=max_insns,
+                           helper_ids_used=helper_ids_used)
+
+
+# ---------------------------------------------------------------- transfer fn
+
+def _require_init(st: AbsState, r: int, pc: int, what: str) -> Reg:
+    reg = st.regs[r]
+    if reg.kind == UNINIT:
+        raise VerifierError(f"insn {pc}: {what} reads uninitialized r{r}")
+    if reg.kind == CONFLICT:
+        raise VerifierError(f"insn {pc}: {what} reads r{r} with conflicting "
+                            "types across paths")
+    return reg
+
+
+def _check_stack_access(st: AbsState, base: Reg, off: int, size: int,
+                        pc: int, write: bool) -> int:
+    lo = base.val + off
+    if lo < 0 or lo + size > STACK_SIZE:
+        raise VerifierError(f"insn {pc}: stack access [{lo},{lo + size}) "
+                            "out of bounds")
+    if not write:
+        missing = [b for b in range(lo, lo + size) if b not in st.stack_init]
+        if missing:
+            raise VerifierError(f"insn {pc}: read of uninitialized stack "
+                                f"byte(s) {missing[:4]}")
+    return lo
+
+
+def _transfer(pc: int, ins: Insn, st: AbsState, map_specs, ctx_bytes: int,
+              anns: dict, helper_ids_used: set) -> AbsState:
+    cls = ins.cls
+
+    if ins.is_lddw():
+        return st.with_reg(ins.dst, Reg(CONST, u64(ins.imm64 or 0)))
+
+    if cls in (BPF_ALU64, BPF_ALU):
+        if ins.dst == isa.R10:
+            raise VerifierError(f"insn {pc}: write to frame pointer r10")
+        op = ins.op & OP_MASK
+        is64 = cls == BPF_ALU64
+        if op == isa.BPF_NEG:
+            d = _require_init(st, ins.dst, pc, "neg")
+            if d.kind in (PTR_STACK, PTR_CTX):
+                raise VerifierError(f"insn {pc}: arithmetic on pointer")
+            if d.kind == CONST:
+                return st.with_reg(ins.dst, Reg(CONST, vm._alu(op, d.val, 0, is64)))
+            return st.with_reg(ins.dst, Reg(SCALAR))
+
+        if ins.op & SRC_MASK:
+            s = _require_init(st, ins.src, pc, "alu")
+        else:
+            s = Reg(CONST, u64(ins.imm) if is64 else u32(ins.imm))
+
+        if op == isa.BPF_MOV:
+            if not is64 and s.kind in (PTR_STACK, PTR_CTX):
+                return st.with_reg(ins.dst, Reg(SCALAR))  # truncation kills ptr
+            if not is64 and s.kind == CONST:
+                return st.with_reg(ins.dst, Reg(CONST, u32(s.val)))
+            return st.with_reg(ins.dst, s)
+
+        d = _require_init(st, ins.dst, pc, "alu")
+        d_ptr = d.kind in (PTR_STACK, PTR_CTX)
+        s_ptr = s.kind in (PTR_STACK, PTR_CTX)
+        if d_ptr or s_ptr:
+            if not is64:
+                raise VerifierError(f"insn {pc}: 32-bit arithmetic on pointer")
+            if op not in (isa.BPF_ADD, isa.BPF_SUB):
+                raise VerifierError(f"insn {pc}: op {op:#x} on pointer")
+            if d_ptr and s_ptr:
+                raise VerifierError(f"insn {pc}: pointer +/- pointer")
+            if d_ptr:
+                if s.kind != CONST:
+                    raise VerifierError(f"insn {pc}: variable pointer "
+                                        "arithmetic (offset not constant)")
+                delta = s64(s.val)
+                newoff = d.val + (delta if op == isa.BPF_ADD else -delta)
+                return st.with_reg(ins.dst, Reg(d.kind, newoff))
+            # scalar + ptr (ADD only)
+            if op != isa.BPF_ADD or d.kind != CONST:
+                raise VerifierError(f"insn {pc}: unsupported pointer form")
+            return st.with_reg(ins.dst, Reg(s.kind, s.val + s64(d.val)))
+
+        if d.kind == CONST and s.kind == CONST:
+            dv = d.val if is64 else u32(d.val)
+            sv = s.val if is64 else u32(s.val)
+            return st.with_reg(ins.dst, Reg(CONST, vm._alu(op, dv, sv, is64)))
+        return st.with_reg(ins.dst, Reg(SCALAR))
+
+    if cls == BPF_LDX:
+        base = _require_init(st, ins.src, pc, "load")
+        size = SIZE_BYTES[ins.op & SIZE_MASK]
+        if base.kind == PTR_STACK:
+            lo = _check_stack_access(st, base, ins.off, size, pc, write=False)
+            anns[pc] = MemAnn("stack", lo, size)
+        elif base.kind == PTR_CTX:
+            lo = base.val + ins.off
+            if lo < 0 or lo + size > ctx_bytes:
+                raise VerifierError(f"insn {pc}: ctx read [{lo},{lo + size}) "
+                                    f"out of bounds (ctx={ctx_bytes}B)")
+            if lo % size:
+                raise VerifierError(f"insn {pc}: unaligned ctx read at {lo} "
+                                    f"(size {size})")
+            anns[pc] = MemAnn("ctx", lo, size)
+        else:
+            raise VerifierError(f"insn {pc}: load via non-pointer r{ins.src}")
+        return st.with_reg(ins.dst, Reg(SCALAR))
+
+    if cls in (BPF_STX, BPF_ST):
+        base = _require_init(st, ins.dst, pc, "store")
+        size = SIZE_BYTES[ins.op & SIZE_MASK]
+        if base.kind == PTR_CTX:
+            raise VerifierError(f"insn {pc}: store to read-only ctx")
+        if base.kind != PTR_STACK:
+            raise VerifierError(f"insn {pc}: store via non-pointer r{ins.dst}")
+        if cls == BPF_STX:
+            v = _require_init(st, ins.src, pc, "store value")
+            if v.kind in (PTR_STACK, PTR_CTX):
+                raise VerifierError(f"insn {pc}: spilling pointers to stack "
+                                    "is not supported")
+        lo = _check_stack_access(st, base, ins.off, size, pc, write=True)
+        anns[pc] = MemAnn("stack", lo, size)
+        return AbsState(st.regs, st.stack_init | frozenset(range(lo, lo + size)))
+
+    if cls in (BPF_JMP, BPF_JMP32):
+        op = ins.op & OP_MASK
+        if op == isa.BPF_EXIT:
+            _require_init(st, isa.R0, pc, "exit")
+            return st
+        if op == isa.BPF_JA:
+            return st
+        if op == isa.BPF_CALL:
+            return _transfer_call(pc, ins, st, map_specs, anns, helper_ids_used)
+        # conditional jump
+        d = _require_init(st, ins.dst, pc, "jump")
+        if d.kind in (PTR_STACK, PTR_CTX):
+            raise VerifierError(f"insn {pc}: comparison on pointer")
+        if ins.op & SRC_MASK:
+            s = _require_init(st, ins.src, pc, "jump")
+            if s.kind in (PTR_STACK, PTR_CTX):
+                raise VerifierError(f"insn {pc}: comparison on pointer")
+        return st
+
+    raise VerifierError(f"insn {pc}: unknown opcode {ins.op:#x}")
+
+
+def _transfer_call(pc: int, ins: Insn, st: AbsState, map_specs, anns,
+                   helper_ids_used) -> AbsState:
+    sig = HELPERS.get(ins.imm)
+    if sig is None:
+        raise VerifierError(f"insn {pc}: unknown helper {ins.imm}")
+    helper_ids_used.add(ins.imm)
+    statics: list = []
+    for i, kind in enumerate(sig.args):
+        r = 1 + i
+        reg = _require_init(st, r, pc, f"call {sig.name} arg{i + 1}")
+        if kind == "mapfd":
+            if reg.kind != CONST:
+                raise VerifierError(f"insn {pc}: {sig.name} arg{i + 1} map fd "
+                                    "must be a compile-time constant")
+            fd = s64(reg.val)
+            if not 0 <= fd < len(map_specs):
+                raise VerifierError(f"insn {pc}: map fd {fd} out of range")
+            if sig.map_kinds and map_specs[fd].kind not in sig.map_kinds:
+                raise VerifierError(
+                    f"insn {pc}: {sig.name} on map of kind "
+                    f"{map_specs[fd].kind.value} not allowed")
+            statics.append(fd)
+        elif kind == "kptr":
+            if reg.kind != PTR_STACK:
+                raise VerifierError(f"insn {pc}: {sig.name} arg{i + 1} must "
+                                    "be a stack pointer")
+            nbytes = 8
+            if sig.name == "ringbuf_output":
+                # size checked below once cscalar seen; defer with off only
+                pass
+            lo = _check_stack_access(st, reg, 0, nbytes, pc, write=False)
+            statics.append(lo)
+        elif kind == "cscalar":
+            if reg.kind != CONST:
+                raise VerifierError(f"insn {pc}: {sig.name} arg{i + 1} must "
+                                    "be a compile-time constant")
+            statics.append(s64(reg.val))
+        else:  # scalar
+            if reg.kind in (PTR_STACK, PTR_CTX):
+                raise VerifierError(f"insn {pc}: {sig.name} arg{i + 1} must "
+                                    "be a scalar, not a pointer")
+            statics.append(None)
+
+    if sig.name == "ringbuf_output":
+        fd, data_off, size = statics[0], statics[1], statics[2]
+        spec = map_specs[fd]
+        if size <= 0 or size % 8 or size > 8 * spec.rec_width:
+            raise VerifierError(f"insn {pc}: ringbuf_output size {size} "
+                                f"invalid for rec_width {spec.rec_width}")
+        for b in range(data_off, data_off + size):
+            if b not in st.stack_init:
+                raise VerifierError(f"insn {pc}: ringbuf_output reads "
+                                    f"uninitialized stack byte {b}")
+
+    anns[pc] = CallAnn(hid=ins.imm, name=sig.name, statics=statics)
+    rs = list(st.regs)
+    rs[0] = Reg(SCALAR)
+    for r in range(1, 6):
+        rs[r] = Reg(UNINIT)
+    return AbsState(tuple(rs), st.stack_init)

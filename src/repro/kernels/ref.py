@@ -1,0 +1,120 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; the kernels must match them exactly
+(tests sweep shapes/dtypes and assert_allclose against these).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+from jax import lax
+
+I64 = jnp.int64
+_HASH_MULT = 0x9E3779B97F4A7C15
+
+
+# --------------------------------------------------------------------------
+# tensor_stats: one-pass fused summary of an arbitrary tensor
+# --------------------------------------------------------------------------
+
+def tensor_stats(x) -> dict:
+    """Returns f32 scalars mean/rms/min/max/absmax over FINITE elements and
+    i64 nan/inf counts. Empty or all-non-finite tensors give zeros."""
+    xf = jnp.asarray(x, jnp.float32).reshape(-1)
+    nan = jnp.isnan(xf)
+    inf = jnp.isinf(xf)
+    bad = nan | inf
+    n_ok = jnp.maximum(jnp.sum(~bad).astype(jnp.float32), 1.0)
+    z = jnp.where(bad, 0.0, xf)
+    s = jnp.sum(z)
+    ss = jnp.sum(z * z)
+    mn = jnp.min(jnp.where(bad, jnp.inf, xf))
+    mx = jnp.max(jnp.where(bad, -jnp.inf, xf))
+    any_ok = jnp.any(~bad)
+    mn = jnp.where(any_ok, mn, 0.0)
+    mx = jnp.where(any_ok, mx, 0.0)
+    return {
+        "mean": s / n_ok,
+        "rms": jnp.sqrt(ss / n_ok),
+        "min": mn,
+        "max": mx,
+        "absmax": jnp.maximum(jnp.abs(mn), jnp.abs(mx)),
+        "nan_cnt": jnp.sum(nan).astype(I64),
+        "inf_cnt": jnp.sum(inf).astype(I64),
+    }
+
+
+def log2_histogram(x, n_bins: int = 64):
+    """bcc-style log2 histogram of |x| in Q47.16 fixed point (i64 view):
+    bin 0 = zero/negative fx value; bin k = bit_length(v) for v>0."""
+    v = jnp.abs(jnp.asarray(x, jnp.float32).reshape(-1))
+    v = jnp.where(jnp.isfinite(v), v, 0.0)
+    fx = jnp.clip(v * 65536.0, 0, float(2**62)).astype(I64)
+    pow2 = jnp.asarray([1 << k for k in range(63)], I64)
+    bins = jnp.where(fx <= 0, 0,
+                     jnp.minimum(n_bins - 1,
+                                 jnp.sum((fx[:, None] >= pow2[None, :])
+                                         .astype(jnp.int32), axis=1)))
+    return jnp.zeros((n_bins,), I64).at[bins].add(1)
+
+
+# --------------------------------------------------------------------------
+# hash_fetch_add_batch: sequential batched open-addressing fetch-add
+# --------------------------------------------------------------------------
+
+def _hash_idx(key, n):
+    h = key.astype(jnp.uint64) * jnp.uint64(_HASH_MULT)
+    return ((h >> jnp.uint64(33)) % jnp.uint64(n)).astype(jnp.int32)
+
+
+def hash_fetch_add_batch(keys_tbl, used_tbl, vals_tbl, keys, deltas, valid):
+    """Apply fetch-add(key[i], delta[i]) for each valid event IN ORDER.
+    Semantics identical to maps.j_hash_fetch_add applied sequentially."""
+    n = keys_tbl.shape[0]
+    ar = jnp.arange(n, dtype=jnp.int32)
+
+    def one(tbl, ev):
+        kt, ut, vt = tbl
+        key, delta, ok = ev
+        start = _hash_idx(key, n)
+        order = (start + ar) % n
+        used_o = ut[order] != 0
+        match = used_o & (kt[order] == key)
+        free = ~used_o
+        big = jnp.int32(n)
+        fm = jnp.min(jnp.where(match, ar, big))
+        ff = jnp.min(jnp.where(free, ar, big))
+        found = (fm < big) & (fm < jnp.where(ff < big, ff, big))
+        has_free = ff < big
+        slot = order[jnp.clip(fm, 0, n - 1)]
+        fslot = order[jnp.clip(ff, 0, n - 1)]
+        tgt = jnp.where(found, slot, fslot)
+        do = ok & (found | has_free)
+        newv = jnp.where(found, vt[tgt] + delta, delta)
+        kt = kt.at[tgt].set(jnp.where(do, key, kt[tgt]))
+        ut = ut.at[tgt].set(jnp.where(do, jnp.int64(1), ut[tgt]))
+        vt = vt.at[tgt].set(jnp.where(do, newv, vt[tgt]))
+        return (kt, ut, vt), jnp.int64(0)
+
+    (kt, ut, vt), _ = lax.scan(one, (keys_tbl, used_tbl, vals_tbl),
+                               (keys, deltas, valid))
+    return kt, ut, vt
+
+
+# --------------------------------------------------------------------------
+# ringbuf_emit_batch: append valid rows at head, head advances per valid row
+# --------------------------------------------------------------------------
+
+def ringbuf_emit_batch(data, head, rows, valid):
+    """data: i64[cap, W]; head: i64[1]; rows: i64[B, W]; valid: bool[B]."""
+    cap = data.shape[0]
+
+    def one(carry, ev):
+        d, h = carry
+        row, ok = ev
+        slot = (h[0] % cap).astype(jnp.int32)
+        d = d.at[slot].set(jnp.where(ok, row, d[slot]))
+        h = h.at[0].add(jnp.where(ok, jnp.int64(1), jnp.int64(0)))
+        return (d, h), jnp.int64(0)
+
+    (d, h), _ = lax.scan(one, (data, head), (rows, valid))
+    return d, h

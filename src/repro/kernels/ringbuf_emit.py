@@ -1,0 +1,44 @@
+"""Batched ring-buffer emit Pallas kernel.
+
+Appends the valid rows of an event batch to a ring buffer in one launch
+(reserve/commit collapses to a prefix-count because the TPU grid is
+sequential — no CAS needed, the adaptation of bpftime's shm ringbuf).
+Semantics identical to ref.ringbuf_emit_batch.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(rows_ref, valid_ref, data_in_ref, head_in_ref,
+            data_ref, head_ref, *, cap: int, batch: int):
+    data_ref[...] = data_in_ref[...]
+    head0 = head_in_ref[0]
+
+    def body(b, count):
+        ok = valid_ref[b] != 0
+        slot = ((head0 + count) % cap).astype(jnp.int32)
+        row = rows_ref[b, :]
+        data_ref[slot, :] = jnp.where(ok, row, data_ref[slot, :])
+        return count + jnp.where(ok, jnp.int64(1), jnp.int64(0))
+
+    total = jax.lax.fori_loop(0, batch, body, jnp.int64(0))
+    head_ref[0] = head0 + total
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ringbuf_emit_batch_pallas(data, head, rows, valid, *,
+                              interpret: bool = False):
+    cap, w = data.shape
+    b = rows.shape[0]
+    d, h = pl.pallas_call(
+        functools.partial(_kernel, cap=cap, batch=b),
+        out_shape=[jax.ShapeDtypeStruct((cap, w), jnp.int64),
+                   jax.ShapeDtypeStruct((1,), jnp.int64)],
+        interpret=interpret,
+    )(rows, valid.astype(jnp.int64), data, head)
+    return d, h

@@ -1,0 +1,188 @@
+"""Compiled-artifact analysis: collective-byte extraction from partitioned
+HLO + three-term roofline (TPU v5e constants).
+
+Wire-byte model per collective (result/operand shapes in the partitioned
+module are PER-DEVICE):
+    all-reduce        2x result bytes   (ring: reduce-scatter + all-gather)
+    all-gather        1x result bytes   (each device receives ~result)
+    reduce-scatter    1x operand bytes ~= result * shards (we use result*1,
+                      operands unavailable cheaply; noted underestimate)
+    all-to-all        1x result bytes
+    collective-permute 1x result bytes
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+# ---- TPU v5e
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_WIRE_FACTOR = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    b = _DTYPE_BYTES.get(dtype)
+    if b is None:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * b
+
+
+@dataclass
+class CollectiveStats:
+    counts: dict = field(default_factory=dict)
+    bytes_by_type: dict = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_type.values()))
+
+    @property
+    def wire_bytes(self) -> float:
+        return float(sum(_WIRE_FACTOR[k] * v
+                         for k, v in self.bytes_by_type.items()))
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum per-device result bytes of every collective op in partitioned
+    HLO. Handles `%x = f32[..] all-reduce(..)` and tuple-result forms.
+    `-start` variants counted once (`-done` ignored)."""
+    st = CollectiveStats()
+    for line in hlo_text.splitlines():
+        for op in _COLLECTIVES:
+            tok = f" {op}(" if f" {op}(" in line else (
+                f" {op}-start(" if f" {op}-start(" in line else None)
+            if tok is None:
+                continue
+            lhs = line.split(tok)[0]
+            if "=" in lhs:
+                lhs = lhs.split("=", 1)[1]
+            total = sum(_shape_bytes(d, dims)
+                        for d, dims in _SHAPE_RE.findall(lhs))
+            st.counts[op] = st.counts.get(op, 0) + 1
+            st.bytes_by_type[op] = st.bytes_by_type.get(op, 0) + total
+            break
+    return st
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops_total: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        tot = self.hlo_flops_per_dev * self.chips
+        return self.model_flops_total / tot if tot else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """fraction of chip peak the step would achieve if it ran exactly at
+        the dominant-term time, counting only MODEL flops as useful."""
+        if self.bound_s <= 0:
+            return 0.0
+        ideal = self.model_flops_total / (self.chips * PEAK_FLOPS)
+        return ideal / self.bound_s
+
+    def to_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "hlo_flops_per_dev": self.hlo_flops_per_dev,
+            "hlo_bytes_per_dev": self.hlo_bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "model_flops_total": self.model_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+            "chips": self.chips,
+        }
+
+
+def roofline(cost: dict, coll: CollectiveStats, chips: int,
+             model_flops_total: float) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    return Roofline(
+        compute_s=flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=coll.wire_bytes / ICI_BW,
+        hlo_flops_per_dev=flops,
+        hlo_bytes_per_dev=byts,
+        coll_bytes_per_dev=coll.wire_bytes,
+        model_flops_total=model_flops_total,
+        chips=chips,
+    )
+
+
+def roofline_from_hlo(hc, chips: int, model_flops_total: float,
+                      fused_attention: bool = True) -> Roofline:
+    """Roofline from the trip-count-aware analyzer (hlo_cost.HloCost).
+    fused_attention=True uses the memory term with flash-interior bytes
+    removed — valid because the shipped Pallas flash kernel keeps them in
+    VMEM on the TPU target (kernels/flash_attention.py, validated in
+    tests/test_flash_kernel.py)."""
+    byts = hc.bytes_fused if fused_attention else hc.bytes
+    return Roofline(
+        compute_s=hc.flops / PEAK_FLOPS,
+        memory_s=byts / HBM_BW,
+        collective_s=hc.coll_wire / ICI_BW,
+        hlo_flops_per_dev=hc.flops,
+        hlo_bytes_per_dev=byts,
+        coll_bytes_per_dev=hc.coll_wire,
+        model_flops_total=model_flops_total,
+        chips=chips,
+    )
+
+
+def model_flops(cfg, shape) -> float:
+    """Useful step flops: 6*N*D train / 2*N*D inference (N = active params,
+    embedding lookup table excluded per the Chinchilla convention) PLUS the
+    causal-attention quadratic term (2*B*S^2*H*hd fwd; x3 train for bwd) —
+    without it, attention-heavy cells (small d_model, long S) would show
+    absurd "waste"."""
+    pc = cfg.param_counts()
+    n = pc["active"] - cfg.vocab_size * cfg.d_model
+    B, S = shape.global_batch, shape.seq_len
+    n_attn = sum(1 for i in range(cfg.num_layers or
+                                  (cfg.enc_layers + cfg.dec_layers))
+                 if cfg.block_kind(i) == "attn")
+    attn_fwd = 2.0 * B * S * S * cfg.num_heads * cfg.hd * n_attn
+    if shape.mode == "train":
+        return 6.0 * n * B * S + 3.0 * attn_fwd
+    if shape.mode == "prefill":
+        return 2.0 * n * B * S + attn_fwd
+    # decode: one token attends the full cache (linear, not quadratic)
+    attn_dec = 4.0 * B * S * cfg.num_heads * cfg.hd * n_attn
+    return 2.0 * n * B + attn_dec

@@ -1,0 +1,316 @@
+"""Trip-count-aware HLO cost analysis.
+
+XLA's `compiled.cost_analysis()` counts each while-loop body ONCE, which
+undercounts scanned layer stacks and microbatch loops by their trip counts
+(verified experimentally — see EXPERIMENTS.md §Roofline methodology). This
+module re-derives flops / HBM bytes / collective bytes from the optimized
+HLO text, multiplying each computation's costs by the product of enclosing
+`known_trip_count`s.
+
+Counting rules:
+  flops       2 * prod(result_dims) * prod(lhs_contracting_dims) per dot
+  bytes       result + operand bytes of every top-level instruction
+              (fusion internals excluded — their IO is the fusion node's;
+              parameter/tuple/gte/bitcast/constant excluded)
+  collectives result bytes by type, with the same multipliers
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "s4": 1, "u4": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TOAPPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*(\d+)')
+_OPERANDS_RE = re.compile(r"\(((?:%[\w.\-]+(?:,\s*)?)+)\)")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_OPS = ("parameter(", "tuple(", "get-tuple-element(", "bitcast(",
+             "constant(", "after-all(", "partition-id(", "iota(",
+             "copy-done(", "all-reduce-done(", "all-gather-done(")
+
+
+def _dims_prod(dims: str) -> int:
+    if not dims:
+        return 1
+    return math.prod(int(d) for d in dims.split(","))
+
+
+def _first_shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        b = _DTYPE_BYTES.get(dt)
+        if b:
+            total += b * _dims_prod(dims)
+    return total
+
+
+@dataclass
+class _Instr:
+    name: str
+    rhs: str
+
+
+@dataclass
+class _Comp:
+    name: str
+    instrs: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # name -> (dtype, dims)
+
+
+def _parse_computations(text: str) -> tuple[dict, str]:
+    comps: dict[str, _Comp] = {}
+    cur: _Comp | None = None
+    entry = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        hdr = _COMP_HDR.match(line)
+        if hdr and line.endswith("{") and ") -> " in line:
+            cur = _Comp(hdr.group(1))
+            comps[cur.name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur.name
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        name, rhs = m.group(1), m.group(2)
+        cur.instrs.append(_Instr(name, rhs))
+        sm = _SHAPE_RE.search(rhs)
+        if sm:
+            cur.shapes[name] = (sm.group(1), sm.group(2))
+    return comps, entry
+
+
+def _instr_flops(ins: _Instr, comp: _Comp) -> float:
+    if " dot(" not in ins.rhs and not ins.rhs.startswith("dot("):
+        return 0.0
+    res = _SHAPE_RE.search(ins.rhs)
+    if not res:
+        return 0.0
+    res_n = _dims_prod(res.group(2))
+    cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rhs)
+    ops = re.search(r"dot\(\s*%?([\w.\-]+)", ins.rhs)
+    contract = 1
+    if cm and ops:
+        lhs_shape = comp.shapes.get(ops.group(1))
+        if lhs_shape:
+            dims = ([int(d) for d in lhs_shape[1].split(",")]
+                    if lhs_shape[1] else [])
+            for ci in (cm.group(1).split(",") if cm.group(1) else []):
+                ci = int(ci)
+                if ci < len(dims):
+                    contract *= dims[ci]
+    return 2.0 * res_n * contract
+
+
+def _operand_names(rhs: str) -> list[str]:
+    return re.findall(r"%([\w.\-]+)", rhs.split("(", 1)[-1])
+
+
+def _instr_bytes(ins: _Instr, comp: _Comp) -> float:
+    rhs = ins.rhs
+
+    def _bytes_of(name):
+        sh = comp.shapes.get(name)
+        return (_DTYPE_BYTES.get(sh[0], 0) * _dims_prod(sh[1])) if sh else 0
+
+    # in-place windowed ops: traffic = the window, not the whole buffer
+    if " dynamic-update-slice(" in rhs or " dynamic-update-slice-start(" in rhs:
+        ops = _operand_names(rhs)
+        return float(2 * _bytes_of(ops[1])) if len(ops) > 1 else 0.0
+    if " dynamic-slice(" in rhs:
+        res = _SHAPE_RE.search(rhs)
+        if res:
+            return float(2 * _DTYPE_BYTES.get(res.group(1), 0)
+                         * _dims_prod(res.group(2)))
+        return 0.0
+    if any(op in rhs for op in _SKIP_OPS):
+        return 0.0
+    total = 0
+    res = _SHAPE_RE.search(rhs)
+    if res:
+        b = _DTYPE_BYTES.get(res.group(1), 0)
+        total += b * _dims_prod(res.group(2))
+        # tuple results: count every element shape before the op name
+        head = rhs.split("(", 1)[0]
+        extra = _SHAPE_RE.findall(head)
+        if len(extra) > 1:
+            total = sum(_DTYPE_BYTES.get(dt, 0) * _dims_prod(dd)
+                        for dt, dd in extra)
+    for opname in _operand_names(rhs):
+        total += _bytes_of(opname)
+    return float(total)
+
+
+def _attn_matrix_shaped(rhs: str) -> bool:
+    """Attention-matrix residuals (flash bwd-through-scan stacking): >=5
+    dims with both trailing dims >= 1024. No other tensor in this model
+    family has that signature (weights are 2-3D; activations end in
+    d_model or hd)."""
+    m = _SHAPE_RE.search(rhs)
+    if not m or not m.group(2):
+        return False
+    dims = [int(d) for d in m.group(2).split(",")]
+    return len(dims) >= 5 and dims[-1] >= 1024 and dims[-2] >= 1024
+
+
+def _instr_collective(ins: _Instr) -> tuple[str, float] | None:
+    rhs = ins.rhs
+    for op in _COLLECTIVES:
+        if f" {op}(" in f" {rhs}" or f"{op}-start(" in rhs:
+            head = rhs.split(op, 1)[0]
+            return op, float(_first_shape_bytes(head))
+    return None
+
+
+@dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    # HBM traffic of ops tagged 'flash_interior' (jax.named_scope in
+    # models.layers.flash_attention): real in this XLA lowering, zero when
+    # the Pallas flash kernel (kernels/flash_attention.py) runs on TPU.
+    bytes_flash_interior: float = 0.0
+    collective_counts: dict = field(default_factory=dict)
+    collective_bytes: dict = field(default_factory=dict)
+    # collectives emitted INSIDE the flash interior (GSPMD resharding of
+    # attention blocks): absent in the shard_map+Pallas deployment where
+    # each shard's interior is local (ring-style k/v movement is counted
+    # separately in the roofline notes).
+    coll_bytes_flash_interior: float = 0.0
+
+    @property
+    def bytes_fused(self) -> float:
+        return self.bytes - self.bytes_flash_interior
+
+    coll_wire_flash_interior: float = 0.0
+
+    @property
+    def coll_wire_fused(self) -> float:
+        return max(self.coll_wire - self.coll_wire_flash_interior, 0.0)
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    @property
+    def coll_wire(self) -> float:
+        f = {"all-reduce": 2.0}
+        return sum(v * f.get(k, 1.0)
+                   for k, v in self.collective_bytes.items())
+
+
+def analyze(text: str) -> HloCost:
+    comps, entry = _parse_computations(text)
+    if entry is None:
+        return HloCost()
+
+    # computations whose instruction costs are accounted at the call site:
+    # fusion bodies and reduction/scatter/sort combiner lambdas — but NOT
+    # call() targets (those execute as real computations).
+    fusion_called: set[str] = set()
+    _combiner_ops = (" reduce(", " reduce-window(", " scatter(", " sort(",
+                     " map(", " select-and-scatter(", " reduce-scatter(",
+                     " all-reduce(", " all-reduce-start(")
+    for c in comps.values():
+        for ins in c.instrs:
+            if " fusion(" in ins.rhs or ins.rhs.startswith("fusion("):
+                m = _CALLS_RE.search(ins.rhs)
+                if m:
+                    fusion_called.add(m.group(1))
+            if any(op in f" {ins.rhs}" for op in _combiner_ops):
+                for m in _TOAPPLY_RE.finditer(ins.rhs):
+                    fusion_called.add(m.group(1))
+
+    cost = HloCost()
+    seen: set[tuple[str, float]] = set()
+
+    def walk(name: str, mult: float, interior: bool = False):
+        """interior=True: this computation runs inside the flash-attention
+        scan (the while op carried the tag); XLA-synthesized copies inside
+        have no metadata, so interior-ness propagates structurally."""
+        comp = comps.get(name)
+        if comp is None or name in fusion_called:
+            return
+        for ins in comp.instrs:
+            cost.flops += mult * _instr_flops(ins, comp)
+            b = mult * _instr_bytes(ins, comp)
+            cost.bytes += b
+            if interior or "flash_interior" in ins.rhs or \
+                    _attn_matrix_shaped(ins.rhs):
+                cost.bytes_flash_interior += b
+            if " fusion(" in ins.rhs or ins.rhs.startswith("fusion("):
+                # dots INSIDE fusions still burn MXU flops (IO was already
+                # charged at this fusion node)
+                m = _CALLS_RE.search(ins.rhs)
+                fc = comps.get(m.group(1)) if m else None
+                if fc is not None:
+                    for fins in fc.instrs:
+                        cost.flops += mult * _instr_flops(fins, fc)
+            coll = _instr_collective(ins)
+            if coll:
+                op, cb = coll
+                cost.collective_counts[op] = \
+                    cost.collective_counts.get(op, 0) + mult
+                cost.collective_bytes[op] = \
+                    cost.collective_bytes.get(op, 0.0) + mult * cb
+                if interior or "flash_interior" in ins.rhs or \
+                        _attn_matrix_shaped(ins.rhs):
+                    cost.coll_bytes_flash_interior += mult * cb
+                    wf = 2.0 if op == "all-reduce" else 1.0
+                    cost.coll_wire_flash_interior += mult * cb * wf
+            if " while(" in ins.rhs or ins.rhs.startswith("while("):
+                bm = _BODY_RE.search(ins.rhs)
+                cm = _COND_RE.search(ins.rhs)
+                tm = _TRIP_RE.search(ins.rhs)
+                if tm:
+                    trip = float(tm.group(1))
+                else:
+                    # scan-lowered loops without the annotation: infer the
+                    # bound from the largest constant in the condition
+                    trip = 1.0
+                    if cm and cm.group(1) in comps:
+                        consts = [
+                            int(v) for i2 in comps[cm.group(1)].instrs
+                            for v in re.findall(r"constant\((\d+)\)", i2.rhs)]
+                        if consts:
+                            trip = float(max(consts))
+                sub_interior = interior or "flash_interior" in ins.rhs
+                if bm:
+                    walk(bm.group(1), mult * trip, sub_interior)
+                if cm:
+                    walk(cm.group(1), mult * trip, sub_interior)
+            elif (" call(" in ins.rhs or " conditional(" in ins.rhs
+                  or ins.rhs.startswith("call(")):
+                sub_interior = interior or "flash_interior" in ins.rhs
+                for m in re.finditer(
+                        r"(?:to_apply|true_computation|"
+                        r"false_computation)=%?([\w.\-]+)", ins.rhs):
+                    walk(m.group(1), mult, sub_interior)
+                bm = re.search(r"branch_computations=\{([^}]*)\}", ins.rhs)
+                if bm:
+                    for name2 in re.findall(r"%?([\w.\-]+)", bm.group(1)):
+                        walk(name2, mult, sub_interior)
+
+    walk(entry, 1.0)
+    return cost

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+Importing this module never touches jax device state — meshes are built
+inside functions only (dryrun.py sets XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import math
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    import jax
+    import numpy as np
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devs)} — run under "
+            "dryrun.py (XLA_FLAGS=--xla_force_host_platform_device_count=512)")
+    arr = np.asarray(devs[:n]).reshape(shape)
+    from jax.sharding import Mesh
+    return Mesh(arr, axes)
+
+
+def make_host_mesh(shape=(1, 1), axes=("data", "model")):
+    """Tiny mesh over whatever devices exist (tests / CPU runs)."""
+    import jax
+    import numpy as np
+    n = math.prod(shape)
+    devs = jax.devices()[:n]
+    from jax.sharding import Mesh
+    return Mesh(np.asarray(devs).reshape(shape), axes)

@@ -1,0 +1,66 @@
+"""Serving driver: batched requests against a (smoke or full) model with
+optional bpftime instrumentation.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b \
+        --requests 8 --max-new 8 [--admit-limit 12]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--admit-limit", type=int, default=0,
+                    help="reject prompts longer than this via eBPF filter")
+    args = ap.parse_args(argv)
+
+    from repro.configs import registry
+    from repro.core.runtime import BpftimeRuntime
+    from repro.models import registry as MR
+    from repro.serve.engine import Request, ServeEngine
+
+    rt = None
+    if args.admit_limit:
+        rt = BpftimeRuntime()
+        pid = rt.load_asm("admit", f"""
+            ldxdw r6, [r1+ctx:arg1]
+            jle r6, {args.admit_limit}, ok
+            mov r1, 429
+            call override_return
+            ok:
+            mov r0, 0
+            exit
+        """, [], "filter")
+        rt.attach(pid, "filter:sys_serve_admit")
+
+    cfg = registry.smoke(args.arch)
+    params = MR.init_params(jax.random.PRNGKey(0), cfg)
+    engine = ServeEngine(params, cfg, slots=args.slots,
+                         max_seq=args.max_seq, runtime=rt)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        int(rng.integers(3, 24))).tolist(),
+                    max_new=args.max_new)
+            for i in range(args.requests)]
+    engine.submit_all(reqs)
+    done = sum(1 for r in reqs if r.done and not r.rejected)
+    rej = sum(1 for r in reqs if r.rejected)
+    print(f"served {done}, rejected {rej}, decode steps "
+          f"{engine.step_count}")
+    for r in reqs[:4]:
+        print(f"  req {r.rid}: prompt[{len(r.prompt)}] -> {r.out[:8]}"
+              f"{' (rejected)' if r.rejected else ''}")
+
+
+if __name__ == "__main__":
+    main()

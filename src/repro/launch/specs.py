@@ -1,0 +1,136 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every
+(arch x shape x mode) cell — the shannon/kernels pattern: weak-type-correct,
+shardable, zero device allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.dist import sharding as SH
+from repro.models import registry as MR
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _tok(shape):
+    return SDS(shape, jnp.int32)
+
+
+def train_batch_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      tcfg: TrainConfig):
+    B, S = shape.global_batch, shape.seq_len
+    Ft = cfg.frontend_tokens
+    m = tcfg.microbatch or 0
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    def mb(x):  # wrap leading microbatch dims
+        if m and B % m == 0 and B // m > 1:
+            return (B // m, m) + x
+        return (B,) + x
+
+    batch = {}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = SDS(mb((S, cfg.d_model)), dt)
+        batch["tokens"] = _tok(mb((S,)))
+        batch["labels"] = _tok(mb((S,)))
+    elif cfg.frontend != "none":
+        batch["embeds"] = SDS(mb((Ft, cfg.d_model)), dt)
+        batch["tokens"] = _tok(mb((S - Ft,)))
+        batch["labels"] = _tok(mb((S,)))
+        if cfg.rope_kind == "mrope":
+            batch["positions"] = _tok(mb((S, 3)))
+    else:
+        batch["tokens"] = _tok(mb((S,)))
+        batch["labels"] = _tok(mb((S,)))
+    return batch
+
+
+def batch_shardings(batch_specs, mesh, cfg: ModelConfig,
+                    shape: ShapeConfig, tcfg: TrainConfig):
+    micro = bool(tcfg and tcfg.microbatch and
+                 shape.global_batch // max(tcfg.microbatch, 1) > 1)
+
+    def shard_one(path_key, leaf):
+        nd = len(leaf.shape)
+        # batch dim position: 1 if microbatched (dim0 = microbatch count)
+        bpos = 1 if micro else 0
+        bsz = leaf.shape[bpos]
+        spec = SH.batch_spec(mesh, bsz, extra_dims=nd - bpos - 1)
+        if micro:
+            spec = P(None, *spec)
+        spec = SH.fit_spec(spec, leaf.shape, mesh)
+        return NamedSharding(mesh, spec)
+
+    return {k: shard_one(k, v) for k, v in batch_specs.items()}
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, param_dtype):
+    """(tokens, cache, maps, step) stand-ins for serve decode."""
+    B, S = shape.global_batch, shape.seq_len
+    cdt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.family == "encdec":
+        cache = jax.eval_shape(
+            lambda: MR.make_cache(cfg, B, S, cdt, enc_seq=4096))
+    else:
+        cache = jax.eval_shape(lambda: MR.make_cache(cfg, B, S, cdt))
+    return {
+        "tokens": _tok((B, 1)),
+        "cache": cache,
+        "step": SDS((), jnp.int32),
+    }
+
+
+def cache_shardings(cache_specs, mesh, cfg: ModelConfig,
+                    shape: ShapeConfig):
+    B = shape.global_batch
+
+    def one(path, leaf):
+        keys = [str(getattr(p, "key", getattr(p, "idx", ""))) for p in path]
+        nd = len(leaf.shape)
+        if keys and keys[-1] in ("k", "v", "xk", "xv") and nd == 5:
+            return NamedSharding(
+                mesh, SH.kv_cache_spec(mesh, B, leaf.shape[3]))
+        if keys and keys[-1] == "pos":
+            return NamedSharding(mesh, P())
+        # mamba states [n, B, ...]: batch over fsdp if divisible
+        fs = SH.fsdp_axes(mesh)
+        size = int(np.prod([mesh.shape[a] for a in fs]))
+        if nd >= 2 and leaf.shape[1] == B and B % size == 0:
+            return NamedSharding(
+                mesh, P(None, fs if len(fs) > 1 else fs[0],
+                        *([None] * (nd - 2))))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(p, l) for p, l in flat])
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: ShapeConfig):
+    B, S = shape.global_batch, shape.seq_len
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    Ft = cfg.frontend_tokens
+    batch = {}
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = SDS((B, 4096, cfg.d_model), dt)
+        batch["tokens"] = _tok((B, S))
+    elif cfg.frontend != "none":
+        batch["embeds"] = SDS((B, Ft, cfg.d_model), dt)
+        batch["tokens"] = _tok((B, S - Ft))
+        if cfg.rope_kind == "mrope":
+            batch["positions"] = _tok((B, S, 3))
+    else:
+        batch["tokens"] = _tok((B, S))
+    return batch
+
+
+def abstract_params(cfg: ModelConfig, param_dtype: str):
+    shapes = jax.eval_shape(
+        lambda: MR.init_params(jax.random.PRNGKey(0), cfg))
+    if param_dtype == "bfloat16":
+        shapes = jax.tree.map(
+            lambda s: SDS(s.shape, jnp.bfloat16), shapes)
+    return shapes

@@ -1,0 +1,107 @@
+"""End-to-end training driver (runs for real on CPU with smoke configs;
+lowers for the production mesh via dryrun.py).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+        --steps 50 [--probes obj.json ...] [--shm /dev/shm/bpftime]
+
+Integration points exercised here (the paper's workflow, §3.2):
+  * probes attach/detach between steps WITHOUT restarting training —
+    attach_epoch changes re-jit the step, state carries over;
+  * a shm control plane lets an external daemon inject programs live;
+  * per-step syscalls (data fetch / checkpoint / step begin+end) run their
+    eBPF hooks; filter programs can veto batches or checkpoints.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
+                 runtime=None, shm_dir: str | None = None,
+                 ckpt_dir: str | None = None, save_every: int = 0,
+                 probe_mode: str = "scan", seq_len: int = 64,
+                 batch: int = 8, microbatch: int = 0, log_every: int = 10,
+                 on_step=None):
+    from repro.configs import registry
+    from repro.configs.base import ShapeConfig, TrainConfig
+    from repro.data.pipeline import SyntheticDataset
+    from repro.train.train_step import init_train_state, make_train_step
+    from repro.ckpt import checkpoint as CK
+
+    cfg = registry.smoke(arch) if smoke else registry.get(arch)
+    tcfg = TrainConfig(microbatch=microbatch, remat=True, warmup=10,
+                       total_steps=steps)
+    shape = ShapeConfig("driver", seq_len, batch, "train")
+    if runtime is not None and shm_dir:
+        runtime.setup_shm(shm_dir)
+
+    data = SyntheticDataset(cfg, shape, tcfg, runtime=runtime)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg, runtime)
+
+    jit_cache: dict[int, object] = {}
+
+    def get_step_fn():
+        epoch = runtime.attach_epoch if runtime else 0
+        if epoch not in jit_cache:
+            jit_cache[epoch] = jax.jit(
+                make_train_step(cfg, tcfg, runtime, probe_mode=probe_mode))
+        return jit_cache[epoch]
+
+    history = []
+    t0 = time.time()
+    while int(state["step"]) < steps:
+        if runtime is not None:
+            runtime.poll_control()          # daemon injection point
+            runtime.syscalls.invoke("sys_step_begin", [int(state["step"])],
+                                    impl=lambda: None)
+        batch_np = data.next()
+        if batch_np is None:
+            continue                         # vetoed by eBPF filter
+        step_fn = get_step_fn()              # re-jits only on attach change
+        state, metrics = step_fn(state, batch_np)
+        history.append({k: float(np.asarray(v)) for k, v in metrics.items()})
+        s = int(state["step"])
+        if runtime is not None:
+            runtime.publish(state["maps"])
+            runtime.syscalls.invoke(
+                "sys_step_end", [s, int(1e6 * (time.time() - t0))],
+                impl=lambda: None)
+        if ckpt_dir and save_every and s % save_every == 0:
+            CK.save(ckpt_dir, s, state, runtime=runtime, blocking=True)
+        if on_step is not None:
+            on_step(s, state, metrics)
+        if log_every and s % log_every == 0:
+            print(f"step {s}: loss={history[-1]['loss']:.4f} "
+                  f"gnorm={history[-1]['grad_norm']:.3f} "
+                  f"({(time.time() - t0) / max(s, 1):.2f}s/step)")
+    return state, history
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--shm")
+    ap.add_argument("--ckpt")
+    ap.add_argument("--save-every", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    from repro.core.runtime import BpftimeRuntime
+    rt = BpftimeRuntime() if args.shm else None
+    state, hist = run_training(
+        args.arch, steps=args.steps, smoke=args.smoke, runtime=rt,
+        shm_dir=args.shm, ckpt_dir=args.ckpt, save_every=args.save_every,
+        batch=args.batch, seq_len=args.seq)
+    print(f"final loss {hist[-1]['loss']:.4f} after {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

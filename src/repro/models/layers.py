@@ -1,0 +1,339 @@
+"""Core model layers: norms, RoPE/M-RoPE, GQA attention (chunked
+flash-style for long sequences, grouped-head einsums — KV is never
+materialized repeated), SwiGLU/GeLU MLP, embeddings.
+
+Probe sites (`E.probe_site`) are the uprobe attach points — zero-cost when
+nothing is attached (DESIGN.md §2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import events as E
+from repro.dist.sharding import constrain
+
+F32 = jnp.float32
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# --------------------------------------------------------------------------
+# norms
+# --------------------------------------------------------------------------
+
+def init_norm(key, cfg: ModelConfig, d=None):
+    d = d or cfg.d_model
+    p = {"scale": jnp.ones((d,), F32)}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), F32)
+    return p
+
+
+def apply_norm(p, x, cfg: ModelConfig):
+    xf = x.astype(F32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * lax.rsqrt(var + cfg.norm_eps)
+        y = y * p["scale"] + p["bias"]
+    else:
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * lax.rsqrt(ms + cfg.norm_eps) * p["scale"]
+    return y.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# rotary embeddings (RoPE + M-RoPE)
+# --------------------------------------------------------------------------
+
+def _rope_freqs(cfg: ModelConfig):
+    hd = cfg.hd
+    exponent = jnp.arange(0, hd, 2, dtype=F32) / hd
+    return 1.0 / (cfg.rope_theta ** exponent)          # [hd/2]
+
+
+def apply_rope(x, positions, cfg: ModelConfig):
+    """x: [..., S, H, hd]; positions: [..., S] (i32) or [..., S, 3] for
+    M-RoPE (temporal/height/width sections, Qwen2-VL)."""
+    hd = cfg.hd
+    freqs = _rope_freqs(cfg)                            # [hd/2]
+    if cfg.rope_kind == "mrope":
+        assert positions.ndim == x.ndim - 1, "mrope needs [..., S, 3] ids"
+        sec = cfg.mrope_sections
+        idx = jnp.concatenate([
+            jnp.full((sec[0],), 0, jnp.int32),
+            jnp.full((sec[1],), 1, jnp.int32),
+            jnp.full((sec[2],), 2, jnp.int32)])         # [hd/2]
+        pos = jnp.take_along_axis(
+            positions.astype(F32),
+            jnp.broadcast_to(idx, positions.shape[:-1] + (hd // 2,)).astype(jnp.int32),
+            axis=-1)                                    # [..., S, hd/2]
+        ang = pos * freqs
+    else:
+        ang = positions.astype(F32)[..., None] * freqs  # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                    # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(F32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# attention (GQA, grouped-head; flash-chunked for long sequences)
+# --------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig):
+    D, H, KH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    p = {
+        "wq": (jax.random.normal(k1, (D, H * hd), F32) * s),
+        "wk": (jax.random.normal(k2, (D, KH * hd), F32) * s),
+        "wv": (jax.random.normal(k3, (D, KH * hd), F32) * s),
+        "wo": (jax.random.normal(k4, (H * hd, D), F32) * s),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), F32)
+        p["bk"] = jnp.zeros((KH * hd,), F32)
+        p["bv"] = jnp.zeros((KH * hd,), F32)
+    return p
+
+
+def _qkv(p, x, cfg: ModelConfig):
+    B, S, D = x.shape
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.hd
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    # Head-parallel attention when H divides the model axis; otherwise fall
+    # back to SEQUENCE-parallel q/k/v (k/v stay small under GQA and get
+    # all-gathered cheaply) — §Perf iteration 4 (opt-in via
+    # REPRO_SEQ_PAR_ATTN=1; baseline keeps the replicated-head fallback):
+    # without this, GQA models with H % model != 0 all-gather full
+    # activations every layer.
+    import os
+    from repro.dist.sharding import active_mesh
+    mesh = active_mesh()
+    seq_par_enabled = os.environ.get("REPRO_SEQ_PAR_ATTN", "0") == "1"
+    head_par = (mesh is None or H % mesh.shape.get("model", 1) == 0
+                or not seq_par_enabled)
+    if head_par:
+        q = constrain(q.reshape(B, S, H, hd), "batch", None, "model", None)
+        k = constrain(k.reshape(B, S, KH, hd), "batch", None, "model", None)
+        v = constrain(v.reshape(B, S, KH, hd), "batch", None, "model", None)
+    else:
+        q = constrain(q.reshape(B, S, H, hd), "batch", "model", None, None)
+        k = constrain(k.reshape(B, S, KH, hd), "batch", "model", None, None)
+        v = constrain(v.reshape(B, S, KH, hd), "batch", "model", None, None)
+    return q, k, v
+
+
+def _grouped(q, KH):
+    """[B, S, H, hd] -> [B, S, KH, R, hd]"""
+    B, S, H, hd = q.shape
+    return q.reshape(B, S, KH, H // KH, hd)
+
+
+def full_attention(q, k, v, *, causal, q_offset=0, kv_len=None):
+    """Small-S / decode path. q: [B,Sq,H,hd]; k,v: [B,Skv,KH,hd].
+    kv_len: [B] valid cache length mask (decode)."""
+    B, Sq, H, hd = q.shape
+    KH = k.shape[2]
+    qg = _grouped(q, KH)
+    s = jnp.einsum("bqkrh,bskh->bkrqs", qg.astype(F32), k.astype(F32))
+    s = s / math.sqrt(hd)
+    Skv = k.shape[1]
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Skv)[None, :]
+        s = jnp.where(qpos >= kpos, s, -jnp.inf)
+    if kv_len is not None:
+        mask = jnp.arange(Skv)[None, :] < kv_len[:, None]       # [B, Skv]
+        s = jnp.where(mask[:, None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkrqs,bskh->bqkrh", p, v.astype(F32))
+    return o.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, q_chunk=2048, kv_chunk=2048):
+    """Chunked online-softmax attention (the JAX flash formulation):
+    outer scan over q chunks, inner scan over kv chunks, f32 accumulators.
+    Never materializes [Sq, Skv]. The whole body is tagged 'flash_interior'
+    (jax.named_scope): on the TPU target the Pallas kernel
+    (kernels/flash_attention.py) executes this computation with the interior
+    resident in VMEM, so the dry-run analyzer buckets these HBM bytes
+    separately (see hlo_cost.HloCost.bytes_flash_interior)."""
+    with jax.named_scope("flash_interior"):
+        return _flash_attention_impl(q, k, v, causal=causal,
+                                     q_chunk=q_chunk, kv_chunk=kv_chunk)
+
+
+def _flash_attention_impl(q, k, v, *, causal, q_chunk, kv_chunk):
+    B, Sq, H, hd = q.shape
+    KH = k.shape[2]
+    Skv = k.shape[1]
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    assert Sq % q_chunk == 0 and Skv % kv_chunk == 0
+    nq, nk = Sq // q_chunk, Skv // kv_chunk
+    scale = 1.0 / math.sqrt(hd)
+
+    qg = _grouped(q, KH).reshape(B, nq, q_chunk, KH, H // KH, hd)
+    kc = k.reshape(B, nk, kv_chunk, KH, hd)
+    vc = v.reshape(B, nk, kv_chunk, KH, hd)
+    qpos_c = jnp.arange(q_chunk)
+    kpos_c = jnp.arange(kv_chunk)
+
+    def q_step(_, qi_i):
+        qi, i = qi_i                      # [B, Lq, KH, R, hd], scalar
+        R = qi.shape[3]
+        m0 = jnp.full((B, KH, R, q_chunk), -jnp.inf, F32)
+        l0 = jnp.zeros((B, KH, R, q_chunk), F32)
+        a0 = jnp.zeros((B, q_chunk, KH, R, hd), F32)
+
+        def kv_step(carry, kv_j):
+            m, l, acc = carry
+            kj, vj, j = kv_j
+            s = jnp.einsum("bqkrh,bskh->bkrqs", qi.astype(F32),
+                           kj.astype(F32)) * scale
+            if causal:
+                qp = i * q_chunk + qpos_c[:, None]
+                kp = j * kv_chunk + kpos_c[None, :]
+                s = jnp.where(qp >= kp, s, -jnp.inf)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard fully-masked rows (exp(-inf - -inf))
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(jnp.isneginf(s), 0.0, p)
+            corr = jnp.exp(jnp.where(jnp.isneginf(m), m_new, m) - m_safe)
+            corr = jnp.where(jnp.isneginf(m), 0.0, corr)
+            l = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bkrqs,bskh->bqkrh", p, vj.astype(F32))
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] + pv
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = lax.scan(
+            kv_step, (m0, l0, a0),
+            (kc.transpose(1, 0, 2, 3, 4), vc.transpose(1, 0, 2, 3, 4),
+             jnp.arange(nk)))
+        l = jnp.maximum(l, 1e-20)
+        out = acc / l.transpose(0, 3, 1, 2)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = lax.scan(q_step, None,
+                       (qg.transpose(1, 0, 2, 3, 4, 5), jnp.arange(nq)))
+    # outs: [nq, B, Lq, KH, R, hd]
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq, H, hd)
+    return out
+
+
+FLASH_THRESHOLD = 8192
+
+
+def attention_block(p, x, positions, cfg: ModelConfig, *, cache=None,
+                    cache_pos=None, cross_kv=None):
+    """Full attention sublayer. Modes:
+      train/prefill: cache=None (prefill returns fresh kv for caching)
+      decode: cache=(k,v) [B,Smax,KH,hd], cache_pos [B] current length
+      cross:  cross_kv=(k,v) precomputed from encoder (no rope)
+    Returns (out, new_cache_kv)."""
+    B, S, D = x.shape
+    if cross_kv is not None:
+        H, hd = cfg.num_heads, cfg.hd
+        q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, hd)
+        k, v = cross_kv
+        o = full_attention(q, k, v, causal=False)
+        out = (o.reshape(B, S, H * hd) @ p["wo"].astype(x.dtype))
+        return out, None
+
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.rope_kind != "none":
+        q = apply_rope(q, positions, cfg)
+        k = apply_rope(k, positions, cfg)
+
+    if cache is not None:
+        ck, cv = cache
+        # decode: write k/v at each row's cache_pos
+        ck = jax.vmap(lambda c, u, i: lax.dynamic_update_slice_in_dim(
+            c, u, i, axis=0))(ck, k.astype(ck.dtype), cache_pos)
+        cv = jax.vmap(lambda c, u, i: lax.dynamic_update_slice_in_dim(
+            c, u, i, axis=0))(cv, v.astype(cv.dtype), cache_pos)
+        o = full_attention(q, ck, cv, causal=False,
+                           kv_len=cache_pos + S)
+        out = (o.reshape(B, S, cfg.num_heads * cfg.hd)
+               @ p["wo"].astype(x.dtype))
+        return out, (ck, cv)
+
+    if S > FLASH_THRESHOLD:
+        o = flash_attention(q, k, v, causal=True)
+    else:
+        o = full_attention(q, k, v, causal=True) if S <= 2048 else \
+            flash_attention(q, k, v, causal=True,
+                            q_chunk=min(2048, S), kv_chunk=min(2048, S))
+    out = o.reshape(B, S, cfg.num_heads * cfg.hd) @ p["wo"].astype(x.dtype)
+    return out, (k, v)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_ff=None):
+    D, Fh = cfg.d_model, (d_ff or cfg.d_ff)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(D)
+    p = {"wi": jax.random.normal(k1, (D, Fh), F32) * s,
+         "wo": jax.random.normal(k3, (Fh, D), F32) / math.sqrt(Fh)}
+    if cfg.act == "swiglu":
+        p["wg"] = jax.random.normal(k2, (D, Fh), F32) * s
+    return p
+
+
+def apply_mlp(p, x, cfg: ModelConfig):
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    h = constrain(h, "batch", None, "model")
+    if cfg.act == "swiglu":
+        g = x @ p["wg"].astype(dt)
+        g = constrain(g, "batch", None, "model")
+        h = jax.nn.silu(g.astype(F32)).astype(dt) * h
+    else:
+        h = jax.nn.gelu(h.astype(F32)).astype(dt)
+    return h @ p["wo"].astype(dt)
+
+
+# --------------------------------------------------------------------------
+# embeddings / head
+# --------------------------------------------------------------------------
+
+def init_embedding(key, cfg: ModelConfig):
+    p = {"embedding": jax.random.normal(
+        key, (cfg.padded_vocab, cfg.d_model), F32) * 0.02}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = jax.random.normal(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.padded_vocab),
+            F32) * 0.02
+    return p
+
+
+def embed(p, tokens, cfg: ModelConfig):
+    return p["embedding"].astype(cdtype(cfg))[tokens]
+
+
+def unembed(p, x, cfg: ModelConfig):
+    w = (p["embedding"].T if cfg.tie_embeddings else p["lm_head"])
+    return x @ w.astype(x.dtype)

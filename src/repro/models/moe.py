@@ -1,0 +1,108 @@
+"""Mixture-of-Experts layer: top-k routing with sort-based capacity dispatch.
+
+Baseline formulation ("gspmd" path): global einsums/scatters with experts
+sharded over 'model' and dispatch capacity over 'data'; GSPMD inserts the
+collectives. The explicit expert-parallel all_to_all path (shard_map) is the
+§Perf hillclimb target and lives in repro/dist/expert_parallel.py.
+
+Router probe sites make this the flagship bpftime use case: per-expert load
+and overflow-drop counters via eBPF maps (examples/moe_balance.py).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import events as E
+from repro.dist.sharding import constrain
+
+F32 = jnp.float32
+
+
+def init_moe(key, cfg: ModelConfig):
+    D, Fh, Ex = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    return {
+        "router": jax.random.normal(k1, (D, Ex), F32) * s,
+        "w_in": jax.random.normal(k2, (Ex, D, Fh), F32) * s,
+        "w_gate": jax.random.normal(k3, (Ex, D, Fh), F32) * s,
+        "w_out": jax.random.normal(k4, (Ex, Fh, D), F32) / math.sqrt(Fh),
+    }
+
+
+def capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(cfg.capacity_factor * tokens * cfg.experts_per_token
+            / cfg.num_experts)
+    return max(8, -(-c // 8) * 8)   # pad to 8 for layout friendliness
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x: [B, S, D] -> [B, S, D]. Sort-based dropping dispatch."""
+    B, S, D = x.shape
+    T = B * S
+    k = cfg.experts_per_token
+    Ex = cfg.num_experts
+    dt = x.dtype
+    xt = x.reshape(T, D)
+
+    logits = (xt @ p["router"].astype(dt)).astype(F32)      # [T, E]
+    logits = E.probe_site("moe.router", logits)
+    gates = jax.nn.softmax(logits, axis=-1)
+    gvals, gids = jax.lax.top_k(gates, k)                   # [T, k]
+    gvals = gvals / jnp.maximum(gvals.sum(-1, keepdims=True), 1e-9)
+
+    TK = T * k
+    flat_ids = gids.reshape(TK)
+    sort_idx = jnp.argsort(flat_ids)                        # stable
+    sorted_eids = flat_ids[sort_idx]                        # [TK]
+    # position within each expert's run of the sorted array
+    first_idx = jnp.searchsorted(sorted_eids, sorted_eids, side="left")
+    pos = jnp.arange(TK, dtype=jnp.int32) - first_idx.astype(jnp.int32)
+    C = capacity(cfg, T)
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C)                         # slot C = trash
+    tok_idx = (sort_idx // k).astype(jnp.int32)
+
+    # dispatch: [E, C+1, D] — experts over 'model' (EP), capacity over 'data'
+    disp = jnp.zeros((Ex, C + 1, D), dt)
+    disp = disp.at[sorted_eids, pos_c].set(xt[tok_idx].astype(dt))
+    disp = constrain(disp[:, :C, :], "model", "data", None)
+
+    # expert FFN (swiglu)
+    h = jnp.einsum("ecd,edf->ecf", disp, p["w_in"].astype(dt))
+    h = constrain(h, "model", "data", None)
+    g = jnp.einsum("ecd,edf->ecf", disp, p["w_gate"].astype(dt))
+    g = constrain(g, "model", "data", None)
+    h = jax.nn.silu(g.astype(F32)).astype(dt) * h
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(dt))
+    out_e = constrain(out_e, "model", "data", None)
+
+    # combine
+    out_e = jnp.concatenate(
+        [out_e, jnp.zeros((Ex, 1, D), dt)], axis=1)         # trash row
+    contrib = out_e[sorted_eids, pos_c]                     # [TK, D]
+    w = (gvals.reshape(TK)[sort_idx] * keep).astype(dt)
+    out = jnp.zeros((T, D), dt).at[tok_idx].add(contrib * w[:, None])
+
+    # router health stats for probes: per-expert load + drops
+    load = jnp.sum(jax.nn.one_hot(gids.reshape(-1), Ex, dtype=F32), axis=0)
+    E.probe_site("moe.load", load)
+    drops = jnp.sum((~keep).astype(F32))
+    E.probe_site("moe.drops", drops.reshape(1))
+    return out.reshape(B, S, D)
+
+
+def aux_load_balance_loss(p, x, cfg: ModelConfig):
+    """Switch-style load-balance auxiliary loss (optional, used in train)."""
+    B, S, D = x.shape
+    xt = x.reshape(B * S, D)
+    logits = (xt @ p["router"].astype(x.dtype)).astype(F32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    ids = jnp.argmax(gates, axis=-1)
+    me = jnp.mean(gates, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(ids, cfg.num_experts, dtype=F32), axis=0)
+    return cfg.num_experts * jnp.sum(me * ce)

@@ -1,0 +1,201 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) block.
+
+Training/prefill uses the chunked dual form: intra-chunk attention-like
+matmuls + inter-chunk state recurrence (a lax.scan over chunk states) — all
+MXU-friendly contractions, the TPU-native shape of the SSD algorithm.
+Decode uses the O(1) recurrent step on a carried (conv, ssm) state cache.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.dist.sharding import constrain
+
+F32 = jnp.float32
+
+
+def init_mamba(key, cfg: ModelConfig):
+    D = cfg.d_model
+    di = cfg.d_inner()
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    nh = cfg.ssm_heads()
+    K = cfg.ssm_conv
+    proj_out = 2 * di + 2 * G * N + nh    # z, x, B, C, dt
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(D)
+    return {
+        "in_proj": jax.random.normal(k1, (D, proj_out), F32) * s,
+        "conv_w": jax.random.normal(k2, (K, di + 2 * G * N), F32) * 0.1,
+        "conv_b": jnp.zeros((di + 2 * G * N,), F32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=F32)),
+        "D": jnp.ones((nh,), F32),
+        "dt_bias": jnp.full((nh,), math.log(math.e - 1), F32),
+        "out_proj": jax.random.normal(k4, (di, D), F32) / math.sqrt(di),
+        "norm_scale": jnp.ones((di,), F32),
+    }
+
+
+def _split_proj(zxbcdt, cfg):
+    di = cfg.d_inner()
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    z = zxbcdt[..., :di]
+    xb = zxbcdt[..., di:2 * di]
+    Bv = zxbcdt[..., 2 * di:2 * di + G * N]
+    Cv = zxbcdt[..., 2 * di + G * N:2 * di + 2 * G * N]
+    dt = zxbcdt[..., 2 * di + 2 * G * N:]
+    return z, xb, Bv, Cv, dt
+
+
+def _causal_conv(x, w, b, state=None):
+    """depthwise causal conv. x: [B, S, C]; w: [K, C]. state: [B, K-1, C]
+    (decode). Returns (y, new_state)."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)                   # [B, S+K-1, C]
+    y = sum(xp[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+            for i in range(K))
+    y = y + b.astype(x.dtype)
+    new_state = xp[:, -(K - 1):, :]
+    return jax.nn.silu(y.astype(F32)).astype(x.dtype), new_state
+
+
+def _segsum(log_a):
+    """log_a: [..., L] -> cumulative decay matrix [..., L, L]:
+    out[i, j] = sum(log_a[j+1..i]) for j < i, -inf above diagonal."""
+    L = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]               # sum (j, i]
+    ii = jnp.arange(L)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(xh, dt, A, Bv, Cv, cfg: ModelConfig):
+    """SSD dual form.
+    xh: [B, S, H, P]; dt: [B, S, H] (post-softplus); A: [H] (negative);
+    Bv, Cv: [B, S, G, N]. Returns y [B, S, H, P]."""
+    Bsz, S, H, P = xh.shape
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    L = min(cfg.ssm_chunk, S)
+    assert S % L == 0
+    nc = S // L
+    rep = H // G
+
+    xc = xh.reshape(Bsz, nc, L, H, P)
+    dtc = dt.reshape(Bsz, nc, L, H)
+    Bc = Bv.reshape(Bsz, nc, L, G, N)
+    Cc = Cv.reshape(Bsz, nc, L, G, N)
+    dA = dtc * A                                             # [B, nc, L, H]
+    dA_cs = jnp.cumsum(dA, axis=2)                           # within chunk
+
+    # ---- intra-chunk (the "attention" quadrant)
+    Lmat = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))        # [B,nc,H,L,L]
+    # scores: C_i . B_j  -> [B, nc, H, L, L]
+    CB = jnp.einsum("bclgn,bcsgn->bcgls", Cc.astype(F32), Bc.astype(F32))
+    CB = jnp.repeat(CB, rep, axis=2)                          # G -> H
+    scores = CB * Lmat * dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]
+    y_diag = jnp.einsum("bchls,bcshp->bclhp", scores, xc.astype(F32))
+
+    # ---- chunk states: h_c = sum_s exp(dA_cs[L-1] - dA_cs[s]) dt_s B_s x_s
+    decay_to_end = jnp.exp(dA_cs[:, :, -1:, :] - dA_cs)       # [B,nc,L,H]
+    w = (dtc * decay_to_end).astype(F32)                      # [B,nc,L,H]
+    Brep = jnp.repeat(Bc, rep, axis=3)                        # [B,nc,L,H,N]
+    states = jnp.einsum("bclh,bclhn,bclhp->bchpn",
+                        w, Brep.astype(F32), xc.astype(F32))
+
+    # ---- inter-chunk recurrence over nc (sequential scan)
+    chunk_decay = jnp.exp(dA_cs[:, :, -1, :])                 # [B,nc,H]
+
+    def step(h, inp):
+        st, dec = inp                                         # [B,H,P,N],[B,H]
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                       # emit PREVIOUS
+
+    h0 = jnp.zeros((Bsz, H, P, N), F32)
+    h_final, h_prev = lax.scan(step, h0,
+                               (states.transpose(1, 0, 2, 3, 4),
+                                chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)                  # [B,nc,H,P,N]
+
+    # ---- inter-chunk output: y_off = C_l . (decay_in * h_prev)
+    decay_in = jnp.exp(dA_cs)                                 # [B,nc,L,H]
+    Crep = jnp.repeat(Cc, rep, axis=3)                        # [B,nc,L,H,N]
+    y_off = jnp.einsum("bclhn,bchpn,bclh->bclhp",
+                       Crep.astype(F32), h_prev, decay_in)
+    y = (y_diag + y_off).reshape(Bsz, S, H, P)
+    return y.astype(xh.dtype), h_final
+
+
+def apply_mamba(p, x, cfg: ModelConfig, *, cache=None, return_state=False):
+    """x: [B, S, D]. cache: None (train/prefill) or dict(conv, ssm) for
+    decode (S must be 1). return_state=True (prefill) returns the final
+    (conv, ssm) state as the new cache. Returns (y [B,S,D], new_cache)."""
+    Bsz, S, D = x.shape
+    dt_ = x.dtype
+    di = cfg.d_inner()
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    H, P = cfg.ssm_heads(), cfg.ssm_headdim
+
+    zxbcdt = x @ p["in_proj"].astype(dt_)
+    zxbcdt = constrain(zxbcdt, "batch", None, None)
+    z, xb, Bv, Cv, dtr = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xb, Bv, Cv], axis=-1)
+
+    A = -jnp.exp(p["A_log"])                                  # [H], negative
+    if cache is None:
+        conv_out, conv_state = _causal_conv(conv_in, p["conv_w"],
+                                            p["conv_b"])
+        xb = conv_out[..., :di]
+        Bv = conv_out[..., di:di + G * N].reshape(Bsz, S, G, N)
+        Cv = conv_out[..., di + G * N:].reshape(Bsz, S, G, N)
+        dt = jax.nn.softplus(dtr.astype(F32) + p["dt_bias"])  # [B,S,H]
+        xh = xb.reshape(Bsz, S, H, P)
+        y, h_final = ssd_chunked(xh, dt, A, Bv, Cv, cfg)
+        y = y + xh * p["D"].astype(dt_)[None, None, :, None]   # skip path
+        new_cache = ({"conv": conv_state.astype(dt_), "ssm": h_final}
+                     if return_state else None)
+    else:
+        conv_out, conv_state = _causal_conv(conv_in, p["conv_w"],
+                                            p["conv_b"], cache["conv"])
+        xb = conv_out[..., :di]
+        Bv = conv_out[..., di:di + G * N].reshape(Bsz, S, G, N)
+        Cv = conv_out[..., di + G * N:].reshape(Bsz, S, G, N)
+        dt = jax.nn.softplus(dtr.astype(F32) + p["dt_bias"])  # [B,1,H]
+        xh = xb.reshape(Bsz, S, H, P)
+        # recurrent step (S == 1)
+        dA = jnp.exp(dt[:, 0] * A)                            # [B,H]
+        Brep = jnp.repeat(Bv[:, 0], H // G, axis=1)           # [B,H,N]
+        Crep = jnp.repeat(Cv[:, 0], H // G, axis=1)
+        h = cache["ssm"]                                      # [B,H,P,N] f32
+        upd = (dt[:, 0, :, None, None] * xh[:, 0].astype(F32)[..., None]
+               * Brep.astype(F32)[:, :, None, :])
+        h = h * dA[..., None, None] + upd
+        y1 = jnp.einsum("bhpn,bhn->bhp", h, Crep.astype(F32))
+        y = (y1[:, None].astype(dt_)
+             + xh * p["D"].astype(dt_)[None, None, :, None])
+        new_cache = {"conv": conv_state.astype(dt_), "ssm": h}
+
+    # gated RMSNorm (mamba2's norm-before-out_proj)
+    yf = y.reshape(Bsz, S, di).astype(F32)
+    yf = yf * jax.nn.silu(z.astype(F32))
+    ms = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    yf = yf * lax.rsqrt(ms + 1e-5) * p["norm_scale"]
+    out = yf.astype(dt_) @ p["out_proj"].astype(dt_)
+    return out, new_cache
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype):
+    di = cfg.d_inner()
+    G, N = cfg.ssm_ngroups, cfg.ssm_state
+    return {
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * G * N), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads(), cfg.ssm_headdim, N), F32),
+    }

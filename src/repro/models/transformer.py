@@ -1,0 +1,229 @@
+"""Generic decoder-only stacked-block model.
+
+One implementation covers dense / MoE / SSM (mamba2) / hybrid (jamba) / VLM
+via the config's per-layer pattern: layer i = mixer(attn|mamba) + ffn
+(dense|moe|none). Layers are grouped into SUPERBLOCKS (cfg.superblock
+consecutive layers — the repeating heterogeneous unit); parameters are
+stacked across superblocks and the stack is a lax.scan (probed_scan: probe
+events flow out as stacked ys; remat wraps the superblock).
+
+Probe sites: block (uprobe/uretprobe), attn.out, ffn.out, moe.router,
+moe.load, moe.drops, embed.out, logits.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.core import events as E
+from repro.core.events import probe_site
+from repro.dist.sharding import constrain
+from . import layers as L, moe as MOE, ssm as SSM
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def _init_superblock(key, cfg: ModelConfig):
+    blocks = []
+    for j in range(cfg.superblock):
+        kj = jax.random.fold_in(key, j)
+        kind, ffn = cfg.block_kind(j), cfg.ffn_kind(j)
+        p = {"norm1": L.init_norm(kj, cfg)}
+        if kind == "attn":
+            p["attn"] = L.init_attention(jax.random.fold_in(kj, 1), cfg)
+        else:
+            p["mamba"] = SSM.init_mamba(jax.random.fold_in(kj, 2), cfg)
+        if ffn != "none":
+            p["norm2"] = L.init_norm(jax.random.fold_in(kj, 3), cfg)
+            if ffn == "moe":
+                p["moe"] = MOE.init_moe(jax.random.fold_in(kj, 4), cfg)
+                if cfg.moe_shared:
+                    p["mlp_shared"] = L.init_mlp(
+                        jax.random.fold_in(kj, 6), cfg, d_ff=cfg.moe_d_ff)
+            else:
+                p["mlp"] = L.init_mlp(jax.random.fold_in(kj, 5), cfg)
+        blocks.append(p)
+    return {"blocks": blocks}
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    assert cfg.num_layers % cfg.superblock == 0, \
+        f"{cfg.name}: num_layers % superblock != 0"
+    n_super = cfg.num_layers // cfg.superblock
+    k_emb, k_stack, k_fin = jax.random.split(key, 3)
+    keys = jax.random.split(k_stack, n_super)
+    stack = jax.vmap(lambda k: _init_superblock(k, cfg))(keys)
+    return {
+        "embed": L.init_embedding(k_emb, cfg),
+        "stack": stack,
+        "final_norm": L.init_norm(k_fin, cfg),
+    }
+
+
+# --------------------------------------------------------------------------
+# cache
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int, dtype) -> dict:
+    n_super = cfg.num_layers // cfg.superblock
+    blocks = []
+    for j in range(cfg.superblock):
+        if cfg.block_kind(j) == "attn":
+            kv_shape = (n_super, batch, max_seq, cfg.num_kv_heads, cfg.hd)
+            blocks.append({"k": jnp.zeros(kv_shape, dtype),
+                           "v": jnp.zeros(kv_shape, dtype)})
+        else:
+            c = SSM.init_mamba_cache(cfg, batch, dtype)
+            blocks.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_super,) + a.shape), c))
+    return {"blocks": blocks, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def _moe_dispatch(p, x, cfg: ModelConfig):
+    """GSPMD sort-based MoE by default; explicit shard_map expert
+    parallelism with REPRO_MOE_EP=1 (requires an active mesh whose 'model'
+    axis divides num_experts) — §Perf hillclimb 1."""
+    import os
+    from repro.dist.sharding import active_mesh
+    mesh = active_mesh()
+    if (os.environ.get("REPRO_MOE_EP", "0") == "1" and mesh is not None
+            and "model" in mesh.axis_names
+            and cfg.num_experts % mesh.shape["model"] == 0):
+        from repro.dist.expert_parallel import apply_moe_ep
+        return apply_moe_ep(p, x, cfg)
+    return MOE.apply_moe(p, x, cfg)
+
+
+# --------------------------------------------------------------------------
+# superblock forward
+# --------------------------------------------------------------------------
+
+def _superblock_fwd(p_sb, x, cache_sb, positions, cfg: ModelConfig,
+                    mode: str, cache_pos):
+    import os
+    sp_residual = os.environ.get("REPRO_SP_RESIDUAL", "0") == "1"
+    new_cache = []
+    for j in range(cfg.superblock):
+        kind, ffn = cfg.block_kind(j), cfg.ffn_kind(j)
+        p = p_sb["blocks"][j]
+        # Megatron-SP (opt-in): residual stream sequence-sharded over
+        # 'model' between blocks — norms run on 1/TP of the tokens and the
+        # TP boundary becomes reduce-scatter/all-gather (§Perf iteration 5).
+        if sp_residual and mode == "train":
+            x = constrain(x, "batch", "model", None)
+        else:
+            x = constrain(x, "batch", None, None)
+        x = probe_site("block", x, kind=E.KIND_ENTRY)
+        h = L.apply_norm(p["norm1"], x, cfg)
+        if kind == "attn":
+            c = cache_sb["blocks"][j] if cache_sb is not None else None
+            if mode == "train":
+                out, _ = L.attention_block(p["attn"], h, positions, cfg)
+                new_cache.append(None)
+            elif mode == "prefill":
+                out, kv = L.attention_block(p["attn"], h, positions, cfg)
+                k_new, v_new = kv
+                ck = lax.dynamic_update_slice_in_dim(
+                    c["k"], k_new.astype(c["k"].dtype), 0, axis=1)
+                cv = lax.dynamic_update_slice_in_dim(
+                    c["v"], v_new.astype(c["v"].dtype), 0, axis=1)
+                new_cache.append({"k": ck, "v": cv})
+            else:  # decode
+                out, kv = L.attention_block(p["attn"], h, positions, cfg,
+                                            cache=(c["k"], c["v"]),
+                                            cache_pos=cache_pos)
+                new_cache.append({"k": kv[0], "v": kv[1]})
+        else:
+            c = cache_sb["blocks"][j] if cache_sb is not None else None
+            if mode == "train":
+                out, _ = SSM.apply_mamba(p["mamba"], h, cfg)
+                new_cache.append(None)
+            elif mode == "prefill":
+                out, mc = SSM.apply_mamba(p["mamba"], h, cfg, cache=None,
+                                          return_state=True)
+                new_cache.append(mc)
+            else:
+                out, mc = SSM.apply_mamba(p["mamba"], h, cfg, cache=c)
+                new_cache.append(mc)
+        out = probe_site("attn.out" if kind == "attn" else "ssm.out", out)
+        x = x + out
+
+        if ffn != "none":
+            h2 = L.apply_norm(p["norm2"], x, cfg)
+            if ffn == "moe":
+                f = _moe_dispatch(p["moe"], h2, cfg)
+                if cfg.moe_shared:
+                    f = f + L.apply_mlp(p["mlp_shared"], h2, cfg)
+            else:
+                f = L.apply_mlp(p["mlp"], h2, cfg)
+            f = probe_site("ffn.out", f)
+            x = x + f
+        x = probe_site("block", x, kind=E.KIND_EXIT)
+    return x, new_cache
+
+
+# --------------------------------------------------------------------------
+# full forward
+# --------------------------------------------------------------------------
+
+def forward(params, tokens, cfg: ModelConfig, *, embeds=None, positions=None,
+            cache=None, mode: str = "train", remat: bool = False):
+    """tokens: [B, S_text] i32; embeds: [B, S_front, D] modality stub
+    (prepended); positions: [B, S] (or [B, S, 3] for mrope; default iota).
+    Returns (logits f32 [B, S, V], new_cache | None)."""
+    x = L.embed(params["embed"], tokens, cfg)
+    if embeds is not None:
+        x = jnp.concatenate([embeds.astype(x.dtype), x], axis=1)
+    B, S, _ = x.shape
+    if positions is None:
+        if mode == "decode" and cache is not None:
+            positions = cache["pos"][:, None]                  # [B, 1]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32),
+                                         (B, S))
+        if cfg.rope_kind == "mrope":
+            positions = jnp.repeat(positions[..., None], 3, axis=-1)
+    x = constrain(x, "batch", None, None)
+    x = probe_site("embed.out", x)
+
+    cache_pos = cache["pos"] if (cache is not None and mode == "decode") \
+        else None
+    cache_blocks = cache if cache is not None else None
+
+    def body(carry, xs):
+        x = carry
+        p_sb, c_sb = xs
+        x, nc = _superblock_fwd(p_sb, x, c_sb, positions, cfg, mode,
+                                cache_pos)
+        return x, nc
+
+    n_super = cfg.num_layers // cfg.superblock
+    if cache_blocks is not None:
+        xs = (params["stack"], {"blocks": cache_blocks["blocks"]})
+    else:
+        xs = (params["stack"], None)
+
+    if xs[1] is None:
+        def body2(c, p_sb):
+            y, _ = body(c, (p_sb, None))
+            return y, None
+        x, _ = E.probed_scan(body2, x, params["stack"], remat=remat)
+        new_cache = None
+    else:
+        def body3(c, xs_):
+            return body(c, xs_)
+        x, new_blocks = E.probed_scan(body3, x, xs, remat=remat)
+        new_pos = cache["pos"] + (S if mode != "train" else 0)
+        new_cache = {"blocks": new_blocks, "pos": new_pos}
+
+    x = L.apply_norm(params["final_norm"], x, cfg)
+    logits = L.unembed(params["embed"], x, cfg).astype(F32)
+    logits = constrain(logits, "batch", None, "model")
+    logits = probe_site("logits", logits)
+    return logits, new_cache

@@ -1,0 +1,129 @@
+"""Optimizers (no optax in this container): AdamW and Adafactor.
+
+Adafactor (factored second moment, no momentum) is the default for the
+≥100B MoE configs — 2 fp32 moments on a 1T-param model do not fit a single
+v5e pod (see DESIGN.md hardware-adaptation notes and EXPERIMENTS.md
+§Dry-run memory table).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(F32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm):
+    n = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(F32) * scale).astype(g.dtype),
+                        grads), n
+
+
+def warmup_cosine(step, *, lr, warmup, total):
+    step = step.astype(F32)
+    warm = lr * step / jnp.maximum(warmup, 1)
+    t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = lr * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < warmup, warm, cos)
+
+
+# ----------------------------------------------------------------- AdamW
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, F32)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params)}
+
+
+def adamw_update(params, grads, opt, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, step=None):
+    t = (step + 1).astype(F32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(F32)
+        m2 = b1 * m + (1 - b1) * gf
+        v2 = b2 * v + (1 - b2) * gf * gf
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype), m2, v2
+
+    out = jax.tree.map(upd, params, grads, opt["m"], opt["v"])
+    new_p = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+    new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"m": new_m, "v": new_v}
+
+
+# --------------------------------------------------------------- Adafactor
+
+def _factored(shape):
+    return len(shape) >= 2
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], F32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], F32)}
+        return {"v": jnp.zeros(p.shape, F32)}
+    return {"f": jax.tree.map(init, params,
+                              is_leaf=lambda x: hasattr(x, "shape"))}
+
+
+def adafactor_update(params, grads, opt, lr, *, decay=0.8, eps=1e-30,
+                     weight_decay=0.0, clip_thresh=1.0, step=None):
+    t = (step + 1).astype(F32)
+    beta = 1.0 - t ** (-decay)
+
+    def upd(p, g, st):
+        gf = g.astype(F32)
+        g2 = gf * gf + eps
+        if _factored(p.shape):
+            vr = beta * st["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * st["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+            rfac = lax_rsqrt(vr / jnp.maximum(
+                jnp.mean(vr, axis=-1, keepdims=True), eps))
+            cfac = lax_rsqrt(vc)
+            u = gf * rfac[..., None] * cfac[..., None, :]
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = beta * st["v"] + (1 - beta) * g2
+            u = gf * lax_rsqrt(v)
+            new_st = {"v": v}
+        # update clipping (RMS <= clip_thresh)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms / clip_thresh)
+        delta = u + weight_decay * p.astype(F32)
+        return (p.astype(F32) - lr * delta).astype(p.dtype), new_st
+
+    is_state = lambda x: isinstance(x, dict) and ("vr" in x or "v" in x)
+    out = jax.tree.map(upd, params, grads, opt["f"], is_leaf=None)
+    # out mirrors params' structure with (p, st) tuples at leaves
+    new_p = jax.tree.map(lambda o: o[0],
+                         out, is_leaf=lambda x: isinstance(x, tuple))
+    new_f = jax.tree.map(lambda o: o[1],
+                         out, is_leaf=lambda x: isinstance(x, tuple))
+    return new_p, {"f": new_f}
+
+
+def lax_rsqrt(x):
+    return jax.lax.rsqrt(jnp.maximum(x, 1e-30))
+
+
+# ----------------------------------------------------------------- factory
+
+def make_optimizer(name: str):
+    if name == "adamw":
+        return adamw_init, adamw_update
+    if name == "adafactor":
+        return adafactor_init, adafactor_update
+    raise KeyError(name)

@@ -1,0 +1,114 @@
+"""Continuous-batching serve engine (host side).
+
+Fixed-slot batcher: B decode slots; finished/empty slots are refilled from
+the queue each iteration (prefill for one request at a time into its slot).
+Admission and eviction are framework syscalls, so eBPF filter programs can
+reject requests (rate limiting / policy — the paper's syscall filtering in
+the serving plane) and tracepoints can account per-request tokens.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry as MR
+from .steps import make_decode_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int = 16
+    out: list[int] = field(default_factory=list)
+    done: bool = False
+    rejected: bool = False
+
+
+class ServeEngine:
+    def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
+                 max_seq: int = 128, runtime=None, eos: int = -1):
+        self.params = params
+        self.cfg = cfg
+        self.slots = slots
+        self.max_seq = max_seq
+        self.runtime = runtime
+        self.eos = eos
+        self.cache = MR.make_cache(cfg, slots, max_seq, jnp.float32)
+        self.active: list[Request | None] = [None] * slots
+        self.maps = runtime.init_device_maps() if runtime else {}
+        self._decode = jax.jit(make_decode_step(cfg, runtime))
+        self.step_count = 0
+
+    # ------------------------------------------------------------- admission
+    def _admit(self, req: Request) -> bool:
+        if self.runtime is None:
+            return True
+        res = self.runtime.syscalls.invoke(
+            "sys_serve_admit", [req.rid, len(req.prompt), req.max_new],
+            impl=lambda: True)
+        if res.overridden:
+            req.rejected = True
+            req.done = True
+            return False
+        return True
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Single-request prefill into its slot (row-batched caches)."""
+        toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+        # run prefill with batch 1, write into slot via cache surgery
+        c1 = MR.make_cache(self.cfg, 1, self.max_seq, jnp.float32)
+        logits, c1 = MR.prefill_fn(self.params, {"tokens": toks}, c1,
+                                   self.cfg)
+        def put(full, one):
+            if full.ndim >= 2 and full.shape[1] == self.slots:
+                return full.at[:, slot].set(one[:, 0])
+            if full.shape[0] == self.slots:
+                return full.at[slot].set(one[0])
+            return full
+        self.cache = jax.tree.map(put, self.cache, c1)
+        nxt = int(jnp.argmax(logits[0, -1, :self.cfg.vocab_size]))
+        req.out.append(nxt)
+
+    # ------------------------------------------------------------- main loop
+    def submit_all(self, requests: list[Request]) -> list[Request]:
+        queue = list(requests)
+        for r in queue:
+            self._admit(r)
+        queue = [r for r in queue if not r.rejected]
+        pending = list(queue)
+
+        while pending or any(self.active):
+            # refill slots
+            for s in range(self.slots):
+                if self.active[s] is None and pending:
+                    req = pending.pop(0)
+                    self._prefill_slot(s, req)
+                    self.active[s] = req
+            # batched decode over occupied slots
+            toks = np.zeros((self.slots, 1), np.int32)
+            for s, r in enumerate(self.active):
+                if r is not None and r.out:
+                    toks[s, 0] = r.out[-1]
+            nxt, _, self.cache, self.maps = self._decode(
+                self.params, jnp.asarray(toks), self.cache, self.maps,
+                jnp.int32(self.step_count))
+            self.step_count += 1
+            nxt = np.asarray(nxt)
+            for s, r in enumerate(self.active):
+                if r is None:
+                    continue
+                r.out.append(int(nxt[s]))
+                if (len(r.out) >= r.max_new or int(nxt[s]) == self.eos
+                        or len(r.prompt) + len(r.out) >= self.max_seq - 1):
+                    r.done = True
+                    if self.runtime is not None:
+                        self.runtime.syscalls.invoke(
+                            "sys_serve_evict", [r.rid, len(r.out)],
+                            impl=lambda: True)
+                    self.active[s] = None
+        return requests

@@ -1,0 +1,66 @@
+"""Jitted serving steps: prefill and decode, with the probe stage fused in
+(instrumented serving — per-request latency/step histograms via eBPF maps
+without leaving the device)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import events as E, jit as J
+from repro.models import registry as MR
+
+F32 = jnp.float32
+
+
+def make_decode_step(cfg: ModelConfig, runtime=None, probe_mode=None):
+    wanted = runtime.wanted_sites() if runtime else set()
+
+    def decode_step(params, tokens, cache, maps, step):
+        """tokens [B,1] i32; returns (next_token [B], logits, cache, maps)."""
+        col = E.Collector(wanted) if runtime else None
+        ctx = col if col is not None else _null()
+        with ctx:
+            logits, cache = MR.decode_fn(params, tokens, cache, cfg)
+            if col is not None:
+                E.probe_site("decode.logits", logits)
+                rows = col.take_all_rows()
+            else:
+                rows = jnp.zeros((0, E.EVENT_WIDTH), jnp.int64)
+        # mask vocab padding before argmax
+        logits = logits.at[..., cfg.vocab_size:].set(-jnp.inf) \
+            if cfg.padded_vocab > cfg.vocab_size else logits
+        nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        aux = J.make_aux(time_ns=step.astype(jnp.int64))
+        if runtime is not None and rows.shape[0] > 0:
+            rows = rows.at[:, 3].set(step.astype(jnp.int64))
+            maps, aux = runtime.probe_stage(rows, maps, aux, mode=probe_mode)
+        return nxt, logits, cache, maps
+
+    return decode_step
+
+
+def make_prefill_step(cfg: ModelConfig, runtime=None):
+    wanted = runtime.wanted_sites() if runtime else set()
+
+    def prefill_step(params, batch, cache, maps):
+        col = E.Collector(wanted) if runtime else None
+        ctx = col if col is not None else _null()
+        with ctx:
+            logits, cache = MR.prefill_fn(params, batch, cache, cfg)
+            rows = (col.take_all_rows() if col is not None
+                    else jnp.zeros((0, E.EVENT_WIDTH), jnp.int64))
+        aux = J.make_aux()
+        if runtime is not None and rows.shape[0] > 0:
+            maps, aux = runtime.probe_stage(rows, maps, aux)
+        return logits, cache, maps
+
+    return prefill_step
+
+
+class _null:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False

@@ -1,0 +1,72 @@
+"""Cross-PROCESS control plane: the monitor daemon runs as a real separate
+process (subprocess) against a live shm region — the paper's bpftime-daemon
+story, not just same-process API calls."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+from repro.core import maps as M
+from repro.core.runtime import BpftimeRuntime
+
+
+def test_daemon_subprocess_reads_live_maps(tmp_path):
+    rt = BpftimeRuntime()
+    rt.create_map(M.MapSpec("counters", M.MapKind.ARRAY, max_entries=8))
+    rt.create_map(M.MapSpec("lat", M.MapKind.LOG2HIST))
+    rt.setup_shm(str(tmp_path / "shm"))
+
+    # trainer-side activity: host maps are shm-backed (live)
+    rt.host_maps["counters"]["values"][3] = 42
+    rt.host_maps["lat"]["bins"][5] = 7
+    # device-map snapshot publish
+    dev = rt.init_device_maps()
+    dev["counters"]["values"] = dev["counters"]["values"].at[1].set(99)
+    rt.publish(dev)
+
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.daemon",
+         str(tmp_path / "shm"), "--once"],
+        capture_output=True, text=True, env=env, cwd=os.getcwd(),
+        timeout=120)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "counters" in out.stdout
+    assert "{1: 99}" in out.stdout          # device snapshot visible
+    assert "lat" in out.stdout
+
+
+def test_daemon_subprocess_injects_program(tmp_path):
+    """Daemon CLI --attach queues a program; the trainer picks it up."""
+    from repro.core import loader
+    rt = BpftimeRuntime()
+    spec = M.MapSpec("hits", M.MapKind.ARRAY, max_entries=8)
+    rt.create_map(spec)
+    rt.setup_shm(str(tmp_path / "shm"))
+
+    obj = loader.build_object("inject", """
+        mov r6, 0
+        stxdw [r10-8], r6
+        lddw r1, map:hits
+        mov r2, r10
+        add r2, -8
+        mov r3, 1
+        call map_fetch_add
+        mov r0, 0
+        exit
+    """, [spec], "uprobe", attach_to="uprobe:block")
+    objpath = tmp_path / "prog.json"
+    objpath.write_text(obj.to_json())
+
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.daemon",
+         str(tmp_path / "shm"), "--attach", str(objpath)],
+        capture_output=True, text=True, env=env, cwd=os.getcwd(),
+        timeout=120)
+    assert out.returncode == 0, out.stderr[-2000:]
+
+    applied = rt.poll_control()
+    assert len(applied) == 1 and "error" not in applied[0]
+    assert rt.device_attach            # program is live

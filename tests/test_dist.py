@@ -1,0 +1,135 @@
+"""Distribution layer unit tests: sharding rules, divisibility fallbacks,
+hlo_cost analyzer, compression, multi-device psum smoke (subprocess)."""
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.dist import sharding as SH
+
+
+def mk_mesh(shape=(2, 2), axes=("data", "model")):
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        pytest.skip("needs multiple devices")
+    return Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def test_spec_rules_single_device_mesh():
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    # dims divisible by 1 -> axes kept
+    assert SH.spec_for(["embed", "embedding"], (1024, 64), mesh) == \
+        P("model", "data")
+    assert SH.spec_for(["a", "wq"], (64, 128), mesh) == P("data", "model")
+    assert SH.spec_for(["n", "scale"], (64,), mesh) == P(None)
+    # stacked leading dim padded with None
+    assert SH.spec_for(["stack", "wq"], (4, 64, 128), mesh) == \
+        P(None, "data", "model")
+
+
+def test_divisibility_fallback():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    m = FakeMesh()
+    # 14 heads * 64 = 896 divides; but a 14-dim would not
+    assert SH.spec_for(["x", "wq"], (896, 896), m) == P("data", "model")
+    assert SH.spec_for(["x", "wq"], (896, 14), m) == P("data", None)
+
+
+def test_adafactor_moment_rules():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    m = FakeMesh()
+    # w_in [E, D, F] -> (model, fsdp, None); vr drops last -> (model, fsdp)
+    assert SH.spec_for(["f", "w_in", "vr"], (384, 7168), m) == \
+        P("model", "data")
+    # vc drops second-to-last -> (model, None)
+    assert SH.spec_for(["f", "w_in", "vc"], (384, 2048), m) == \
+        P("model", None)
+
+
+def test_fit_spec_drops_nondividing():
+    class FakeMesh:
+        axis_names = ("data", "model")
+        shape = {"data": 16, "model": 16}
+    m = FakeMesh()
+    s = SH.fit_spec(P(None, "data"), (1, 1), m)
+    assert s == P(None, None)
+    s = SH.fit_spec(P("data", None), (32, 7), m)
+    assert s == P("data", None)
+
+
+def test_constrain_noop_without_mesh():
+    x = jnp.ones((4, 4))
+    assert SH.constrain(x, "batch", None) is x
+
+
+# ---------------------------------------------------------------- hlo_cost
+
+def test_hlo_cost_scan_multiplier():
+    from repro.launch import hlo_cost
+    x = jnp.ones((64, 64), jnp.float32)
+    f = jax.jit(lambda x: jax.lax.scan(
+        lambda c, _: (c @ c, None), x, None, length=5)[0])
+    c = hlo_cost.analyze(f.lower(x).compile().as_text())
+    assert abs(c.flops - 5 * 2 * 64**3) / (5 * 2 * 64**3) < 0.01
+
+
+def test_hlo_cost_plain_matmul():
+    from repro.launch import hlo_cost
+    a = jnp.ones((32, 128), jnp.float32)
+    b = jnp.ones((128, 16), jnp.float32)
+    f = jax.jit(lambda a, b: a @ b)
+    c = hlo_cost.analyze(f.lower(a, b).compile().as_text())
+    assert c.flops == 2 * 32 * 128 * 16
+    assert c.bytes > 0
+
+
+def test_hlo_cost_collectives_multidevice():
+    """psum byte accounting under a real 4-device SPMD partition
+    (subprocess so the main process keeps 1 device)."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        import sys
+        sys.path.insert(0, "src")
+        from repro.launch import hlo_cost
+        mesh = Mesh(np.asarray(jax.devices()).reshape(4), ("d",))
+        sh = NamedSharding(mesh, P("d"))
+        f = jax.jit(lambda x: jnp.sum(x), in_shardings=(sh,))
+        x = jax.ShapeDtypeStruct((1024,), jnp.float32)
+        c = hlo_cost.analyze(f.lower(x).compile().as_text())
+        assert "all-reduce" in c.collective_counts, c.collective_counts
+        print("OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, cwd=".", timeout=300)
+    assert "OK" in r.stdout, r.stderr[-2000:]
+
+
+def test_no_f64_in_lowered_train_step():
+    """x64 mode must not leak f64 into model compute (explicit dtypes)."""
+    from repro.configs import registry
+    from repro.configs.base import TrainConfig
+    from repro.train.train_step import (abstract_train_state,
+                                        make_train_step)
+    from repro.launch import specs as SP
+    from repro.configs.base import ShapeConfig
+    cfg = registry.smoke("llama3.2-1b")
+    tcfg = TrainConfig()
+    state = abstract_train_state(cfg, tcfg)
+    shape = ShapeConfig("t", 16, 4, "train")
+    batch = SP.train_batch_specs(cfg, shape, tcfg)
+    txt = jax.jit(make_train_step(cfg, tcfg)).lower(state, batch).as_text()
+    assert "f64[" not in txt, "f64 leaked into the step function"

@@ -1,0 +1,127 @@
+"""Fault tolerance: heartbeats, straggler detection, elastic planning,
+restart-from-checkpoint with injected failures, elastic reshard restore."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.ckpt import checkpoint as CK
+from repro.data.pipeline import SyntheticDataset
+from repro.ft import fault_tolerance as FT
+from repro.train.train_step import init_train_state, make_train_step
+
+CFG = registry.smoke("qwen2-0.5b")
+
+
+def test_heartbeat_dead_detection():
+    hb = FT.HeartbeatMonitor(num_hosts=4, timeout_s=10.0,
+                             clock=lambda: 100.0)
+    for h in (0, 1, 3):
+        hb.beat(h, t=95.0)
+    hb.beat(2, t=80.0)          # stale
+    assert hb.dead(now=100.0) == [2]
+    hb.beat(2, t=99.0)
+    assert hb.dead(now=100.0) == []
+
+
+def test_straggler_detection():
+    rng = np.random.default_rng(0)
+    times = np.abs(rng.normal(1.0, 0.05, (8, 20)))
+    times[5] *= 2.5             # straggler
+    assert FT.detect_stragglers(times) == [5]
+    assert FT.detect_stragglers(times[:, :2]) == []   # too few samples
+
+
+def test_elastic_plan():
+    p = FT.plan_elastic((16, 16), 0)
+    assert p.action == "continue"
+    p = FT.plan_elastic((16, 16), 16)
+    assert p.action == "reshard" and p.new_shape == (15, 16)
+    p = FT.plan_elastic((2, 16, 16), 40)
+    assert p.action == "reshard" and p.new_shape == (1, 29, 16)
+    p = FT.plan_elastic((16, 16), 255)
+    assert p.action == "halt"
+
+
+def test_supervisor_restart_from_checkpoint(tmp_path):
+    """Inject a failure mid-training; the supervisor restores the latest
+    checkpoint and training completes with the right final step."""
+    tcfg = TrainConfig(warmup=2)
+    state = init_train_state(jax.random.PRNGKey(0), CFG, tcfg)
+    step = jax.jit(make_train_step(CFG, tcfg))
+    data = SyntheticDataset(CFG, ShapeConfig("f", 32, 4, "train"), tcfg)
+    like = jax.eval_shape(lambda: init_train_state(
+        jax.random.PRNGKey(0), CFG, tcfg))
+
+    sup = FT.TrainSupervisor(str(tmp_path), save_every=5, max_restarts=2)
+    CK.save(str(tmp_path), 0, state)
+    fails = {12}
+
+    def failure_hook(step_no):
+        if step_no in fails:
+            fails.discard(step_no)
+            raise FT._Injected(f"host died at step {step_no}")
+
+    final = sup.run(
+        state, step, data.next, total_steps=20,
+        save_fn=lambda s, st: CK.save(str(tmp_path), s, st),
+        restore_fn=lambda: CK.restore(str(tmp_path),
+                                      CK.latest(str(tmp_path)), like),
+        failure_hook=failure_hook)
+    assert int(final["step"]) == 20
+    assert sup.restarts == 1
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Checkpoint saved from one mesh restores onto a different mesh
+    (shrunk data axis) with identical values."""
+    import numpy as np
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+    tcfg = TrainConfig()
+    state = init_train_state(jax.random.PRNGKey(0), CFG, tcfg)
+    CK.save(str(tmp_path), 1, state)
+
+    like = jax.eval_shape(lambda: init_train_state(
+        jax.random.PRNGKey(0), CFG, tcfg))
+    mesh = Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                ("data", "model"))
+    from repro.dist import sharding as SH
+    shardings = jax.tree.map(
+        lambda _: NamedSharding(mesh, P()), like)
+    restored = CK.restore(str(tmp_path), 1, like, mesh=mesh,
+                          shardings=shardings)
+    for a, b in zip(jax.tree.leaves(state["params"]),
+                    jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_step_time_straggler_pipeline():
+    """The bpftime angle: per-host step times land in a PERCPU map via the
+    sys_step_end tracepoint; detection reads the aggregated window."""
+    from repro.core import maps as M
+    from repro.core.runtime import BpftimeRuntime
+    rt = BpftimeRuntime()
+    prog = """
+        ldxdw r6, [r1+ctx:arg0]     ; step
+        mod r6, 16
+        stxdw [r10-8], r6
+        ldxdw r3, [r1+ctx:arg1]     ; step time (us)
+        lddw r1, map:step_times
+        mov r2, r10
+        add r2, -8
+        call map_fetch_add
+        mov r0, 0
+        exit
+    """
+    pid = rt.load_asm("times", prog,
+                      [M.MapSpec("step_times", M.MapKind.ARRAY,
+                                 max_entries=16)], "tracepoint")
+    rt.attach(pid, "tracepoint:sys_step_end:enter")
+    for s in range(32):
+        rt.syscalls.invoke("sys_step_end", [s, 1000 + s], impl=lambda: None)
+    vals = rt.host_maps["step_times"]["values"]
+    assert int(vals[0]) == 1000 + 0 + 1000 + 16

@@ -1,0 +1,128 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs ref.py oracle,
+swept over shapes and dtypes, plus hypothesis property tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import hash_update, ops, ref, ringbuf_emit
+from repro.kernels import tensor_stats as ts
+
+SHAPES = [(7,), (128,), (1024,), (1025,), (4, 333), (16, 1024), (3, 5, 129),
+          (8192,), (1,)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_tensor_stats_matches_ref(shape, dtype):
+    key = jax.random.PRNGKey(hash(shape) % 2**31)
+    x = (jax.random.normal(key, shape, jnp.float32) * 10).astype(dtype)
+    got = ts.tensor_stats_pallas(x, interpret=True)
+    want = ref.tensor_stats(x)
+    for k in ("mean", "rms", "min", "max", "absmax"):
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=2e-5, atol=2e-5, err_msg=k)
+    assert int(got["nan_cnt"]) == int(want["nan_cnt"])
+    assert int(got["inf_cnt"]) == int(want["inf_cnt"])
+
+
+def test_tensor_stats_nan_inf():
+    x = jnp.asarray([1.0, jnp.nan, -jnp.inf, 4.0, jnp.inf, -2.0], jnp.float32)
+    got = ts.tensor_stats_pallas(x, interpret=True)
+    want = ref.tensor_stats(x)
+    assert int(got["nan_cnt"]) == 1 and int(got["inf_cnt"]) == 2
+    np.testing.assert_allclose(float(got["min"]), float(want["min"]))
+    np.testing.assert_allclose(float(got["max"]), float(want["max"]))
+    np.testing.assert_allclose(float(got["mean"]), float(want["mean"]),
+                               rtol=1e-6)
+
+
+def test_tensor_stats_all_bad():
+    x = jnp.asarray([jnp.nan, jnp.inf], jnp.float32)
+    got = ts.tensor_stats_pallas(x, interpret=True)
+    assert float(got["min"]) == 0.0 and float(got["max"]) == 0.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 3000), scale=st.floats(0.01, 1e4),
+       seed=st.integers(0, 2**16))
+def test_tensor_stats_property(n, scale, seed):
+    x = (jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+         * scale)
+    got = ts.tensor_stats_pallas(x, interpret=True)
+    want = ref.tensor_stats(x)
+    np.testing.assert_allclose(np.asarray(got["rms"]), np.asarray(want["rms"]),
+                               rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(got["absmax"]),
+                               np.asarray(want["absmax"]), rtol=1e-6)
+    # invariants: rms >= |mean|, min <= mean <= max
+    assert float(got["rms"]) >= abs(float(got["mean"])) - 1e-4
+    assert float(got["min"]) - 1e-5 <= float(got["mean"]) <= float(got["max"]) + 1e-5
+
+
+@pytest.mark.parametrize("n,b", [(8, 5), (16, 32), (64, 100), (4, 10)])
+def test_hash_fetch_add_matches_ref(n, b):
+    rng = np.random.default_rng(n * 1000 + b)
+    keys = jnp.asarray(rng.integers(-20, 20, b), jnp.int64)
+    deltas = jnp.asarray(rng.integers(-5, 6, b), jnp.int64)
+    valid = jnp.asarray(rng.integers(0, 2, b), bool)
+    kt = jnp.zeros((n,), jnp.int64)
+    ut = jnp.zeros((n,), jnp.int64)
+    vt = jnp.zeros((n,), jnp.int64)
+    got = hash_update.hash_fetch_add_batch_pallas(kt, ut, vt, keys, deltas,
+                                                  valid, interpret=True)
+    want = ref.hash_fetch_add_batch(kt, ut, vt, keys, deltas, valid)
+    for g, w, name in zip(got, want, ("keys", "used", "values")):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w),
+                                      err_msg=name)
+
+
+def test_hash_fetch_add_matches_scalar_map_ops():
+    """Property: batched kernel == sequential per-event j_hash_fetch_add."""
+    from repro.core import maps as M
+    spec = M.MapSpec("h", M.MapKind.HASH, max_entries=16)
+    st_j = M.init_states([spec])["h"]
+    rng = np.random.default_rng(7)
+    keys = rng.integers(-10, 10, 40)
+    deltas = rng.integers(1, 5, 40)
+    for k, d in zip(keys, deltas):
+        st_j, _ = M.j_hash_fetch_add(st_j, jnp.int64(k), jnp.int64(d),
+                                     jnp.asarray(True))
+    got = hash_update.hash_fetch_add_batch_pallas(
+        jnp.zeros((16,), jnp.int64), jnp.zeros((16,), jnp.int64),
+        jnp.zeros((16,), jnp.int64), jnp.asarray(keys, jnp.int64),
+        jnp.asarray(deltas, jnp.int64), jnp.ones((40,), bool),
+        interpret=True)
+    np.testing.assert_array_equal(np.asarray(st_j["values"]),
+                                  np.asarray(got[2]))
+    np.testing.assert_array_equal(np.asarray(st_j["keys"]),
+                                  np.asarray(got[0]))
+
+
+@pytest.mark.parametrize("cap,b,w", [(8, 5, 4), (4, 12, 2), (16, 16, 8)])
+def test_ringbuf_emit_matches_ref(cap, b, w):
+    rng = np.random.default_rng(cap * 100 + b)
+    rows = jnp.asarray(rng.integers(-100, 100, (b, w)), jnp.int64)
+    valid = jnp.asarray(rng.integers(0, 2, b), bool)
+    data = jnp.zeros((cap, w), jnp.int64)
+    head = jnp.asarray([3], jnp.int64)
+    gd, gh = ringbuf_emit.ringbuf_emit_batch_pallas(data, head, rows, valid,
+                                                    interpret=True)
+    wd, wh = ref.ringbuf_emit_batch(data, head, rows, valid)
+    np.testing.assert_array_equal(np.asarray(gd), np.asarray(wd))
+    np.testing.assert_array_equal(np.asarray(gh), np.asarray(wh))
+
+
+def test_log2_histogram_total():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=500), jnp.float32)
+    h = ref.log2_histogram(x)
+    assert int(h.sum()) == 500
+
+
+def test_ops_dispatch():
+    x = jnp.ones((64,), jnp.float32)
+    a = ops.tensor_stats(x, impl="ref")
+    b = ops.tensor_stats(x, impl="pallas_interpret")
+    np.testing.assert_allclose(float(a["mean"]), float(b["mean"]))

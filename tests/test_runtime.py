@@ -1,0 +1,370 @@
+"""Integration tests for the bpftime runtime: attach/collect/execute,
+loader relocation, syscall hooks with override, shm control plane + daemon,
+vectorized-vs-scan equivalence, and the host-callback baseline."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (daemon, events as E, jit as J, loader, maps as M,
+                        vectorized as V, vm)
+from repro.core.runtime import BpftimeRuntime
+from repro.core.shm import ShmRegion
+
+COUNT_BY_LAYER = """
+    ldxdw r6, [r1+ctx:layer]
+    stxdw [r10-8], r6
+    lddw r1, map:layer_counts
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+HIST_RMS = """
+    ldxdw r2, [r1+ctx:rms]
+    lddw r1, map:rms_hist
+    call hist_add
+    mov r0, 0
+    exit
+"""
+
+ARR = M.MapSpec("layer_counts", M.MapKind.ARRAY, max_entries=16)
+HIST = M.MapSpec("rms_hist", M.MapKind.LOG2HIST)
+
+
+def make_runtime(attach_ret=False):
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("count_by_layer", COUNT_BY_LAYER, [ARR], "uprobe")
+    rt.attach(pid, "uprobe:block")
+    pid2 = rt.load_asm("hist_rms", HIST_RMS, [HIST], "uprobe")
+    rt.attach(pid2, "uretprobe:block" if attach_ret else "uprobe:block")
+    return rt
+
+
+def fake_step(rt, n_layers=4, mode="scan"):
+    """Emulates a probed train step: scan over layers, each emitting an
+    entry event for site 'block'."""
+    with rt.collector() as col:
+        def body(c, x):
+            h = E.probe_site("block", x * c, kind=E.KIND_ENTRY)
+            return c + 1.0, h.sum()
+
+        xs = jnp.ones((n_layers, 8), jnp.float32)
+        c, ys = E.probed_scan(body, jnp.float32(1.0), xs)
+        rows = col.take_all_rows()
+    maps_state = rt.init_device_maps()
+    aux = J.make_aux(time_ns=123)
+    maps_state, aux = rt.probe_stage(rows, maps_state, aux, mode=mode)
+    return rows, maps_state, aux
+
+
+def test_probe_stage_counts_per_layer():
+    rt = make_runtime()
+    rows, maps_state, _ = fake_step(rt, n_layers=4)
+    assert rows.shape == (4, E.EVENT_WIDTH)
+    counts = np.asarray(maps_state["layer_counts"]["values"])
+    np.testing.assert_array_equal(counts[:4], [1, 1, 1, 1])
+    hist = np.asarray(maps_state["rms_hist"]["bins"])
+    assert hist.sum() == 4
+
+
+def test_unattached_site_is_nop():
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("c", COUNT_BY_LAYER, [ARR], "uprobe")
+    rt.attach(pid, "uprobe:some_other_site")
+    with rt.collector() as col:
+        E.probe_site("block", jnp.ones((4,)), kind=E.KIND_ENTRY)
+        rows = col.take_all_rows()
+    assert rows.shape[0] == 0
+
+
+def test_no_collector_site_is_identity():
+    x = jnp.ones((4,))
+    y = E.probe_site("whatever", x)
+    assert y is x
+
+
+def test_attach_detach_epoch():
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("c", COUNT_BY_LAYER, [ARR], "uprobe")
+    e0 = rt.attach_epoch
+    lid = rt.attach(pid, "uprobe:block")
+    assert rt.attach_epoch == e0 + 1
+    rt.detach(lid)
+    assert rt.attach_epoch == e0 + 2
+    assert not rt.device_attach
+
+
+def test_vectorized_matches_scan():
+    rt = make_runtime()
+    for pid, p in rt.progs.items():
+        assert V.is_vector_safe(p.vprog), p.name
+    _, m_scan, _ = fake_step(rt, n_layers=6, mode="scan")
+    _, m_vec, _ = fake_step(rt, n_layers=6, mode="vectorized")
+    for name in ("layer_counts", "rms_hist"):
+        for f in m_scan[name]:
+            np.testing.assert_array_equal(np.asarray(m_scan[name][f]),
+                                          np.asarray(m_vec[name][f]),
+                                          err_msg=f"{name}.{f}")
+
+
+def test_vector_safety_rejects_hash_and_loops():
+    rt = BpftimeRuntime()
+    hash_prog = """
+        ldxdw r6, [r1+0]
+        stxdw [r10-8], r6
+        lddw r1, map:h
+        mov r2, r10
+        add r2, -8
+        mov r3, 1
+        call map_fetch_add
+        mov r0, 0
+        exit
+    """
+    pid = rt.load_asm("h", hash_prog,
+                      [M.MapSpec("h", M.MapKind.HASH, max_entries=8)])
+    assert not V.is_vector_safe(rt.progs[pid].vprog)
+
+    loop_prog = """
+        mov r6, 5
+        mov r0, 0
+        l:
+        add r0, 1
+        sub r6, 1
+        jgt r6, 0, l
+        exit
+    """
+    pid2 = rt.load_asm("loop", loop_prog, [])
+    assert not V.is_vector_safe(rt.progs[pid2].vprog)
+
+
+def test_vector_safety_rejects_live_fetch_add_result():
+    rt = BpftimeRuntime()
+    prog = """
+        mov r6, 0
+        stxdw [r10-8], r6
+        lddw r1, map:layer_counts
+        mov r2, r10
+        add r2, -8
+        mov r3, 1
+        call map_fetch_add
+        add r0, 1          ; READS the fetch-add result
+        exit
+    """
+    pid = rt.load_asm("live", prog, [ARR])
+    assert not V.is_vector_safe(rt.progs[pid].vprog)
+
+
+# ---------------------------------------------------------------- traceable
+
+def test_traceable_uprobe_uretprobe():
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("c", COUNT_BY_LAYER, [ARR], "uprobe")
+    rt.attach(pid, "uprobe:mlp")
+    rt.attach(pid, "uretprobe:mlp")
+
+    @E.traceable("mlp")
+    def mlp(x):
+        return x * 2.0
+
+    with rt.collector() as col:
+        mlp(jnp.ones((8,), jnp.float32))
+        rows = col.take_all_rows()
+    assert rows.shape[0] == 2
+    kinds = sorted(int(k) for k in rows[:, 1])
+    assert kinds == [E.KIND_ENTRY, E.KIND_EXIT]
+
+
+# ---------------------------------------------------------------- loader
+
+def test_loader_relocation_with_shifted_fds():
+    rt = BpftimeRuntime()
+    rt.create_map(M.MapSpec("decoy", M.MapKind.ARRAY, max_entries=4))
+    rt.create_map(M.MapSpec("decoy2", M.MapKind.HASH, max_entries=4))
+    pid = rt.load_asm("c", COUNT_BY_LAYER, [ARR], "uprobe")
+    # layer_counts got global fd 2; program must still hit the right map
+    rt.attach(pid, "uprobe:block")
+    _, maps_state, _ = fake_step_single(rt)
+    assert np.asarray(maps_state["layer_counts"]["values"]).sum() == 1
+    assert np.asarray(maps_state["decoy"]["values"]).sum() == 0
+
+
+def fake_step_single(rt):
+    with rt.collector() as col:
+        E.probe_site("block", jnp.ones((8,), jnp.float32),
+                     kind=E.KIND_ENTRY)
+        rows = col.take_all_rows()
+    ms = rt.init_device_maps()
+    aux = J.make_aux()
+    ms, aux = rt.probe_stage(rows, ms, aux)
+    return rows, ms, aux
+
+
+def test_program_object_json_roundtrip():
+    obj = loader.build_object("c", COUNT_BY_LAYER, [ARR], "uprobe",
+                              attach_to="uprobe:block")
+    obj2 = loader.ProgramObject.from_json(obj.to_json())
+    assert obj2.insns_hex == obj.insns_hex
+    assert obj2.map_specs()[0].name == "layer_counts"
+    assert obj2.relocs == obj.relocs
+
+
+def test_undeclared_map_rejected():
+    with pytest.raises(loader.LoadError):
+        loader.build_object("bad", "lddw r1, map:nope\nmov r0, 0\nexit", [])
+
+
+def test_incompatible_map_redeclaration_rejected():
+    rt = BpftimeRuntime()
+    rt.create_map(ARR)
+    with pytest.raises(loader.LoadError):
+        rt.create_map(M.MapSpec("layer_counts", M.MapKind.HASH,
+                                max_entries=8))
+
+
+# ---------------------------------------------------------------- syscalls
+
+FILTER_BIG_FETCH = """
+    ldxdw r6, [r1+ctx:arg0]
+    jle r6, 5, out
+    mov r1, 99
+    call override_return
+    out:
+    mov r0, 0
+    exit
+"""
+
+COUNT_SYSCALLS = """
+    ldxdw r6, [r1+ctx:sys_id]
+    stxdw [r10-8], r6
+    lddw r1, map:sys_counts
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+
+def test_syscall_filter_override():
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("flt", FILTER_BIG_FETCH, [], "filter")
+    rt.attach(pid, "filter:sys_data_fetch")
+    calls = []
+    r = rt.syscalls.invoke("sys_data_fetch", [3],
+                           impl=lambda: calls.append(1) or "batch")
+    assert not r.overridden and r.value == "batch"
+    r = rt.syscalls.invoke("sys_data_fetch", [9],
+                           impl=lambda: calls.append(1) or "batch")
+    assert r.overridden and r.ret_code == 99 and r.value is None
+    assert len(calls) == 1
+
+
+def test_syscall_tracepoint_counts():
+    rt = BpftimeRuntime()
+    spec = M.MapSpec("sys_counts", M.MapKind.ARRAY, max_entries=32)
+    pid = rt.load_asm("cnt", COUNT_SYSCALLS, [spec], "tracepoint")
+    rt.attach(pid, "tracepoint:sys_log:enter")
+    rt.attach(pid, "tracepoint:sys_log:exit")
+    rt.syscalls.invoke("sys_log", [1], impl=lambda: None)
+    rt.syscalls.invoke("sys_log", [2], impl=lambda: None)
+    from repro.core.syscalls import SYSCALL_IDS
+    assert rt.host_maps["sys_counts"]["values"][SYSCALL_IDS["sys_log"]] == 4
+
+
+# ---------------------------------------------------------------- shm/daemon
+
+def test_shm_publish_snapshot_and_daemon_render(tmp_path):
+    rt = make_runtime()
+    shm = rt.setup_shm(str(tmp_path / "shm"))
+    _, maps_state, _ = fake_step(rt)
+    rt.publish(maps_state)
+
+    other = ShmRegion.attach(str(tmp_path / "shm"))
+    snap = other.snapshot_device("layer_counts")
+    np.testing.assert_array_equal(snap["values"][:4], [1, 1, 1, 1])
+    txt = daemon.summarize(other)
+    assert "layer_counts" in txt and "rms_hist" in txt
+    assert "progs" not in txt  # programs listed separately
+    progs = other.read_programs()
+    assert "count_by_layer" in progs
+
+
+def test_live_attach_via_daemon_request(tmp_path):
+    """The paper's inject-into-running-process: a daemon queues a program;
+    the trainer picks it up between steps; the next step is instrumented."""
+    rt = BpftimeRuntime()
+    rt.create_map(ARR)
+    rt.setup_shm(str(tmp_path / "shm"))
+    e0 = rt.attach_epoch
+
+    # daemon side
+    other = ShmRegion.attach(str(tmp_path / "shm"))
+    obj = loader.build_object("c", COUNT_BY_LAYER, [ARR], "uprobe",
+                              attach_to="uprobe:block")
+    daemon.request_load_attach(other, obj.to_json())
+
+    # trainer side, at a step boundary
+    applied = rt.poll_control()
+    assert len(applied) == 1 and "error" not in applied[0]
+    assert rt.attach_epoch == e0 + 1
+    _, ms, _ = fake_step_single(rt)
+    assert np.asarray(ms["layer_counts"]["values"]).sum() == 1
+    # idempotent poll
+    assert rt.poll_control() == []
+
+
+# ---------------------------------------------------------------- callback
+
+def test_host_callback_probe_baseline():
+    from repro.core import callback_probe
+    rt = make_runtime()
+    with rt.collector() as col:
+        E.probe_site("block", jnp.ones((8,), jnp.float32),
+                     kind=E.KIND_ENTRY)
+        rows = col.take_all_rows()
+
+    @jax.jit
+    def step(rows):
+        tok = callback_probe.host_probe_stage(rt, rows, jnp.int64(7))
+        return tok
+
+    tok = step(rows)
+    assert int(tok) == rows.shape[0]
+    assert rt.host_maps["layer_counts"]["values"][0] == 1
+    assert rt.host_maps["rms_hist"]["bins"].sum() == 1
+
+
+# ---------------------------------------------------------------- ringbuf
+
+def test_ringbuf_device_to_host_drain():
+    rt = BpftimeRuntime()
+    rb = M.MapSpec("events_rb", M.MapKind.RINGBUF, max_entries=8,
+                   rec_width=4)
+    prog = """
+        ldxdw r6, [r1+ctx:layer]
+        stxdw [r10-32], r6
+        ldxdw r6, [r1+ctx:numel]
+        stxdw [r10-24], r6
+        lddw r1, map:events_rb
+        mov r2, r10
+        add r2, -32
+        mov r3, 16
+        mov r4, 0
+        call ringbuf_output
+        mov r0, 0
+        exit
+    """
+    pid = rt.load_asm("rb", prog, [rb], "uprobe")
+    rt.attach(pid, "uprobe:block")
+    _, ms, _ = fake_step(rt, n_layers=3)
+    recs, cursor = rt.ringbuf_drain(ms, "events_rb", 0)
+    assert cursor == 3
+    assert [r[0] for r in recs] == [0, 1, 2]      # layer ids
+    assert all(r[1] == 8 for r in recs)            # numel

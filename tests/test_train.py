@@ -1,0 +1,243 @@
+"""Training-loop integration: loss goes down, grad-accum equivalence,
+probe instrumentation during training, live attach without restart,
+eBPF veto of bad batches, checkpoint determinism."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.core import maps as M
+from repro.core.runtime import BpftimeRuntime
+from repro.data.pipeline import SyntheticDataset
+from repro.models import registry as MR
+from repro.train.train_step import init_train_state, make_train_step
+
+CFG = registry.smoke("llama3.2-1b")
+SHAPE = ShapeConfig("t", 32, 8, "train")
+
+
+def _data(tcfg, cfg=CFG, shape=SHAPE, runtime=None):
+    return SyntheticDataset(cfg, shape, tcfg, seed=3, runtime=runtime)
+
+
+def test_loss_decreases():
+    tcfg = TrainConfig(warmup=2, total_steps=30, lr=1e-3)
+    state = init_train_state(jax.random.PRNGKey(0), CFG, tcfg)
+    step = jax.jit(make_train_step(CFG, tcfg))
+    data = _data(tcfg)
+    losses = []
+    for _ in range(30):
+        state, m = step(state, data.next())
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0] - 0.2, losses[::6]
+    assert int(state["step"]) == 30
+
+
+def test_grad_accum_equivalence():
+    """k microbatches of size m == one batch of k*m (same data)."""
+    tcfg_full = TrainConfig(microbatch=0, warmup=1, lr=1e-3,
+                            clip_norm=1e9)
+    tcfg_acc = dataclasses.replace(tcfg_full, microbatch=2)
+    state0 = init_train_state(jax.random.PRNGKey(0), CFG, tcfg_full)
+
+    data_full = _data(tcfg_full)
+    data_acc = _data(tcfg_acc)
+    b_full, b_acc = data_full.next(), data_acc.next()
+    np.testing.assert_array_equal(
+        b_acc["tokens"].reshape(b_full["tokens"].shape), b_full["tokens"])
+
+    s1, m1 = jax.jit(make_train_step(CFG, tcfg_full))(state0, b_full)
+    s2, m2 = jax.jit(make_train_step(CFG, tcfg_acc))(state0, b_acc)
+    for (p1, p2) in zip(jax.tree.leaves(s1["params"]),
+                        jax.tree.leaves(s2["params"])):
+        np.testing.assert_allclose(np.asarray(p1), np.asarray(p2),
+                                   rtol=2e-4, atol=2e-5)
+
+
+COUNT_BLOCKS = """
+    ldxdw r6, [r1+ctx:layer]
+    stxdw [r10-8], r6
+    lddw r1, map:blk_counts
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+VETO_ALWAYS = """
+    mov r1, 1
+    call override_return
+    mov r0, 0
+    exit
+"""
+
+
+def _probe_runtime():
+    rt = BpftimeRuntime()
+    pid = rt.load_asm(
+        "blk", COUNT_BLOCKS,
+        [M.MapSpec("blk_counts", M.MapKind.ARRAY, max_entries=64)], "uprobe")
+    rt.attach(pid, "uprobe:block")
+    return rt
+
+
+@pytest.mark.parametrize("mode", ["scan", "vectorized"])
+def test_probed_training_counts_blocks(mode):
+    rt = _probe_runtime()
+    tcfg = TrainConfig(warmup=2, total_steps=10)
+    state = init_train_state(jax.random.PRNGKey(0), CFG, tcfg, rt)
+    step = jax.jit(make_train_step(CFG, tcfg, rt, probe_mode=mode))
+    data = _data(tcfg, runtime=rt)
+    for _ in range(3):
+        state, m = step(state, data.next())
+    counts = np.asarray(state["maps"]["blk_counts"]["values"])
+    # 2 layers x 3 steps (uprobe on entry only)
+    np.testing.assert_array_equal(counts[:2], [3, 3])
+
+
+def test_probed_microbatch_training():
+    rt = _probe_runtime()
+    tcfg = TrainConfig(warmup=2, microbatch=2)
+    state = init_train_state(jax.random.PRNGKey(0), CFG, tcfg, rt)
+    step = jax.jit(make_train_step(CFG, tcfg, rt))
+    data = _data(tcfg, runtime=rt)
+    state, m = step(state, data.next())
+    counts = np.asarray(state["maps"]["blk_counts"]["values"])
+    # 2 layers x 4 microbatches
+    np.testing.assert_array_equal(counts[:2], [4, 4])
+
+
+def test_live_attach_no_restart():
+    """Attach mid-training: the step re-jits, state carries over, events
+    start flowing — the ptrace-injection analogue."""
+    rt = BpftimeRuntime()
+    rt.create_map(M.MapSpec("blk_counts", M.MapKind.ARRAY, max_entries=64))
+    tcfg = TrainConfig(warmup=2)
+    state = init_train_state(jax.random.PRNGKey(0), CFG, tcfg, rt)
+    data = _data(tcfg, runtime=rt)
+
+    cache = {}
+
+    def step_fn():
+        e = rt.attach_epoch
+        if e not in cache:
+            cache[e] = jax.jit(make_train_step(CFG, tcfg, rt))
+        return cache[e]
+
+    for _ in range(2):                      # uninstrumented steps
+        state, _ = step_fn()(state, data.next())
+    assert np.asarray(state["maps"]["blk_counts"]["values"]).sum() == 0
+
+    pid = rt.load_asm(
+        "blk", COUNT_BLOCKS,
+        [M.MapSpec("blk_counts", M.MapKind.ARRAY, max_entries=64)], "uprobe")
+    rt.attach(pid, "uprobe:block")          # live injection
+    for _ in range(2):
+        state, _ = step_fn()(state, data.next())
+    counts = np.asarray(state["maps"]["blk_counts"]["values"])
+    np.testing.assert_array_equal(counts[:2], [2, 2])
+    assert int(state["step"]) == 4          # training never restarted
+    assert len(cache) == 2                  # exactly one re-jit
+
+
+def test_device_filter_vetoes_update():
+    """A filter program overriding on a device event freezes the params
+    for that step (guard-rail semantics)."""
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("veto", VETO_ALWAYS, [], "filter")
+    rt.attach(pid, "probe:loss")
+    tcfg = TrainConfig(warmup=2)
+    state = init_train_state(jax.random.PRNGKey(0), CFG, tcfg, rt)
+    step = jax.jit(make_train_step(CFG, tcfg, rt))
+    data = _data(tcfg, runtime=rt)
+    p0 = jax.tree.map(np.asarray, state["params"])
+    state, m = step(state, data.next())
+    assert int(m["vetoed"]) == 1
+    for a, b in zip(jax.tree.leaves(p0), jax.tree.leaves(state["params"])):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_data_fetch_filter_skips_batches():
+    rt = BpftimeRuntime()
+    # skip even steps: arg0 = step
+    prog = """
+        ldxdw r6, [r1+ctx:arg0]
+        mod r6, 2
+        jne r6, 0, out
+        mov r1, 1
+        call override_return
+        out:
+        mov r0, 0
+        exit
+    """
+    pid = rt.load_asm("skip", prog, [], "filter")
+    rt.attach(pid, "filter:sys_data_fetch")
+    tcfg = TrainConfig()
+    data = _data(tcfg, runtime=rt)
+    got = [data.next() is not None for _ in range(6)]
+    assert got == [False, True, False, True, False, True]
+
+
+def test_checkpoint_save_restore_resume(tmp_path):
+    from repro.ckpt import checkpoint as CK
+    tcfg = TrainConfig(warmup=2, lr=1e-3)
+    state = init_train_state(jax.random.PRNGKey(0), CFG, tcfg)
+    step = jax.jit(make_train_step(CFG, tcfg))
+    data = _data(tcfg)
+    batches = [data.next() for _ in range(6)]
+    for b in batches[:3]:
+        state, _ = step(state, b)
+    CK.save(str(tmp_path), 3, state)
+    assert CK.latest(str(tmp_path)) == 3
+
+    # continue 3 more steps
+    ref = state
+    for b in batches[3:]:
+        ref, _ = step(ref, b)
+
+    # restore + replay the same 3 steps -> identical params
+    like = jax.eval_shape(lambda: init_train_state(
+        jax.random.PRNGKey(0), CFG, tcfg))
+    restored = CK.restore(str(tmp_path), 3, like)
+    assert int(restored["step"]) == 3
+    for b in batches[3:]:
+        restored, _ = step(restored, b)
+    for a, b_ in zip(jax.tree.leaves(ref["params"]),
+                     jax.tree.leaves(restored["params"])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b_))
+
+
+def test_async_checkpoint(tmp_path):
+    from repro.ckpt import checkpoint as CK
+    tcfg = TrainConfig()
+    state = init_train_state(jax.random.PRNGKey(0), CFG, tcfg)
+    t = CK.save(str(tmp_path), 1, state, blocking=False)
+    t.join(timeout=60)
+    assert CK.latest(str(tmp_path)) == 1
+
+
+def test_checkpoint_veto_via_filter(tmp_path):
+    from repro.ckpt import checkpoint as CK
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("nockpt", VETO_ALWAYS, [], "filter")
+    rt.attach(pid, "filter:sys_checkpoint_save")
+    tcfg = TrainConfig()
+    state = init_train_state(jax.random.PRNGKey(0), CFG, tcfg)
+    CK.save(str(tmp_path), 1, state, runtime=rt)
+    assert CK.latest(str(tmp_path)) is None   # vetoed
+
+
+def test_int8_compression_error_small():
+    from repro.dist.compression import compression_error, int8_roundtrip
+    g = {"w": jax.random.normal(jax.random.PRNGKey(0), (1000,)) * 0.01}
+    err = float(compression_error(g))
+    assert err < 0.02
+    rt = int8_roundtrip(g)
+    assert rt["w"].dtype == g["w"].dtype

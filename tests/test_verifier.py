@@ -1,0 +1,243 @@
+"""SP1 security tests: the verifier must reject each class of unsafe
+program (paper §5.2 — the userspace verifier's guarantees)."""
+import pytest
+
+from repro.core import asm, isa, verifier
+from repro.core.maps import MapKind, MapSpec
+from repro.core.verifier import VerifierError
+
+ARR = MapSpec("a", MapKind.ARRAY, max_entries=8)
+HASH = MapSpec("h", MapKind.HASH, max_entries=8)
+HIST = MapSpec("hist", MapKind.LOG2HIST)
+
+
+def reject(text, match, specs=()):
+    a = asm.assemble(text)
+    with pytest.raises(VerifierError, match=match):
+        verifier.verify(a.insns, list(specs))
+
+
+def accept(text, specs=()):
+    a = asm.assemble(text)
+    return verifier.verify(a.insns, list(specs))
+
+
+def test_reject_uninit_reg_read():
+    reject("mov r0, r3\nexit", "uninitialized r3")
+
+
+def test_reject_r0_unset_at_exit():
+    reject("mov r2, 1\nexit", "uninitialized r0")
+
+
+def test_reject_write_to_r10():
+    reject("mov r10, 0\nmov r0, 0\nexit", "frame pointer")
+
+
+def test_reject_stack_oob_write():
+    reject("mov r1, 1\nstxdw [r10+0], r1\nmov r0, 0\nexit", "out of bounds")
+    reject("mov r1, 1\nstxdw [r10-520], r1\nmov r0, 0\nexit",
+           "out of bounds")
+
+
+def test_reject_uninit_stack_read():
+    reject("ldxdw r0, [r10-8]\nexit", "uninitialized stack")
+
+
+def test_partial_stack_init_read_rejected():
+    reject("""
+        mov r2, 1
+        stxw [r10-8], r2     ; only 4 bytes initialized
+        ldxdw r0, [r10-8]    ; reads 8
+        exit
+    """, "uninitialized stack")
+
+
+def test_reject_ctx_write():
+    reject("mov r2, 1\nstxdw [r1+0], r2\nmov r0, 0\nexit", "read-only ctx")
+
+
+def test_reject_ctx_oob_read():
+    reject("ldxdw r0, [r1+512]\nexit", "out of bounds")
+
+
+def test_reject_unaligned_ctx_read():
+    reject("ldxdw r0, [r1+4]\nexit", "unaligned")
+
+
+def test_reject_variable_ptr_arith():
+    reject("""
+        ldxdw r2, [r1+0]
+        mov r3, r10
+        add r3, r2          ; variable offset
+        ldxdw r0, [r3+0]
+        exit
+    """, "variable pointer")
+
+
+def test_reject_ptr_on_32bit_alu():
+    reject("mov r2, r10\nadd32 r2, -8\nmov r0, 0\nexit",
+           "32-bit arithmetic on pointer")
+
+
+def test_reject_ptr_plus_ptr():
+    reject("mov r2, r10\nadd r2, r1\nmov r0, 0\nexit", "pointer")
+
+
+def test_reject_ptr_compare():
+    reject("jgt r10, 5, l\nl:\nmov r0, 0\nexit", "comparison on pointer")
+
+
+def test_reject_ptr_spill():
+    reject("mov r2, r10\nstxdw [r10-8], r2\nmov r0, 0\nexit", "spilling")
+
+
+def test_reject_unknown_helper():
+    reject("call 9999\nexit", "unknown helper")
+
+
+def test_reject_nonconst_map_fd():
+    reject("""
+        ldxdw r6, [r1+0]
+        mov r1, r6
+        mov r2, r10
+        add r2, -8
+        mov r3, 0
+        stxdw [r10-8], r3
+        mov r2, r10
+        add r2, -8
+        call map_lookup_elem
+        exit
+    """, "compile-time constant", specs=[ARR])
+
+
+def test_reject_bad_map_fd():
+    reject("""
+        mov r3, 0
+        stxdw [r10-8], r3
+        mov r1, 5
+        mov r2, r10
+        add r2, -8
+        call map_lookup_elem
+        exit
+    """, "out of range", specs=[ARR])
+
+
+def test_reject_wrong_map_kind():
+    reject("""
+        mov r1, 0
+        mov r2, 7
+        call hist_add
+        mov r0, 0
+        exit
+    """, "not allowed", specs=[ARR])
+
+
+def test_reject_helper_key_not_pointer():
+    reject("""
+        mov r1, 0
+        mov r2, 42
+        call map_lookup_elem
+        exit
+    """, "stack pointer", specs=[ARR])
+
+
+def test_reject_ringbuf_bad_size():
+    rb = MapSpec("rb", MapKind.RINGBUF, max_entries=4, rec_width=2)
+    reject("""
+        mov r6, 1
+        stxdw [r10-8], r6
+        mov r1, 0
+        mov r2, r10
+        add r2, -8
+        mov r3, 24          ; > 8*rec_width
+        mov r4, 0
+        call ringbuf_output
+        exit
+    """, "invalid", specs=[rb])
+
+
+def test_reject_fall_off_end():
+    reject("mov r0, 1", "falls off end")
+
+
+def test_reject_cond_jump_off_end():
+    a = asm.assemble("mov r0, 1\njeq r0, 1, 5\nexit")
+    with pytest.raises(VerifierError):
+        verifier.verify(a.insns, [])
+
+
+def test_reject_jump_into_lddw_middle():
+    insns = [
+        isa.Insn(isa.BPF_JMP | isa.BPF_JA, off=1),          # into lddw slot 2
+        isa.Insn(isa.BPF_LD | isa.BPF_IMM | isa.BPF_DW, dst=0, imm64=7),
+        isa.Insn(isa.BPF_JMP | isa.BPF_EXIT),
+    ]
+    with pytest.raises(VerifierError, match="invalid slot"):
+        verifier.verify(insns, [])
+
+
+def test_reject_conflicting_ptr_offsets_at_join():
+    reject("""
+        ldxdw r2, [r1+0]
+        mov r4, 7
+        stxdw [r10-8], r4
+        stxdw [r10-16], r4
+        mov r3, r10
+        jeq r2, 0, same
+        add r3, -16
+        ja go
+        same:
+        add r3, -8
+        go:
+        ldxdw r0, [r3+0]    ; r3 offset differs across paths
+        exit
+    """, "conflicting")
+
+
+def test_reject_empty_and_too_long():
+    with pytest.raises(VerifierError, match="empty"):
+        verifier.verify([], [])
+    insns = [isa.Insn(isa.BPF_ALU64 | isa.BPF_MOV, dst=0, imm=1)] * 5000
+    with pytest.raises(VerifierError, match="too long"):
+        verifier.verify(insns, [])
+
+
+def test_accept_loop_marks_tier2():
+    v = accept("""
+        mov r6, 5
+        mov r0, 0
+        l:
+        add r0, 1
+        sub r6, 1
+        jgt r6, 0, l
+        exit
+    """)
+    assert v.tier == "loop"
+
+
+def test_accept_dag_marks_tier1():
+    v = accept("""
+        mov r0, 0
+        jeq r0, 0, l
+        add r0, 1
+        l:
+        exit
+    """)
+    assert v.tier == "dag"
+
+
+def test_const_join_widens_to_scalar():
+    # same-register different consts across paths: usable as scalar
+    accept("""
+        ldxdw r2, [r1+0]
+        jeq r2, 0, a
+        mov r3, 1
+        ja go
+        a:
+        mov r3, 2
+        go:
+        mov r0, r3
+        add r0, 1
+        exit
+    """)

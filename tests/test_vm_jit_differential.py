@@ -1,0 +1,503 @@
+"""Differential tests: interpreter oracle (vm.py) vs JAX JIT (jit.py),
+on hand-written programs and hypothesis-generated random ones."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import asm, isa, jit, maps as M, verifier, vm
+
+
+def _mk_maps(specs):
+    return M.init_states(specs, np), M.init_states(specs, jnp)
+
+
+def run_both(text, ctx_words=None, specs=(), aux_kw=None, check_maps=True):
+    """Assemble, verify, run oracle + JIT, compare r0/maps/aux."""
+    ctx_words = ctx_words or [0] * 8
+    specs = list(specs)
+    a = asm.assemble(text)
+    assert not a.map_relocs, "use numeric fds in tests or relocate first"
+    vprog = verifier.verify(a.insns, specs, ctx_words=len(ctx_words))
+
+    aux_kw = aux_kw or {}
+    np_maps, j_maps = _mk_maps(specs)
+    oracle_aux = vm.Aux(**aux_kw)
+    res = vm.run(a.insns, vm.pack_ctx(ctx_words), specs, np_maps, oracle_aux)
+
+    prog = jit.compile_program(vprog)
+    ctx = jnp.asarray([isa.s64(isa.u64(w)) for w in ctx_words], jnp.int64)
+    jaux = jit.make_aux(**aux_kw)
+    f = jax.jit(lambda c, m, x: prog(c, m, x))
+    r0, j_maps_out, jaux_out = f(ctx, j_maps, jaux)
+
+    assert isa.u64(int(r0)) == isa.u64(res.r0), \
+        f"r0 mismatch: jit={isa.u64(int(r0)):#x} vm={isa.u64(res.r0):#x}"
+    if check_maps:
+        for sp in specs:
+            for k, arr in np_maps[sp.name].items():
+                np.testing.assert_array_equal(
+                    np.asarray(j_maps_out[sp.name][k]), arr,
+                    err_msg=f"map {sp.name}.{k}")
+    assert int(jaux_out["override_set"]) == oracle_aux.override_set
+    if oracle_aux.override_set:
+        assert isa.u64(int(jaux_out["override_val"])) == oracle_aux.override_val
+    return res, r0
+
+
+# ---------------------------------------------------------------- basics
+
+def test_mov_add_exit():
+    run_both("""
+        mov r0, 7
+        add r0, 35
+        exit
+    """)
+
+
+def test_alu64_ops():
+    run_both("""
+        mov r1, 1000
+        mov r2, 37
+        mov r0, r1
+        mul r0, r2          ; 37000
+        div r0, 7           ; 5285
+        mod r0, 1000        ; 285
+        xor r0, 0xff
+        lsh r0, 3
+        rsh r0, 1
+        arsh r0, 1
+        neg r0
+        and r0, 0xffff
+        or  r0, 0x10000
+        sub r0, 5
+        exit
+    """)
+
+
+def test_alu32_zero_extend():
+    run_both("""
+        mov r0, -1          ; 0xffffffffffffffff
+        add32 r0, 1         ; 32-bit wrap -> 0, zero-extended
+        mov r1, -1
+        mov32 r1, -1        ; 0x00000000ffffffff
+        add r0, r1
+        exit
+    """)
+
+
+def test_div_mod_by_zero_semantics():
+    # eBPF: div by 0 -> 0; mod by 0 -> dst unchanged
+    run_both("""
+        mov r0, 42
+        mov r1, 0
+        div r0, r1
+        mov r2, 13
+        mod r2, r1
+        add r0, r2          ; 0 + 13
+        exit
+    """)
+
+
+def test_shift_masking():
+    run_both("""
+        mov r0, 1
+        mov r1, 65          ; masked to 1 for 64-bit shifts
+        lsh r0, r1          ; 1 << 1 = 2
+        mov r2, 1
+        mov r3, 33          ; masked to 1 for 32-bit shifts
+        lsh32 r2, r3
+        add r0, r2          ; 2 + 2
+        exit
+    """)
+
+
+def test_branches_and_labels():
+    res, _ = run_both("""
+        mov r1, 10
+        mov r0, 0
+        jgt r1, 5, big
+        mov r0, 111
+        ja out
+        big:
+        mov r0, 222
+        out:
+        exit
+    """)
+    assert res.r0 == 222
+
+
+def test_signed_vs_unsigned_compare():
+    res, _ = run_both("""
+        mov r1, -1          ; u64 max
+        mov r0, 0
+        jsgt r1, 0, spos    ; signed: -1 > 0 false
+        add r0, 1
+        spos:
+        jgt r1, 0, upos     ; unsigned: max > 0 true
+        add r0, 100
+        upos:
+        exit
+    """)
+    assert res.r0 == 1
+
+
+def test_jmp32():
+    res, _ = run_both("""
+        lddw r1, 0x1_00000005   ; low 32 bits = 5
+        mov r0, 0
+        jeq32 r1, 5, yes
+        ja out
+        yes:
+        mov r0, 1
+        out:
+        exit
+    """)
+    assert res.r0 == 1
+
+
+def test_stack_load_store_sizes():
+    run_both("""
+        mov r1, 0x1234567890abcdef
+        lddw r1, 0x1234567890abcdef
+        stxdw [r10-8], r1
+        ldxb r0, [r10-8]    ; 0xef
+        ldxh r2, [r10-8]    ; 0xcdef
+        add r0, r2
+        ldxw r3, [r10-8]    ; 0x90abcdef
+        add r0, r3
+        ldxdw r4, [r10-8]
+        add r0, r4
+        stw [r10-16], -1
+        ldxw r5, [r10-16]   ; 0xffffffff zero-extended
+        add r0, r5
+        exit
+    """)
+
+
+def test_ctx_reads():
+    res, _ = run_both("""
+        ldxdw r0, [r1+0]
+        ldxdw r2, [r1+8]
+        add r0, r2
+        ldxw r3, [r1+16]    ; low half of word 2
+        add r0, r3
+        exit
+    """, ctx_words=[11, 31, 0x1_0000_0007])
+    assert res.r0 == 11 + 31 + 7
+
+
+def test_loop_tier2():
+    # sum 1..10 — back-edge forces tier-2 while_loop JIT
+    res, _ = run_both("""
+        mov r1, 10
+        mov r0, 0
+        loop:
+        add r0, r1
+        sub r1, 1
+        jgt r1, 0, loop
+        exit
+    """)
+    assert res.r0 == 55
+
+
+# ---------------------------------------------------------------- helpers/maps
+
+def _arr(name="a", n=8):
+    return M.MapSpec(name, M.MapKind.ARRAY, max_entries=n)
+
+
+def _hash(name="h", n=8):
+    return M.MapSpec(name, M.MapKind.HASH, max_entries=n)
+
+
+def test_array_map_update_lookup():
+    res, _ = run_both("""
+        mov r6, 3           ; key
+        stxdw [r10-8], r6
+        mov r6, 99
+        stxdw [r10-16], r6
+        mov r1, 0           ; fd 0
+        mov r2, r10
+        add r2, -8
+        mov r3, r10
+        add r3, -16
+        mov r4, 0
+        call map_update_elem
+        mov r1, 0
+        mov r2, r10
+        add r2, -8
+        call map_lookup_elem
+        exit
+    """, specs=[_arr()])
+    assert res.r0 == 99
+
+
+def test_array_fetch_add():
+    res, _ = run_both("""
+        mov r6, 2
+        stxdw [r10-8], r6
+        mov r1, 0
+        mov r2, r10
+        add r2, -8
+        mov r3, 5
+        call map_fetch_add      ; old = 0
+        mov r1, 0
+        mov r2, r10
+        add r2, -8
+        mov r3, 7
+        call map_fetch_add      ; old = 5
+        exit
+    """, specs=[_arr()])
+    assert res.r0 == 5
+
+
+def test_array_oob_is_noop():
+    res, _ = run_both("""
+        mov r6, 1000        ; out of bounds key
+        stxdw [r10-8], r6
+        mov r1, 0
+        mov r2, r10
+        add r2, -8
+        mov r3, 5
+        call map_fetch_add
+        exit
+    """, specs=[_arr()])
+    assert res.r0 == 0
+
+
+def test_hash_map_update_lookup_delete():
+    res, _ = run_both("""
+        lddw r6, 0xdeadbeefcafe
+        stxdw [r10-8], r6
+        mov r6, 1234
+        stxdw [r10-16], r6
+        mov r1, 0
+        mov r2, r10
+        add r2, -8
+        mov r3, r10
+        add r3, -16
+        mov r4, 0
+        call map_update_elem
+        mov r1, 0
+        mov r2, r10
+        add r2, -8
+        call map_lookup_elem
+        mov r7, r0
+        mov r1, 0
+        mov r2, r10
+        add r2, -8
+        call map_delete_elem
+        mov r1, 0
+        mov r2, r10
+        add r2, -8
+        call map_lookup_elem    ; gone -> 0
+        add r0, r7
+        exit
+    """, specs=[_hash()])
+    assert res.r0 == 1234
+
+
+def test_hash_collisions_fill_table():
+    # insert n+2 distinct keys into an n=4 table; two must fail with -7
+    text = ["mov r8, 0"]
+    for k in range(6):
+        text += [
+            f"mov r6, {100 + k}",
+            "stxdw [r10-8], r6",
+            f"mov r6, {k}",
+            "stxdw [r10-16], r6",
+            "mov r1, 0",
+            "mov r2, r10", "add r2, -8",
+            "mov r3, r10", "add r3, -16",
+            "mov r4, 0",
+            "call map_update_elem",
+            "and r0, 0xff",
+            "add r8, r0",
+        ]
+    text += ["mov r0, r8", "exit"]
+    res, _ = run_both("\n".join(text), specs=[_hash("h", 4)])
+    # 4 inserts succeed (r0=0), 2 fail with -7 (&0xff = 0xf9)
+    assert res.r0 == 2 * 0xF9
+
+
+def test_hist_add():
+    res, _ = run_both("""
+        mov r1, 0
+        mov r2, 1000
+        call hist_add
+        mov r1, 0
+        mov r2, 3
+        call hist_add
+        mov r1, 0
+        mov r2, 0
+        call hist_add
+        mov r0, 0
+        exit
+    """, specs=[M.MapSpec("hist", M.MapKind.LOG2HIST)])
+
+
+def test_ringbuf_output():
+    res, _ = run_both("""
+        mov r6, 41
+        stxdw [r10-16], r6
+        mov r6, 42
+        stxdw [r10-8], r6
+        mov r1, 0
+        mov r2, r10
+        add r2, -16
+        mov r3, 16
+        mov r4, 0
+        call ringbuf_output
+        exit
+    """, specs=[M.MapSpec("rb", M.MapKind.RINGBUF, max_entries=4, rec_width=2)])
+    assert res.r0 == 0
+
+
+def test_override_return():
+    res, _ = run_both("""
+        mov r1, 255
+        call override_return
+        mov r0, 0
+        exit
+    """)
+    assert res.aux.override_set == 1 and res.aux.override_val == 255
+
+
+def test_log2_helper():
+    res, _ = run_both("""
+        mov r1, 4096
+        call log2
+        exit
+    """)
+    assert res.r0 == 13  # bit_length(4096)
+
+
+def test_aux_helpers():
+    res, _ = run_both("""
+        call ktime_get_ns
+        mov r6, r0
+        call get_smp_processor_id
+        add r6, r0
+        call get_current_pid_tgid
+        add r6, r0
+        mov r0, r6
+        exit
+    """, aux_kw=dict(time_ns=1000, cpu=3, pid=77))
+    assert res.r0 == 1080
+
+
+def test_prandom_deterministic():
+    res, _ = run_both("""
+        call get_prandom_u32
+        mov r6, r0
+        call get_prandom_u32
+        add r6, r0
+        mov r0, r6
+        exit
+    """)
+
+
+def test_branchy_map_updates_predication():
+    # the untaken branch's map update must NOT happen (T1 predication)
+    res, _ = run_both("""
+        ldxdw r6, [r1+0]
+        mov r7, 1            ; key 1
+        jgt r6, 100, hot
+        mov r7, 0            ; key 0
+        hot:
+        stxdw [r10-8], r7
+        mov r1, 0
+        mov r2, r10
+        add r2, -8
+        mov r3, 1
+        call map_fetch_add
+        mov r0, r7
+        exit
+    """, ctx_words=[50], specs=[_arr()])
+    assert res.r0 == 0
+
+
+# ---------------------------------------------------------------- hypothesis
+
+_ALU64 = ["add", "sub", "mul", "div", "or", "and", "lsh", "rsh", "mod",
+          "xor", "arsh"]
+
+
+@st.composite
+def straightline_program(draw):
+    """Random straight-line ALU program over r0-r5 + ctx loads + stack ops."""
+    lines = [f"ldxdw r{i}, [r1+{8 * i}]" for i in range(2, 6)]
+    lines.append("mov r0, 0")
+    n = draw(st.integers(2, 25))
+    for _ in range(n):
+        op = draw(st.sampled_from(_ALU64 + ["mov"]))
+        w = draw(st.sampled_from(["", "32"]))
+        dst = draw(st.integers(0, 5))
+        if dst == 1:
+            dst = 0  # keep r1 = ctx ptr intact
+        if draw(st.booleans()):
+            src = draw(st.integers(2, 5))
+            lines.append(f"{op}{w} r{dst}, r{src}")
+        else:
+            imm = draw(st.integers(-2**31, 2**31 - 1))
+            lines.append(f"{op}{w} r{dst}, {imm}")
+    # occasional stack round-trip
+    if draw(st.booleans()):
+        lines.append("stxdw [r10-8], r0")
+        lines.append("ldxdw r0, [r10-8]")
+    lines.append("exit")
+    return "\n".join(lines)
+
+
+@settings(max_examples=60, deadline=None)
+@given(prog=straightline_program(),
+       ctx=st.lists(st.integers(0, 2**63 - 1), min_size=8, max_size=8))
+def test_differential_random_straightline(prog, ctx):
+    run_both(prog, ctx_words=ctx)
+
+
+@st.composite
+def branchy_program(draw):
+    """Random DAG with forward branches (tier-1 if-conversion stress)."""
+    lines = ["ldxdw r2, [r1+0]", "ldxdw r3, [r1+8]", "mov r0, 0"]
+    nblk = draw(st.integers(1, 4))
+    for b in range(nblk):
+        cond = draw(st.sampled_from(["jeq", "jgt", "jsgt", "jlt", "jset"]))
+        imm = draw(st.integers(-100, 100))
+        lines.append(f"{cond} r2, {imm}, skip{b}")
+        for _ in range(draw(st.integers(1, 3))):
+            op = draw(st.sampled_from(_ALU64))
+            imm2 = draw(st.integers(-1000, 1000))
+            lines.append(f"{op} r0, {imm2}")
+        lines.append(f"add r3, 1")
+        lines.append(f"skip{b}:")
+        lines.append("add r0, r3")
+    lines.append("exit")
+    return "\n".join(lines)
+
+
+@settings(max_examples=40, deadline=None)
+@given(prog=branchy_program(),
+       ctx=st.lists(st.integers(-200, 200), min_size=8, max_size=8))
+def test_differential_random_branches(prog, ctx):
+    run_both(prog, ctx_words=[isa.u64(c) for c in ctx])
+
+
+@settings(max_examples=20, deadline=None)
+@given(keys=st.lists(st.integers(-50, 50), min_size=1, max_size=12),
+       deltas=st.lists(st.integers(-5, 5), min_size=12, max_size=12))
+def test_differential_hash_fetch_add(keys, deltas):
+    lines = []
+    for k, d in zip(keys, deltas):
+        lines += [
+            f"mov r6, {k}",
+            "stxdw [r10-8], r6",
+            "mov r1, 0",
+            "mov r2, r10", "add r2, -8",
+            f"mov r3, {d}",
+            "call map_fetch_add",
+        ]
+    lines += ["mov r0, 0", "exit"]
+    run_both("\n".join(lines), specs=[_hash("h", 8)])
