@@ -1,16 +1,25 @@
 """Benchmark harness — one section per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--fast]
+    PYTHONPATH=src python -m benchmarks.run --json BENCH_probe.json
 
 Sections:
   table1   probe latency, kernel-mode vs bpftime-mode (paper Table 1)
   fig3     VM/JIT micro-suite vs interpreter + native (paper Figure 3)
   maps     map-op throughput (ref vs Pallas-interpret)
+  probe    probe-stage ns/event per exec mode (scan/vectorized/fused)
   roofline aggregate of dry-run cells (results/*.json), if present
+
+`--json PATH` runs ONLY the probe-pipeline section and writes the
+machine-readable BENCH_probe.json (ns/event per mode + fused-vs-scan
+speedup) so subsequent PRs can track the perf trajectory. `--fast` shrinks
+the tape (smoke-test mode).
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import time
 
 import jax
@@ -25,7 +34,31 @@ def section(title):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write probe-pipeline results as JSON (runs only "
+                         "that section)")
     args = ap.parse_args(argv)
+
+    if args.json:
+        # temp-file + atomic rename: fail fast on a bad path without
+        # truncating a previous run's results if the benchmark dies
+        tmp = args.json + ".tmp"
+        with open(tmp, "w"):
+            pass
+        from benchmarks import probe_pipeline
+        res = probe_pipeline.run(n_events=512 if args.fast else 4096,
+                                 iters=3 if args.fast else 10)
+        with open(tmp, "w") as f:
+            json.dump(res, f, indent=1)
+        os.replace(tmp, args.json)
+        section(f"probe_pipeline ({res['n_programs']} programs, "
+                f"{res['n_events']} events)")
+        for mode, r in res["modes"].items():
+            print(f"{mode},{r['ns_per_event']:.1f}ns/event")
+        if "speedup_fused_vs_scan" in res:
+            print(f"# fused vs scan: {res['speedup_fused_vs_scan']:.1f}x")
+        print(f"\nwrote {args.json}\nOK")
+        return
 
     section("table1_probe_latency (ns/event)")
     from benchmarks import table1_probe_latency
@@ -66,6 +99,15 @@ def main(argv=None):
         jax.block_until_ready(out)
         print(f"hash_fetch_add_batch[{impl}],"
               f"{(time.perf_counter() - t0) / 20 * 1e6:.1f}")
+
+    section("probe_pipeline (ns/event per mode)")
+    from benchmarks import probe_pipeline
+    res = probe_pipeline.run(n_events=512 if args.fast else 4096,
+                             iters=3 if args.fast else 10)
+    for mode, r in res["modes"].items():
+        print(f"{mode},{r['ns_per_event']:.1f}")
+    if "speedup_fused_vs_scan" in res:
+        print(f"# fused vs scan: {res['speedup_fused_vs_scan']:.1f}x")
 
     section("roofline (from dry-run results/)")
     try:

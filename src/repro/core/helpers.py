@@ -51,3 +51,11 @@ HELPERS: dict[int, HelperSig] = {h.hid: h for h in [
 ]}
 
 HELPER_IDS: dict[str, int] = {h.name: h.hid for h in HELPERS.values()}
+
+# aux fields each helper may WRITE — drives the verifier's touched-aux
+# analysis (fused pipeline gates per-event aux selects to this footprint).
+AUX_WRITES: dict[str, tuple[str, ...]] = {
+    "get_prandom_u32": ("rand",),
+    "trace_printk": ("printk_buf", "printk_n"),
+    "override_return": ("override_set", "override_val"),
+}

@@ -24,7 +24,6 @@ sequential scan. See DESIGN.md §2 adaptation 1.
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 
 import jax
@@ -42,6 +41,13 @@ U8 = jnp.uint8
 # helpers safe for the vectorized (batched-events) compiler: commutative
 # side effects only.
 VECTOR_SAFE_HELPERS = {1001, 1005, 1004, 5, 8, 14, 1002, 7, 6, 1003, 130}
+
+# word-oriented stack: 512 bytes modelled as 64 little-endian i64 lanes.
+# Verifier-proven aligned 8-byte accesses lower to ONE dynamic-slice /
+# scatter; unaligned and sub-word accesses keep byte-exact semantics via
+# static shift/mask codegen over at most two words.
+STACK_WORDS = STACK_SIZE // 8
+_U64_FULL = 0xFFFFFFFFFFFFFFFF
 
 
 def make_aux(time_ns=0, cpu=0, pid=0, rand=0x12345678):
@@ -148,19 +154,49 @@ def _jmp_cond_jax(op: int, lhs, rhs, is64: bool):
     raise AssertionError(f"jmp op {op:#x}")
 
 
-def _stack_load(stack, off: int, size: int):
-    """static-offset little-endian load, zero-extended to i64."""
-    b = stack[off:off + size].astype(I64)
-    out = jnp.int64(0)
-    for i in range(size):
-        out = out | (b[i] << (8 * i))
-    return out
+def _stack_load(stack, off: int, size: int, aligned: bool | None = None):
+    """Static-offset little-endian load from the i64-word stack, zero-
+    extended to i64. `aligned` is the verifier's proof of natural 8-byte
+    alignment (derived from the static offset when not supplied): that path
+    is a single word gather; the general path reads the one or two covering
+    words and shifts/masks — all offsets/sizes are compile-time constants,
+    so the lowered HLO contains no byte-lane loops."""
+    if aligned is None:
+        aligned = off % 8 == 0 and size == 8
+    w0, rb = divmod(off, 8)
+    if aligned:
+        return stack[w0]
+    lo = _u(stack[w0]) >> jnp.uint64(8 * rb)
+    if rb + size > 8:                       # spans into the next word
+        lo = lo | (_u(stack[w0 + 1]) << jnp.uint64(8 * (8 - rb)))
+    if size < 8:
+        lo = lo & jnp.uint64((1 << (8 * size)) - 1)
+    return lo.astype(I64)
 
 
-def _stack_store(stack, off: int, size: int, val):
-    lanes = [jnp.bitwise_and(val >> (8 * i), jnp.int64(0xFF)).astype(U8)
-             for i in range(size)]
-    return stack.at[off:off + size].set(jnp.stack(lanes))
+def _stack_store(stack, off: int, size: int, val, aligned: bool | None = None):
+    """Static-offset little-endian store of the low `size` bytes of `val`
+    into the i64-word stack. Aligned 8-byte stores are one scatter; the
+    general path read-modify-writes the one or two covering words."""
+    if aligned is None:
+        aligned = off % 8 == 0 and size == 8
+    if aligned:
+        return stack.at[off // 8].set(val)
+    w0, rb = divmod(off, 8)
+    v = _u(val)
+    if size < 8:
+        v = v & jnp.uint64((1 << (8 * size)) - 1)
+    nb0 = min(size, 8 - rb)                 # bytes landing in word0
+    m0 = ((1 << (8 * nb0)) - 1) << (8 * rb)
+    w0_new = ((_u(stack[w0]) & jnp.uint64(m0 ^ _U64_FULL))
+              | ((v << jnp.uint64(8 * rb)) & jnp.uint64(m0)))
+    stack = stack.at[w0].set(w0_new.astype(I64))
+    if rb + size > 8:
+        m1 = (1 << (8 * (rb + size - 8))) - 1
+        w1_new = ((_u(stack[w0 + 1]) & jnp.uint64(m1 ^ _U64_FULL))
+                  | ((v >> jnp.uint64(8 * (8 - rb))) & jnp.uint64(m1)))
+        stack = stack.at[w0 + 1].set(w1_new.astype(I64))
+    return stack
 
 
 def _imm_src(ins, is64: bool):
@@ -172,7 +208,7 @@ def _imm_src(ins, is64: bool):
 @dataclass
 class _Machine:
     regs: list          # 11 traced i64 scalars
-    stack: object       # u8[512]
+    stack: object       # i64[STACK_WORDS] (little-endian byte semantics)
 
 
 def _exec_straightline(vprog: VerifiedProgram, lo: int, hi: int, m: _Machine,
@@ -200,7 +236,8 @@ def _exec_straightline(vprog: VerifiedProgram, lo: int, hi: int, m: _Machine,
             ann: MemAnn = vprog.anns[pc]
             size = SIZE_BYTES[ins.op & SIZE_MASK]
             if ann.region == "stack":
-                m.regs[ins.dst] = _stack_load(m.stack, ann.off, size)
+                m.regs[ins.dst] = _stack_load(m.stack, ann.off, size,
+                                              aligned=ann.aligned)
             else:  # ctx — i64 word array, static offset
                 word, rem = divmod(ann.off, 8)
                 v = ctx[word]
@@ -215,7 +252,8 @@ def _exec_straightline(vprog: VerifiedProgram, lo: int, hi: int, m: _Machine,
             size = SIZE_BYTES[ins.op & SIZE_MASK]
             # ST: imm sign-extended, low `size` bytes written (oracle parity)
             val = m.regs[ins.src] if cls == BPF_STX else jnp.int64(ins.imm)
-            m.stack = _stack_store(m.stack, ann.off, size, val)
+            m.stack = _stack_store(m.stack, ann.off, size, val,
+                                   aligned=ann.aligned)
         elif cls in (BPF_JMP, BPF_JMP32) and (ins.op & OP_MASK) == isa.BPF_CALL:
             ann = vprog.anns[pc]
             r0, maps_state, aux = helper_cb(vprog, ann, m, maps_state,
@@ -368,12 +406,17 @@ def compile_t1(vprog: VerifiedProgram, helper_cb=None):
     assert vprog.tier == "dag"
     order = _topo_order(vprog)
 
-    def run(ctx, maps_state, aux):
-        """ctx: i64[ctx_words]; returns (r0, maps_state, aux)."""
+    def run(ctx, maps_state, aux, entry_pred=None):
+        """ctx: i64[ctx_words]; returns (r0, maps_state, aux).
+        `entry_pred` (traced bool) is folded into the entry block's arrival
+        predicate: every side effect in the program is already gated on its
+        block predicate, so an invalid event becomes a complete no-op with
+        NO post-hoc state select — the fused pipeline's per-event gate."""
         regs0 = [jnp.int64(0)] * 11
         regs0[isa.R1] = jnp.int64(CTX_BASE)
         regs0[isa.R10] = jnp.int64(STACK_BASE + STACK_SIZE)
-        entry = (jnp.asarray(True), regs0, jnp.zeros((STACK_SIZE,), U8))
+        p0 = jnp.asarray(True) if entry_pred is None else entry_pred
+        entry = (p0, regs0, jnp.zeros((STACK_WORDS,), I64))
         incoming: dict[int, tuple] = {0: entry}
         exits = []  # (pred, r0)
 
@@ -471,7 +514,7 @@ def compile_t2(vprog: VerifiedProgram):
         regs0 = jnp.zeros((11,), I64)
         regs0 = regs0.at[isa.R1].set(jnp.int64(CTX_BASE))
         regs0 = regs0.at[isa.R10].set(jnp.int64(STACK_BASE + STACK_SIZE))
-        stack0 = jnp.zeros((STACK_SIZE,), U8)
+        stack0 = jnp.zeros((STACK_WORDS,), I64)
 
         def cond(state):
             carry, fuel = state
@@ -517,3 +560,40 @@ def run_over_events(vprog: VerifiedProgram, ctxs, valid, maps_state, aux):
     (maps_out, aux_out), r0s = jax.lax.scan(step, (maps_state, aux),
                                             (ctxs, valid))
     return r0s, maps_out, aux_out
+
+
+def run_fused_scan(entries, ctxs, maps_state, aux):
+    """ONE combined lax.scan over the event tape for every scan-mode
+    attachment — the fused pipeline's fallback lane (see DESIGN.md §2).
+
+    entries: [(site_id, kind, vprog)]. Each scan step runs every program on
+    the row, gated by that program's (site, kind) validity:
+      * T1 (DAG) programs fold validity into the entry-block predicate, so
+        invalid rows cost nothing and NO state select is emitted;
+      * T2 (loop) programs run unconditionally and select — but only over
+        the maps/aux fields in the program's verified touched-maps
+        footprint, not the whole state tree.
+    Cost: O(events) scan steps total instead of O(programs x events), with
+    per-step select work O(touched_state) instead of O(total_state)."""
+    compiled = [(sid, kind, vp, compile_program(vp))
+                for sid, kind, vp in entries]
+
+    def step(carry, row):
+        maps_state, aux = carry
+        for sid, kind, vp, prog in compiled:
+            ok = (row[0] == jnp.int64(sid)) & (row[1] == jnp.int64(kind))
+            if vp.tier == "dag":
+                _r0, maps_state, aux = prog(row, maps_state, aux,
+                                            entry_pred=ok)
+            else:
+                _r0, maps2, aux2 = prog(row, maps_state, aux)
+                sel = lambda a, b: jnp.where(ok, a, b)     # noqa: E731
+                upd = {nm: jax.tree.map(sel, maps2[nm], maps_state[nm])
+                       for nm in vp.touched_map_names()}
+                maps_state = {**maps_state, **upd}
+                aux = {**aux, **{k: sel(aux2[k], aux[k])
+                                 for k in sorted(vp.touched_aux)}}
+        return (maps_state, aux), jnp.int64(0)
+
+    (maps_out, aux_out), _ = jax.lax.scan(step, (maps_state, aux), ctxs)
+    return maps_out, aux_out

@@ -230,6 +230,108 @@ def j_hash_fetch_add(st, key, delta, pred):
     return {"keys": keys, "used": used, "values": vals}, old
 
 
+def _next_free_dist(used):
+    """For every start position s: probe-order distance to the first free
+    slot (>= n means the table is full). One suffix-min over the doubled
+    free mask — O(2n), shared across the whole event batch."""
+    n = used.shape[0]
+    free2 = jnp.concatenate([~used, ~used])
+    pos = jnp.arange(2 * n, dtype=jnp.int32)
+    cand = jnp.where(free2, pos, jnp.int32(2 * n))
+    suffix_min = jax.lax.cummin(cand, reverse=True)
+    return suffix_min[:n] - jnp.arange(n, dtype=jnp.int32)
+
+
+def _j_hash_lookup_batch(st, keys):
+    """Vectorized lookup for a whole key batch: (slot, found) per lane,
+    agreeing with `_j_hash_find` exactly.
+
+    Key insight: whether a TABLE ENTRY is probe-reachable is a property of
+    the table alone — entry j holding key k is found by a probe for k iff
+    its probe distance (j - hash(k)) mod n is smaller than the distance to
+    the first free slot from hash(k) (`_next_free_dist`); duplicates of a
+    key (broken chains) resolve to the smallest probe distance. So the
+    whole lookup is O(n log n) table-side preprocessing (lexsort by
+    (key, probe_dist)) + an O(B log n) per-lane binary search — no [B, n]
+    work at all."""
+    kt, ut = st["keys"], st["used"]
+    n = kt.shape[0]
+    j = jnp.arange(n, dtype=jnp.int32)
+    used = ut != 0
+    startj = _jnp_hash_idx(kt, n).astype(jnp.int32)
+    dmj = j - startj
+    dmj = jnp.where(dmj < 0, dmj + n, dmj)       # probe dist of entry j
+    reach = used & (dmj < _next_free_dist(used)[startj])
+    skey = jnp.where(reach, kt, jnp.int64((1 << 63) - 1))
+    sdm = jnp.where(reach, dmj, jnp.int32(n))    # sentinels sort last
+    order = jnp.lexsort((sdm, skey))
+    skey_s, slot_s, reach_s = skey[order], j[order], reach[order]
+    pos = jnp.clip(jnp.searchsorted(skey_s, keys), 0, n - 1)
+    found = reach_s[pos] & (skey_s[pos] == keys)
+    return slot_s[pos], found
+
+
+def j_hash_fetch_add_batch(st, keys, deltas, ok):
+    """Batched hash fetch-add over a whole event batch: end state is
+    bit-identical to applying `j_hash_fetch_add` sequentially over the valid
+    lanes in batch order (fetch-add results are not produced — the caller
+    has verified they are dead).
+
+    Algorithm (the vectorized-scatter replacement for B sequential O(n)
+    probes):
+      1. one batched lookup (`_j_hash_lookup_batch`, O(n log n + B log n)):
+         every lane whose key is already resident contributes via a single
+         scatter-add (duplicate keys accumulate — adds commute);
+      2. a `while_loop` over only the MISSING keys: each iteration takes
+         the first pending lane, aggregates that key's total delta with one
+         masked reduction, probes/inserts, and clears the whole key group —
+         so iterations = distinct new keys (0 in steady state), inserted in
+         first-occurrence order (slot assignment must match the sequential
+         twin).
+
+    Equivalence argument: within a fetch-add-only batch the table's
+    STRUCTURE (keys/used) changes only at each key's first valid event, and
+    those happen in first-occurrence order in both formulations; value adds
+    within one slot commute. Probing inside the insert loop re-runs against
+    the updated table, so chains exposed by earlier in-batch inserts behave
+    exactly as in the sequential order.
+    """
+    B = keys.shape[0]
+    idxs = jnp.arange(B, dtype=jnp.int32)
+    delta_eff = jnp.where(ok, deltas, jnp.int64(0))
+
+    # resident keys: one batched lookup + one scatter-add
+    slot, found = _j_hash_lookup_batch(st, keys)
+    vals = st["values"].at[slot].add(
+        jnp.where(ok & found, delta_eff, jnp.int64(0)))
+
+    # missing keys: insert in first-occurrence order (steady state: 0 iters)
+    pending = ok & ~found
+
+    def cond(c):
+        return jnp.any(c[3])
+
+    def body(c):
+        kt, ut, vt, pend = c
+        i = jnp.argmin(jnp.where(pend, idxs, jnp.int32(B)))
+        k = keys[i]
+        group = ok & (keys == k)
+        d = jnp.sum(jnp.where(group, delta_eff, jnp.int64(0)))
+        sl, fnd, fsl, hfree = _j_hash_find(
+            {"keys": kt, "used": ut, "values": vt}, k)
+        tgt = jnp.where(fnd, sl, fsl)
+        do = fnd | hfree                          # table full -> drop
+        newv = jnp.where(fnd, vt[tgt] + d, d)
+        kt = kt.at[tgt].set(jnp.where(do, k, kt[tgt]))
+        ut = ut.at[tgt].set(jnp.where(do, jnp.int64(1), ut[tgt]))
+        vt = vt.at[tgt].set(jnp.where(do, newv, vt[tgt]))
+        return kt, ut, vt, pend & ~group
+
+    kt, ut, vt, _ = jax.lax.while_loop(
+        cond, body, (st["keys"], st["used"], vals, pending))
+    return {"keys": kt, "used": ut, "values": vt}
+
+
 def j_hash_delete(st, key, pred):
     # tombstone-free delete: mark unused (probe chains may break for keys
     # inserted past this slot — same limitation in the numpy twin, tested).
@@ -246,14 +348,18 @@ def j_hist_add(st, value, pred):
 
 
 def j_ringbuf_emit(st, record, pred):
-    """record: i64[width]. Overwrite mode (head always advances when pred)."""
+    """record: i64[width]. Overwrite mode (head always advances when pred);
+    once the head laps capacity each emit overwrites an unread record and
+    bumps the `dropped` counter."""
     cap = st["data"].shape[0]
     head = st["head"][0]
     slot = (head % cap).astype(jnp.int32)
     row = jnp.where(pred, record, st["data"][slot])
     data = st["data"].at[slot].set(row)
     head2 = st["head"].at[0].add(jnp.where(pred, jnp.int64(1), jnp.int64(0)))
-    return {"data": data, "head": head2, "dropped": st["dropped"]}
+    lap = jnp.where(pred & (head >= cap), jnp.int64(1), jnp.int64(0))
+    dropped = st["dropped"].at[0].add(lap)
+    return {"data": data, "head": head2, "dropped": dropped}
 
 
 # --------------------------------------------------------------------------
@@ -345,9 +451,12 @@ def n_hist_add(st, value):
 
 def n_ringbuf_emit(st, record):
     cap = st["data"].shape[0]
-    slot = int(st["head"][0]) % cap
+    head = int(st["head"][0])
+    slot = head % cap
     st["data"][slot, :len(record)] = [_to_i64(x) for x in record]
     st["head"][0] += 1
+    if head >= cap:                    # lapped: overwrote an unread record
+        st["dropped"][0] += 1
 
 
 def n_ringbuf_drain(st, last_read: int) -> tuple[list[list[int]], int]:

@@ -23,9 +23,49 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import events as E, jit as J, loader, maps as M, syscalls as S, vm
+from .helpers import HELPERS
 from .loader import ProgramObject
 from .maps import MapSpec
-from .verifier import VerifiedProgram, verify
+from .verifier import CallAnn, VerifiedProgram, verify
+
+# helpers whose map side effects commute across programs (order-free)
+_COMMUTATIVE_HELPERS = {"map_fetch_add", "percpu_fetch_add", "hist_add"}
+_AUX_RESOURCES = {"trace_printk": "printk", "override_return": "override",
+                  "get_prandom_u32": "rand"}
+
+
+def _ordering_resources(vprog: VerifiedProgram) -> dict:
+    """{resource: commutative?} for one program. Two DIFFERENT programs may
+    be scheduled on different fused lanes (or reordered within one) only if
+    every resource they share is touched commutatively by both; otherwise
+    the fused pipeline must keep the seed scan ordering (see DESIGN.md §2).
+    """
+    out: dict = {}
+    for ann in vprog.anns.values():
+        if not isinstance(ann, CallAnn):
+            continue
+        sig = HELPERS[ann.hid]
+        comm = sig.name in _COMMUTATIVE_HELPERS
+        for i, kind in enumerate(sig.args):
+            if kind == "mapfd":
+                key = ("map", vprog.map_specs[ann.statics[i]].name)
+                out[key] = out.get(key, True) and comm
+        if sig.name in _AUX_RESOURCES:
+            out[("aux", _AUX_RESOURCES[sig.name])] = False
+    return out
+
+
+def _has_ordering_conflict(vprogs: list) -> bool:
+    """True iff any resource is shared non-commutatively across two
+    distinct programs (same program attached to several sites is fine —
+    its per-attachment order is preserved by the fused scheduler)."""
+    res = [_ordering_resources(vp) for vp in vprogs]
+    for i in range(len(res)):
+        for j in range(i + 1, len(res)):
+            for key, comm_i in res[i].items():
+                if key in res[j] and not (comm_i and res[j][key]):
+                    return True
+    return False
 
 
 @dataclass
@@ -62,7 +102,9 @@ class BpftimeRuntime:
         self.shm = None
         self._req_cursor = 0
         self._objects: dict[str, str] = {}   # name -> serialized object
-        self.exec_mode = "scan"      # 'scan' | 'vectorized' (perf path)
+        # 'fused' (default): single-pass multi-program dispatch;
+        # 'scan' / 'vectorized': the per-attachment seed paths.
+        self.exec_mode = "fused"
 
     # ---------------------------------------------------------------- maps
     def create_map(self, spec: MapSpec) -> int:
@@ -159,10 +201,55 @@ class BpftimeRuntime:
 
     def probe_stage(self, event_rows, map_states, aux, mode=None):
         """Run all attached device programs over the step's event tape.
-        Traced inside the step function. event_rows: i64[N, 16]."""
+        Traced inside the step function. event_rows: i64[N, 16].
+
+        'fused' (default) makes ONE pass over the tape: all vector-safe
+        programs across all attachments share a single shadow vmap whose
+        per-program validity is folded into the entry predicate, with side
+        effects applied once per call site; the remaining programs share one
+        combined scan whose per-event selects are gated to each program's
+        touched-maps footprint. Cost: O(events + call_sites) instead of the
+        seed's O(programs x events x total_state).
+        'scan' / 'vectorized' keep the seed per-attachment behavior (oracle
+        for differential tests and the benchmark baseline)."""
         mode = mode or self.exec_mode
         if event_rows.shape[0] == 0 or not self.device_attach:
             return map_states, aux
+        if mode == "fused":
+            from . import vectorized as V
+            # ordering guard: distinct programs sharing state
+            # non-commutatively (ringbuf streams, rw maps, override/printk/
+            # rand aux) would observe a different interleaving across the
+            # fused lanes than under the seed per-attachment order — fall
+            # back to scan mode for exactness (rare; typical instrumentation
+            # uses disjoint or fetch-add/hist maps).
+            uniq = {pid: self.progs[pid].vprog
+                    for pids in self.device_attach.values() for pid in pids}
+            n_attach = {pid: sum(pids.count(pid)
+                                 for pids in self.device_attach.values())
+                        for pid in uniq}
+            # multi-attached scan-lane programs also lose per-attachment
+            # order in the combined scan (the vector lane preserves it)
+            self_conflict = any(
+                n_attach[pid] > 1 and not V.is_vector_safe(vp)
+                and any(not c for c in _ordering_resources(vp).values())
+                for pid, vp in uniq.items())
+            if not self_conflict and \
+                    not _has_ordering_conflict(list(uniq.values())):
+                vec, rest = [], []
+                for (sid, kind), pids in sorted(self.device_attach.items()):
+                    for pid in pids:
+                        vprog = self.progs[pid].vprog
+                        lane = vec if V.is_vector_safe(vprog) else rest
+                        lane.append((sid, kind, vprog))
+                if vec:
+                    map_states, aux = V.run_fused_vector(
+                        vec, event_rows, map_states, aux)
+                if rest:
+                    map_states, aux = J.run_fused_scan(
+                        rest, event_rows, map_states, aux)
+                return map_states, aux
+            mode = "scan"
         for (sid, kind), pids in sorted(self.device_attach.items()):
             valid = ((event_rows[:, 0] == sid) &
                      (event_rows[:, 1] == kind))

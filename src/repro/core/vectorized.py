@@ -1,20 +1,31 @@
-"""Vectorized probe execution — the TPU-native beyond-paper optimization.
+"""Vectorized + fused probe execution — the TPU-native beyond-paper
+optimization.
 
 The paper JITs each probe invocation to straight-line native code; on a
-vector machine the equivalent is executing ONE probe program over a whole
+vector machine the equivalent is executing probe programs over a whole
 event batch as tensor ops. For DAG programs whose map side effects are
 commutative (fetch-add family), the sequential lax.scan over events
 (jit.run_over_events) collapses to:
 
   1. a SHADOW pass: vmap the T1 if-converted dataflow over event rows with
      side-effect helpers replaced by recorders -> per-call-site batched
-     (pred, args) tensors;
-  2. an APPLY pass: one scatter-add / histogram-add / batched-ringbuf op
-     per call site over the whole batch.
+     (pred, args) tensors. Event validity is folded into the entry-block
+     predicate, so recorded preds already carry it;
+  2. an APPLY pass: one scatter-add / segment-sum / histogram-add /
+     batched-ringbuf op per call site over the whole batch.
+
+`run_fused_vector` goes one step further (the fused pipeline, DESIGN.md §2):
+ALL vector-safe programs across ALL (site, kind) attachments share ONE
+shadow vmap pass over the tape — each program's validity mask is its entry
+predicate — and side effects apply once per call site. The probe stage then
+costs O(events + call_sites) instead of O(programs x events x total_state).
 
 Cost drops from O(B) sequential program bodies to O(call_sites) vector ops.
 Semantic deltas vs scan mode (checked by is_vector_safe / documented):
   * fetch-add return values must be dead (we verify this statically);
+  * HASH-map fetch_add is batched via sort-by-key + segment_sum + a
+    per-unique-key probe/insert pass (maps.j_hash_fetch_add_batch) —
+    end states are bit-identical to the sequential twin;
   * ringbuf rows keep batch order; override takes the first valid lane;
   * trace_printk is counted, not stored.
 End map states are bit-identical to scan mode for safe programs (tested).
@@ -23,7 +34,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from . import isa, jit as J, maps as M
 from .isa import BPF_JMP, BPF_JMP32, OP_MASK
@@ -74,6 +84,10 @@ def _r0_dead_after(vprog: VerifiedProgram, call_pc: int) -> bool:
 
 
 def is_vector_safe(vprog: VerifiedProgram) -> bool:
+    """True iff the program can run on the batched (shadow+apply) path.
+    ARRAY *and* HASH fetch_add are both batchable (hash via the sorted
+    segment-scatter in maps.j_hash_fetch_add_batch); the remaining
+    requirements are an acyclic CFG and dead fetch-add results."""
     if vprog.tier != "dag":
         return False
     for pc, ann in vprog.anns.items():
@@ -83,20 +97,21 @@ def is_vector_safe(vprog: VerifiedProgram) -> bool:
             continue
         if ann.name not in _EFFECT:
             return False
-        if ann.name in ("map_fetch_add",):
-            fd = ann.statics[0]
-            if vprog.map_specs[fd].kind != M.MapKind.ARRAY:
-                return False                     # hash probing not batched
         if ann.name in ("map_fetch_add", "percpu_fetch_add"):
             if not _r0_dead_after(vprog, pc):
                 return False
     return True
 
 
-def run_vectorized(vprog: VerifiedProgram, event_rows, valid, maps_state,
-                   aux):
-    """event_rows: i64[B, 16]; valid: bool[B]."""
-    meta: list[tuple] = []           # static per-call-site info, 1st trace
+# --------------------------------------------------------------------------
+# shadow pass: record (pred, args) per call site instead of executing
+# --------------------------------------------------------------------------
+
+def _make_shadow_cb(meta: list):
+    """Build the helper callback for the shadow pass. Effectful helpers
+    append a (pred, *dynamic_args) record; `meta` collects the matching
+    static info (program, helper name, statics) — vmap traces the program
+    once, so meta sees exactly one append per call site."""
 
     def shadow_cb(vp, ann, m, ms, aux_l, pred):
         zero = jnp.int64(0)
@@ -129,78 +144,139 @@ def run_vectorized(vprog: VerifiedProgram, event_rows, valid, maps_state,
             rec = (pred,)
         else:  # pragma: no cover - guarded by is_vector_safe
             raise AssertionError(name)
-        ms.setdefault("__recs__", []).append(rec)
-        meta.append((name, ann.statics))
+        ms["__recs__"].append(rec)
+        meta.append((vp, name, ann.statics))
         return zero, ms, aux_l
 
-    t1 = J.compile_t1(vprog, helper_cb=shadow_cb)
+    return shadow_cb
 
-    def shadow(row):
-        ms = {}
-        _r0, ms, _aux = t1(row, ms, aux)
-        return tuple(ms.get("__recs__", []))
 
-    recs = jax.vmap(shadow)(event_rows)     # tuple of stacked rec tuples
-    # meta collected len(recs) times? no: vmap traces once -> one append per site
-    assert len(meta) == len(recs)
+# --------------------------------------------------------------------------
+# apply pass: one batched op per call site
+# --------------------------------------------------------------------------
 
-    # ---- apply phase: one batched op per call site
-    for (name, statics), rec in zip(meta, recs):
-        ok = rec[0] & valid
-        if name == "map_fetch_add":
-            fd = statics[0]
-            sp = vprog.map_specs[fd]
-            st = maps_state[sp.name]
-            keys, delta = rec[1], rec[2]
+def _apply_site(vp, name, statics, rec, maps_state, aux):
+    """Apply one call site's batched side effect. rec[0] is the per-lane
+    predicate with event validity already folded in (entry_pred)."""
+    ok = rec[0]
+    if name == "map_fetch_add":
+        fd = statics[0]
+        sp = vp.map_specs[fd]
+        st = maps_state[sp.name]
+        keys, delta = rec[1], rec[2]
+        if sp.kind == M.MapKind.HASH:
+            new = M.j_hash_fetch_add_batch(st, keys, delta, ok)
+            maps_state = {**maps_state, sp.name: new}
+        else:
             n = sp.max_entries
             inb = ok & (keys >= 0) & (keys < n)
             idx = jnp.clip(keys, 0, n - 1).astype(jnp.int32)
             vals = st["values"].at[idx].add(
                 jnp.where(inb, delta, jnp.int64(0)))
             maps_state = {**maps_state, sp.name: {"values": vals}}
-        elif name == "percpu_fetch_add":
-            fd = statics[0]
-            sp = vprog.map_specs[fd]
-            st = maps_state[sp.name]
-            keys, delta = rec[1], rec[2]
-            n = sp.max_entries
-            inb = ok & (keys >= 0) & (keys < n)
-            idx = jnp.clip(keys, 0, n - 1).astype(jnp.int32)
-            sh = jnp.clip(aux["cpu"], 0, sp.num_shards - 1).astype(jnp.int32)
-            vals = st["values"].at[sh, idx].add(
-                jnp.where(inb, delta, jnp.int64(0)))
-            maps_state = {**maps_state, sp.name: {"values": vals}}
-        elif name == "hist_add":
-            fd = statics[0]
-            sp = vprog.map_specs[fd]
-            st = maps_state[sp.name]
-            v = rec[1]
-            pow2 = jnp.asarray(M._POW2)
-            bins_idx = jnp.where(
-                v <= 0, 0,
-                jnp.minimum(63, jnp.sum((v[:, None] >= pow2[None, :])
-                                        .astype(jnp.int32), axis=1)))
-            bins = st["bins"].at[bins_idx].add(
-                jnp.where(ok, jnp.int64(1), jnp.int64(0)))
-            maps_state = {**maps_state, sp.name: {"bins": bins}}
-        elif name == "ringbuf_output":
-            fd = statics[0]
-            sp = vprog.map_specs[fd]
-            st = maps_state[sp.name]
-            from repro.kernels import ref as KREF
-            d, h = KREF.ringbuf_emit_batch(st["data"], st["head"], rec[1], ok)
-            maps_state = {**maps_state,
-                          sp.name: {"data": d, "head": h,
-                                    "dropped": st["dropped"]}}
-        elif name == "override_return":
-            any_ok = jnp.any(ok)
-            first = jnp.argmax(ok.astype(jnp.int32))
-            aux = {**aux,
-                   "override_set": jnp.where(any_ok, jnp.int64(1),
-                                             aux["override_set"]),
-                   "override_val": jnp.where(any_ok, rec[1][first],
-                                             aux["override_val"])}
-        elif name == "trace_printk":
-            aux = {**aux, "printk_n": aux["printk_n"] +
-                   jnp.sum(ok.astype(I64))}
+    elif name == "percpu_fetch_add":
+        fd = statics[0]
+        sp = vp.map_specs[fd]
+        st = maps_state[sp.name]
+        keys, delta = rec[1], rec[2]
+        n = sp.max_entries
+        inb = ok & (keys >= 0) & (keys < n)
+        idx = jnp.clip(keys, 0, n - 1).astype(jnp.int32)
+        sh = jnp.clip(aux["cpu"], 0, sp.num_shards - 1).astype(jnp.int32)
+        vals = st["values"].at[sh, idx].add(
+            jnp.where(inb, delta, jnp.int64(0)))
+        maps_state = {**maps_state, sp.name: {"values": vals}}
+    elif name == "hist_add":
+        fd = statics[0]
+        sp = vp.map_specs[fd]
+        st = maps_state[sp.name]
+        v = rec[1]
+        # bin = min(63, bit_length(v)) for v > 0: binary search over the
+        # sorted powers of two (exact, O(B log 63) — no [B, 63] matrix)
+        pow2 = jnp.asarray(M._POW2)
+        bl = jnp.searchsorted(pow2, v, side="right").astype(jnp.int32)
+        bins_idx = jnp.where(v <= 0, 0, jnp.minimum(63, bl))
+        bins = st["bins"].at[bins_idx].add(
+            jnp.where(ok, jnp.int64(1), jnp.int64(0)))
+        maps_state = {**maps_state, sp.name: {"bins": bins}}
+    elif name == "ringbuf_output":
+        fd = statics[0]
+        sp = vp.map_specs[fd]
+        st = maps_state[sp.name]
+        from repro.kernels import ref as KREF
+        head0 = st["head"][0]
+        d, h = KREF.ringbuf_emit_batch(st["data"], st["head"], rec[1], ok)
+        # dropped accounting, batch form: the i-th valid record lands at
+        # monotonic position head0 + rank(i); it laps (overwrites an unread
+        # record) when that position >= capacity.
+        cap = sp.max_entries
+        rank = jnp.cumsum(ok.astype(jnp.int64)) - 1
+        lapped = jnp.sum((ok & (head0 + rank >= cap)).astype(jnp.int64))
+        dropped = st["dropped"].at[0].add(lapped)
+        maps_state = {**maps_state,
+                      sp.name: {"data": d, "head": h, "dropped": dropped}}
+    elif name == "override_return":
+        any_ok = jnp.any(ok)
+        first = jnp.argmax(ok.astype(jnp.int32))
+        aux = {**aux,
+               "override_set": jnp.where(any_ok, jnp.int64(1),
+                                         aux["override_set"]),
+               "override_val": jnp.where(any_ok, rec[1][first],
+                                         aux["override_val"])}
+    elif name == "trace_printk":
+        aux = {**aux, "printk_n": aux["printk_n"] +
+               jnp.sum(ok.astype(I64))}
+    return maps_state, aux
+
+
+# --------------------------------------------------------------------------
+# drivers
+# --------------------------------------------------------------------------
+
+def run_vectorized(vprog: VerifiedProgram, event_rows, valid, maps_state,
+                   aux):
+    """Single-program batched execution (seed 'vectorized' mode).
+    event_rows: i64[B, 16]; valid: bool[B] folded into the entry pred."""
+    meta: list[tuple] = []
+    t1 = J.compile_t1(vprog, helper_cb=_make_shadow_cb(meta))
+
+    def shadow(row, ok):
+        ms = {"__recs__": []}
+        t1(row, ms, aux, entry_pred=ok)
+        return tuple(ms["__recs__"])
+
+    recs = jax.vmap(shadow)(event_rows, valid)
+    # meta collected len(recs) times? no: vmap traces once -> one append/site
+    assert len(meta) == len(recs)
+    for (vp, name, statics), rec in zip(meta, recs):
+        maps_state, aux = _apply_site(vp, name, statics, rec, maps_state,
+                                      aux)
+    return maps_state, aux
+
+
+def run_fused_vector(entries, event_rows, maps_state, aux):
+    """The fused pipeline's vector lane: ONE vmap pass over the event tape
+    executing every vector-safe program of every attachment, then one
+    batched apply per call site.
+
+    entries: [(site_id, kind, vprog)] in attachment order — apply order
+    matches the seed scan mode's sorted-attachment iteration, so per-map
+    streams (ringbuf record order, override first-lane) are preserved."""
+    meta: list[tuple] = []
+    cb = _make_shadow_cb(meta)
+    t1s = [(sid, kind, J.compile_t1(vp, helper_cb=cb))
+           for sid, kind, vp in entries]
+
+    def shadow(row):
+        ms = {"__recs__": []}
+        for sid, kind, t1 in t1s:
+            pred = (row[0] == jnp.int64(sid)) & (row[1] == jnp.int64(kind))
+            t1(row, ms, aux, entry_pred=pred)
+        return tuple(ms["__recs__"])
+
+    recs = jax.vmap(shadow)(event_rows)
+    assert len(meta) == len(recs)
+    for (vp, name, statics), rec in zip(meta, recs):
+        maps_state, aux = _apply_site(vp, name, statics, rec, maps_state,
+                                      aux)
     return maps_state, aux

@@ -86,6 +86,9 @@ class MemAnn:
     region: str     # 'stack' | 'ctx'
     off: int        # byte offset from region base
     size: int
+    # verifier-proven natural 8-byte alignment: the JIT's word-oriented
+    # stack lowers these to a single word load/store (no shifts/masks).
+    aligned: bool = False
 
 
 @dataclass
@@ -117,6 +120,16 @@ class VerifiedProgram:
     tier: str                     # 'dag' | 'loop'
     max_insns: int
     helper_ids_used: set[int] = field(default_factory=set)
+    # static side-effect footprint (the touched-maps analysis): which map
+    # fds this program can write/read through helpers, and which aux fields
+    # it can write. The fused runtime pipeline gates per-event state selects
+    # to exactly this footprint instead of selecting over ALL map state.
+    touched_map_fds: frozenset = frozenset()
+    touched_aux: frozenset = frozenset()
+
+    def touched_map_names(self) -> tuple[str, ...]:
+        return tuple(self.map_specs[fd].name
+                     for fd in sorted(self.touched_map_fds))
 
 
 def verify(insns: list[Insn], map_specs: list[MapSpec], ctx_words: int = 16,
@@ -249,10 +262,25 @@ def verify(insns: list[Insn], map_specs: list[MapSpec], ctx_words: int = 16,
     if dfs(0):
         tier = "loop"
 
+    # ---------------- touched-maps / touched-aux footprint
+    from .helpers import AUX_WRITES
+    touched_fds: set[int] = set()
+    touched_aux: set[str] = set()
+    for ann in anns.values():
+        if not isinstance(ann, CallAnn):
+            continue
+        sig = HELPERS[ann.hid]
+        for i, kind in enumerate(sig.args):
+            if kind == "mapfd":
+                touched_fds.add(ann.statics[i])
+        touched_aux.update(AUX_WRITES.get(ann.name, ()))
+
     return VerifiedProgram(insns=insns, map_specs=list(map_specs),
                            ctx_words=ctx_words, anns=anns, blocks=blocks,
                            block_of=block_of, tier=tier, max_insns=max_insns,
-                           helper_ids_used=helper_ids_used)
+                           helper_ids_used=helper_ids_used,
+                           touched_map_fds=frozenset(touched_fds),
+                           touched_aux=frozenset(touched_aux))
 
 
 # ---------------------------------------------------------------- transfer fn
@@ -346,7 +374,8 @@ def _transfer(pc: int, ins: Insn, st: AbsState, map_specs, ctx_bytes: int,
         size = SIZE_BYTES[ins.op & SIZE_MASK]
         if base.kind == PTR_STACK:
             lo = _check_stack_access(st, base, ins.off, size, pc, write=False)
-            anns[pc] = MemAnn("stack", lo, size)
+            anns[pc] = MemAnn("stack", lo, size,
+                              aligned=(lo % 8 == 0 and size == 8))
         elif base.kind == PTR_CTX:
             lo = base.val + ins.off
             if lo < 0 or lo + size > ctx_bytes:
@@ -355,7 +384,8 @@ def _transfer(pc: int, ins: Insn, st: AbsState, map_specs, ctx_bytes: int,
             if lo % size:
                 raise VerifierError(f"insn {pc}: unaligned ctx read at {lo} "
                                     f"(size {size})")
-            anns[pc] = MemAnn("ctx", lo, size)
+            anns[pc] = MemAnn("ctx", lo, size,
+                              aligned=(lo % 8 == 0 and size == 8))
         else:
             raise VerifierError(f"insn {pc}: load via non-pointer r{ins.src}")
         return st.with_reg(ins.dst, Reg(SCALAR))
@@ -373,7 +403,8 @@ def _transfer(pc: int, ins: Insn, st: AbsState, map_specs, ctx_bytes: int,
                 raise VerifierError(f"insn {pc}: spilling pointers to stack "
                                     "is not supported")
         lo = _check_stack_access(st, base, ins.off, size, pc, write=True)
-        anns[pc] = MemAnn("stack", lo, size)
+        anns[pc] = MemAnn("stack", lo, size,
+                          aligned=(lo % 8 == 0 and size == 8))
         return AbsState(st.regs, st.stack_init | frozenset(range(lo, lo + size)))
 
     if cls in (BPF_JMP, BPF_JMP32):

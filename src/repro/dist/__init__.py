@@ -1,0 +1,3 @@
+"""Distribution layer: sharding rules, gradient compression, explicit
+expert parallelism. Kept dependency-light — model code imports from here
+at module import time."""

@@ -1,0 +1,53 @@
+"""Explicit expert parallelism (shard_map) — §Perf hillclimb target.
+
+The baseline MoE ("gspmd" path, repro.models.moe.apply_moe) expresses the
+expert FFN as global einsums and lets GSPMD insert collectives. This module
+pins the communication pattern down by hand: the dispatch tensor [E, C, D]
+enters a shard_map sharded on experts over the 'model' axis, each shard runs
+only its num_experts / model_parallel experts' swiglu locally, and the
+token-side gather/scatter around it becomes the all_to_all pair.
+
+Opt-in via REPRO_MOE_EP=1 (see repro.models.transformer._moe_dispatch);
+requires an active mesh whose 'model' axis divides num_experts — otherwise
+falls back to the GSPMD path so the call is always safe.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as SH
+from repro.models import moe as MOE
+
+
+def apply_moe_ep(p, x, cfg):
+    """x: [B, S, D] -> [B, S, D]; numerically identical to apply_moe."""
+    mesh = SH.active_mesh()
+    if (mesh is None or "model" not in mesh.axis_names
+            or cfg.num_experts % int(mesh.shape["model"])):
+        return MOE.apply_moe(p, x, cfg)
+    from jax.experimental.shard_map import shard_map
+
+    B, S, D = x.shape
+    dt = x.dtype
+    disp, info = MOE.route(p, x, cfg)
+    disp = SH.constrain(disp, "model", "data", None)
+    spec_e = P("model", None, None)
+
+    @functools.partial(shard_map, mesh=mesh,
+                       in_specs=(spec_e, spec_e, spec_e, spec_e),
+                       out_specs=spec_e, check_rep=False)
+    def expert_ffn(disp_l, w_in_l, w_gate_l, w_out_l):
+        h = jnp.einsum("ecd,edf->ecf", disp_l, w_in_l)
+        g = jnp.einsum("ecd,edf->ecf", disp_l, w_gate_l)
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(disp_l.dtype) * h
+        return jnp.einsum("ecf,efd->ecd", h, w_out_l)
+
+    out_e = expert_ffn(disp, p["w_in"].astype(dt), p["w_gate"].astype(dt),
+                       p["w_out"].astype(dt))
+    out = MOE.combine(out_e, info)
+    MOE.router_probes(info, cfg)
+    return out.reshape(B, S, D)

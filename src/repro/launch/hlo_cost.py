@@ -109,7 +109,11 @@ def _instr_flops(ins: _Instr, comp: _Comp) -> float:
         return 0.0
     res_n = _dims_prod(res.group(2))
     cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.rhs)
-    ops = re.search(r"dot\(\s*%?([\w.\-]+)", ins.rhs)
+    # operands may carry inline type annotations (newer XLA prints
+    # `dot(f32[32,128]{1,0} %lhs, ...)`) or appear bare (`dot(lhs, rhs)`)
+    ops = re.search(r"dot\([^)%]*?%([\w.\-]+)", ins.rhs)
+    if ops is None:
+        ops = re.search(r"dot\(\s*([\w.\-]+)\s*[,)]", ins.rhs)
     contract = 1
     if cm and ops:
         lhs_shape = comp.shapes.get(ops.group(1))

@@ -40,8 +40,10 @@ def capacity(cfg: ModelConfig, tokens: int) -> int:
     return max(8, -(-c // 8) * 8)   # pad to 8 for layout friendliness
 
 
-def apply_moe(p, x, cfg: ModelConfig):
-    """x: [B, S, D] -> [B, S, D]. Sort-based dropping dispatch."""
+def route(p, x, cfg: ModelConfig):
+    """Top-k routing + sort-based capacity dispatch, shared by the GSPMD
+    path below and the explicit expert-parallel path
+    (repro.dist.expert_parallel). x: [B, S, D] -> (disp [E, C, D], info)."""
     B, S, D = x.shape
     T = B * S
     k = cfg.experts_per_token
@@ -70,7 +72,40 @@ def apply_moe(p, x, cfg: ModelConfig):
     # dispatch: [E, C+1, D] — experts over 'model' (EP), capacity over 'data'
     disp = jnp.zeros((Ex, C + 1, D), dt)
     disp = disp.at[sorted_eids, pos_c].set(xt[tok_idx].astype(dt))
-    disp = constrain(disp[:, :C, :], "model", "data", None)
+    info = dict(sorted_eids=sorted_eids, pos_c=pos_c, tok_idx=tok_idx,
+                sort_idx=sort_idx, gvals=gvals, gids=gids, keep=keep, T=T)
+    return disp[:, :C, :], info
+
+
+def combine(out_e, info):
+    """Scatter expert outputs back to tokens, weighted by gate values."""
+    Ex, _, D = out_e.shape
+    dt = out_e.dtype
+    out_e = jnp.concatenate(
+        [out_e, jnp.zeros((Ex, 1, D), dt)], axis=1)         # trash row
+    contrib = out_e[info["sorted_eids"], info["pos_c"]]     # [TK, D]
+    TK = info["sorted_eids"].shape[0]
+    w = (info["gvals"].reshape(TK)[info["sort_idx"]]
+         * info["keep"]).astype(dt)
+    return jnp.zeros((info["T"], D), dt).at[info["tok_idx"]].add(
+        contrib * w[:, None])
+
+
+def router_probes(info, cfg: ModelConfig):
+    """Router health stats for probe sites: per-expert load + drops."""
+    load = jnp.sum(jax.nn.one_hot(info["gids"].reshape(-1), cfg.num_experts,
+                                  dtype=F32), axis=0)
+    E.probe_site("moe.load", load)
+    drops = jnp.sum((~info["keep"]).astype(F32))
+    E.probe_site("moe.drops", drops.reshape(1))
+
+
+def apply_moe(p, x, cfg: ModelConfig):
+    """x: [B, S, D] -> [B, S, D]. Sort-based dropping dispatch."""
+    B, S, D = x.shape
+    dt = x.dtype
+    disp, info = route(p, x, cfg)
+    disp = constrain(disp, "model", "data", None)
 
     # expert FFN (swiglu)
     h = jnp.einsum("ecd,edf->ecf", disp, p["w_in"].astype(dt))
@@ -81,18 +116,8 @@ def apply_moe(p, x, cfg: ModelConfig):
     out_e = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(dt))
     out_e = constrain(out_e, "model", "data", None)
 
-    # combine
-    out_e = jnp.concatenate(
-        [out_e, jnp.zeros((Ex, 1, D), dt)], axis=1)         # trash row
-    contrib = out_e[sorted_eids, pos_c]                     # [TK, D]
-    w = (gvals.reshape(TK)[sort_idx] * keep).astype(dt)
-    out = jnp.zeros((T, D), dt).at[tok_idx].add(contrib * w[:, None])
-
-    # router health stats for probes: per-expert load + drops
-    load = jnp.sum(jax.nn.one_hot(gids.reshape(-1), Ex, dtype=F32), axis=0)
-    E.probe_site("moe.load", load)
-    drops = jnp.sum((~keep).astype(F32))
-    E.probe_site("moe.drops", drops.reshape(1))
+    out = combine(out_e, info)
+    router_probes(info, cfg)
     return out.reshape(B, S, D)
 
 

@@ -1,0 +1,21 @@
+"""Fast smoke test for the benchmark harness's --json mode: exercises the
+probe-pipeline benchmark end-to-end on a small tape and checks the
+machine-readable output schema that later PRs track."""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def test_bench_probe_json_smoke(tmp_path):
+    from benchmarks import run as bench_run
+    out = tmp_path / "BENCH_probe.json"
+    bench_run.main(["--json", str(out), "--fast"])
+    d = json.loads(out.read_text())
+    assert d["n_programs"] == 3
+    assert d["n_events"] == 512
+    assert set(d["modes"]) == {"scan", "vectorized", "fused"}
+    for mode, r in d["modes"].items():
+        assert r["ns_per_event"] > 0, mode
+    assert d["speedup_fused_vs_scan"] > 0

@@ -1,0 +1,505 @@
+"""Differential tests for the fused probe pipeline: the single-pass fused
+dispatch, the batched-HASH vectorized path, the word-oriented stack, and
+ringbuf `dropped` accounting must all produce states bit-identical to the
+seed scan mode / the numpy oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import asm, events as E, isa, jit as J, maps as M
+from repro.core import vectorized as V, verifier, vm
+from repro.core.runtime import BpftimeRuntime
+
+COUNT_BY_LAYER = """
+    ldxdw r6, [r1+ctx:layer]
+    stxdw [r10-8], r6
+    lddw r1, map:layer_counts
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+COUNT_KEY_HASH = """
+    ldxdw r6, [r1+ctx:layer]
+    stxdw [r10-8], r6
+    lddw r1, map:hkeys
+    mov r2, r10
+    add r2, -8
+    mov r3, 2
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+HIST_RMS = """
+    ldxdw r2, [r1+ctx:rms]
+    lddw r1, map:rms_hist
+    call hist_add
+    mov r0, 0
+    exit
+"""
+
+RB_PROG = """
+    ldxdw r6, [r1+ctx:layer]
+    stxdw [r10-32], r6
+    ldxdw r6, [r1+ctx:numel]
+    stxdw [r10-24], r6
+    lddw r1, map:events_rb
+    mov r2, r10
+    add r2, -32
+    mov r3, 16
+    mov r4, 0
+    call ringbuf_output
+    mov r0, 0
+    exit
+"""
+
+# T2: data-dependent loop -> combined-scan lane of the fused pipeline
+LOOP_ACC = """
+    ldxdw r6, [r1+ctx:layer]
+    and r6, 3
+    add r6, 1
+    mov r8, 0
+    l:
+    add r8, 1
+    sub r6, 1
+    jgt r6, 0, l
+    stxdw [r10-8], r8
+    lddw r1, map:loop_acc
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+ARR = M.MapSpec("layer_counts", M.MapKind.ARRAY, max_entries=16)
+HASH_SMALL = M.MapSpec("hkeys", M.MapKind.HASH, max_entries=4)
+HIST = M.MapSpec("rms_hist", M.MapKind.LOG2HIST)
+RB = M.MapSpec("events_rb", M.MapKind.RINGBUF, max_entries=4, rec_width=4)
+LOOP_ARR = M.MapSpec("loop_acc", M.MapKind.ARRAY, max_entries=8)
+
+
+def _tape(rows_spec):
+    """rows_spec: list of (site_name, kind, layer, rms, numel)."""
+    rows = np.zeros((len(rows_spec), E.EVENT_WIDTH), np.int64)
+    for i, (site, kind, layer, rms, numel) in enumerate(rows_spec):
+        rows[i, 0] = E.SITES.get_or_create(site)
+        rows[i, 1] = kind
+        rows[i, 2] = layer
+        rows[i, 6] = rms
+        rows[i, 4] = numel
+    return jnp.asarray(rows)
+
+
+def _run_mode(rt, rows, mode):
+    ms = rt.init_device_maps()
+    aux = J.make_aux(time_ns=7, cpu=1, pid=42)
+    return rt.probe_stage(rows, ms, aux, mode=mode)
+
+
+def _assert_states_equal(a, b, tag):
+    for name in a:
+        for field in a[name]:
+            np.testing.assert_array_equal(
+                np.asarray(a[name][field]), np.asarray(b[name][field]),
+                err_msg=f"[{tag}] {name}.{field}")
+
+
+MIXED_TAPE = [
+    ("fpA", E.KIND_ENTRY, 0, 5, 8),
+    ("fpB", E.KIND_ENTRY, 1, 300, 8),
+    ("fpA", E.KIND_EXIT, 2, 17, 16),
+    ("fpA", E.KIND_ENTRY, 1, 9, 8),
+    ("fp_unattached", E.KIND_ENTRY, 3, 1, 8),
+    ("fpB", E.KIND_ENTRY, 0, 70000, 32),
+    ("fpA", E.KIND_ENTRY, 0, 2, 8),
+    ("fpB", E.KIND_EXIT, 5, 12, 8),
+    ("fpA", E.KIND_ENTRY, 6, 1023, 8),
+    ("fpA", E.KIND_ENTRY, 1, 0, 8),
+]
+
+
+def _multi_runtime():
+    """3 programs across 2 sites and 2 kinds; ARRAY + HASH + LOG2HIST."""
+    rt = BpftimeRuntime()
+    p1 = rt.load_asm("count_by_layer", COUNT_BY_LAYER, [ARR], "uprobe")
+    rt.attach(p1, "uprobe:fpA")
+    rt.attach(p1, "uprobe:fpB")
+    p2 = rt.load_asm("count_key_hash", COUNT_KEY_HASH, [HASH_SMALL],
+                     "uprobe")
+    rt.attach(p2, "uprobe:fpA")
+    rt.attach(p2, "uretprobe:fpB")
+    p3 = rt.load_asm("hist_rms", HIST_RMS, [HIST], "uprobe")
+    rt.attach(p3, "uretprobe:fpA")
+    rt.attach(p3, "uprobe:fpB")
+    return rt
+
+
+def test_fused_multi_program_multi_site_matches_scan():
+    rt = _multi_runtime()
+    rows = _tape(MIXED_TAPE)
+    ms_scan, _ = _run_mode(rt, rows, "scan")
+    ms_vec, _ = _run_mode(rt, rows, "vectorized")
+    ms_fused, _ = _run_mode(rt, rows, "fused")
+    _assert_states_equal(ms_scan, ms_vec, "vectorized-vs-scan")
+    _assert_states_equal(ms_scan, ms_fused, "fused-vs-scan")
+
+
+def test_fused_matches_scan_under_jit():
+    rt = _multi_runtime()
+    rows = _tape(MIXED_TAPE)
+
+    @jax.jit
+    def scan_f(rows, ms, aux):
+        return rt.probe_stage(rows, ms, aux, mode="scan")
+
+    @jax.jit
+    def fused_f(rows, ms, aux):
+        return rt.probe_stage(rows, ms, aux, mode="fused")
+
+    ms0 = rt.init_device_maps()
+    aux0 = J.make_aux(time_ns=7)
+    a, _ = scan_f(rows, ms0, aux0)
+    b, _ = fused_f(rows, ms0, aux0)
+    _assert_states_equal(a, b, "jit fused-vs-scan")
+
+
+def test_fused_hash_duplicate_and_overflow_keys():
+    """Duplicate keys aggregate; distinct keys beyond capacity drop in
+    first-occurrence order — bit-identical keys/used/values tables."""
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("hk", COUNT_KEY_HASH, [HASH_SMALL], "uprobe")
+    rt.attach(pid, "uprobe:fpH")
+    spec = [("fpH", E.KIND_ENTRY, layer, 0, 0)
+            for layer in (9, 2, 9, 7, 2, 11, 5, 9, 3, 7, 1, 9)]
+    rows = _tape(spec)
+    ms_scan, _ = _run_mode(rt, rows, "scan")
+    ms_fused, _ = _run_mode(rt, rows, "fused")
+    ms_vec, _ = _run_mode(rt, rows, "vectorized")
+    _assert_states_equal(ms_scan, ms_fused, "hash fused")
+    _assert_states_equal(ms_scan, ms_vec, "hash vectorized")
+    # sanity: duplicates aggregated (key 9 appeared 4x with delta 2)
+    kt = np.asarray(ms_fused["hkeys"]["keys"])
+    vt = np.asarray(ms_fused["hkeys"]["values"])
+    assert vt[list(kt).index(9)] == 8
+
+
+def test_hash_batch_matches_sequential_twin():
+    """maps-level differential: j_hash_fetch_add_batch vs sequential
+    j_hash_fetch_add vs the numpy twin, with colliding keys and a broken
+    probe chain (delete between inserts)."""
+    n = 8
+    spec = M.MapSpec("h", M.MapKind.HASH, max_entries=n)
+    # pre-populate + delete to create a broken chain
+    st_np = M.init_state(spec, np)
+    for k, v in ((3, 10), (11, 20), (19, 30)):   # likely colliding mod 8
+        M.n_hash_fetch_add(st_np, k, v)
+    M.n_hash_delete(st_np, 11)
+    # jnp.array (copy): jnp.asarray may alias the numpy buffer on CPU, and
+    # the numpy twin below mutates st_np in place.
+    st_j = jax.tree.map(lambda a: jnp.array(a), st_np)
+
+    keys = np.array([19, 42, 3, 19, 42, 99, 3, 27, 11, 42], np.int64)
+    deltas = np.arange(1, 11, dtype=np.int64)
+    ok = np.array([1, 1, 1, 1, 0, 1, 1, 1, 1, 1], bool)
+
+    # numpy twin, sequential
+    for k, d, o in zip(keys, deltas, ok):
+        if o:
+            M.n_hash_fetch_add(st_np, int(k), int(d))
+    # jnp sequential twin
+    st_seq = {k: v for k, v in st_j.items()}
+    for k, d, o in zip(keys, deltas, ok):
+        st_seq, _ = M.j_hash_fetch_add(st_seq, jnp.int64(k), jnp.int64(d),
+                                       jnp.asarray(bool(o)))
+    # batched
+    st_b = M.j_hash_fetch_add_batch(st_j, jnp.asarray(keys),
+                                    jnp.asarray(deltas), jnp.asarray(ok))
+    for field in ("keys", "used", "values"):
+        np.testing.assert_array_equal(np.asarray(st_b[field]),
+                                      np.asarray(st_seq[field]),
+                                      err_msg=f"batch-vs-seq {field}")
+        np.testing.assert_array_equal(np.asarray(st_b[field]),
+                                      st_np[field],
+                                      err_msg=f"batch-vs-np {field}")
+
+
+def test_hash_batch_jit_and_empty_batch():
+    spec = M.MapSpec("h", M.MapKind.HASH, max_entries=16)
+    st = M.init_state(spec, jnp)
+    keys = jnp.asarray([5, 5, 6], jnp.int64)
+    deltas = jnp.asarray([1, 2, 3], jnp.int64)
+    f = jax.jit(M.j_hash_fetch_add_batch)
+    out = f(st, keys, deltas, jnp.asarray([True, True, True]))
+    assert int(out["values"][np.asarray(out["keys"]).tolist().index(5)]) == 3
+    # all-invalid batch is a no-op
+    out2 = f(st, keys, deltas, jnp.zeros((3,), bool))
+    for field in ("keys", "used", "values"):
+        np.testing.assert_array_equal(np.asarray(out2[field]),
+                                      np.asarray(st[field]))
+
+
+# ---------------------------------------------------------------- ringbuf
+
+def test_ringbuf_dropped_parity_scan_fused_oracle():
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("rb", RB_PROG, [RB], "uprobe")
+    rt.attach(pid, "uprobe:fpR")
+    spec = [("fpR", E.KIND_ENTRY, i, 0, 100 + i) for i in range(10)]
+    rows = _tape(spec)
+    ms_scan, _ = _run_mode(rt, rows, "scan")
+    ms_fused, _ = _run_mode(rt, rows, "fused")
+    ms_vec, _ = _run_mode(rt, rows, "vectorized")
+    _assert_states_equal(ms_scan, ms_fused, "ringbuf fused")
+    _assert_states_equal(ms_scan, ms_vec, "ringbuf vectorized")
+    # cap=4, 10 emits -> 6 overwrote unread records
+    assert int(ms_scan["events_rb"]["dropped"][0]) == 6
+    assert int(ms_scan["events_rb"]["head"][0]) == 10
+
+    # numpy twin parity
+    st = M.init_state(RB, np)
+    for i in range(10):
+        M.n_ringbuf_emit(st, [i, 100 + i, 0, 0])
+    assert st["dropped"][0] == 6
+    np.testing.assert_array_equal(st["data"],
+                                  np.asarray(ms_scan["events_rb"]["data"]))
+
+
+def test_ringbuf_no_drop_below_capacity():
+    st_j = M.init_state(RB, jnp)
+    st_n = M.init_state(RB, np)
+    for i in range(4):
+        st_j = M.j_ringbuf_emit(st_j, jnp.full((4,), i, jnp.int64),
+                                jnp.asarray(True))
+        M.n_ringbuf_emit(st_n, [i] * 4)
+    assert int(st_j["dropped"][0]) == 0 and st_n["dropped"][0] == 0
+    st_j = M.j_ringbuf_emit(st_j, jnp.zeros((4,), jnp.int64),
+                            jnp.asarray(True))
+    M.n_ringbuf_emit(st_n, [0] * 4)
+    assert int(st_j["dropped"][0]) == 1 and st_n["dropped"][0] == 1
+
+
+# ---------------------------------------------------------------- T2 lane
+
+def test_fused_combined_scan_for_loop_programs():
+    rt = BpftimeRuntime()
+    p1 = rt.load_asm("loop_acc", LOOP_ACC, [LOOP_ARR], "uprobe")
+    rt.attach(p1, "uprobe:fpL")
+    p2 = rt.load_asm("count_by_layer", COUNT_BY_LAYER, [ARR], "uprobe")
+    rt.attach(p2, "uprobe:fpL")      # T1 rides the vector lane
+    assert rt.progs[p1].vprog.tier == "loop"
+    spec = [("fpL", E.KIND_ENTRY, i % 5, i, 0) for i in range(9)]
+    spec.append(("fp_unattached", E.KIND_ENTRY, 1, 1, 0))
+    rows = _tape(spec)
+    ms_scan, _ = _run_mode(rt, rows, "scan")
+    ms_fused, _ = _run_mode(rt, rows, "fused")
+    _assert_states_equal(ms_scan, ms_fused, "loop fused")
+    assert np.asarray(ms_fused["loop_acc"]["values"]).sum() == 9
+
+
+LOOP_RB = """
+    ldxdw r6, [r1+ctx:layer]
+    and r6, 3
+    add r6, 1
+    mov r8, 0
+    l:
+    add r8, 1
+    sub r6, 1
+    jgt r6, 0, l
+    stxdw [r10-32], r8
+    stxdw [r10-24], r8
+    lddw r1, map:shared_rb
+    mov r2, r10
+    add r2, -32
+    mov r3, 16
+    mov r4, 0
+    call ringbuf_output
+    mov r0, 0
+    exit
+"""
+
+RB_SHARED = M.MapSpec("shared_rb", M.MapKind.RINGBUF, max_entries=32,
+                      rec_width=4)
+RB_PROG_SHARED = RB_PROG.replace("map:events_rb", "map:shared_rb")
+
+
+def test_fused_falls_back_on_cross_program_ringbuf():
+    """Two DIFFERENT programs (one loop-tier, one vector-safe) emitting to
+    ONE ringbuf: record interleaving is order-sensitive, so the fused
+    scheduler must fall back to seed scan ordering — states bit-identical
+    including the data stream."""
+    from repro.core.runtime import _has_ordering_conflict
+    rt = BpftimeRuntime()
+    p1 = rt.load_asm("loop_rb", LOOP_RB, [RB_SHARED], "uprobe")
+    rt.attach(p1, "uprobe:fpS1")
+    p2 = rt.load_asm("t1_rb", RB_PROG_SHARED, [RB_SHARED], "uprobe")
+    rt.attach(p2, "uprobe:fpS2")
+    assert _has_ordering_conflict(
+        [rt.progs[p1].vprog, rt.progs[p2].vprog])
+    spec = [("fpS1" if i % 2 else "fpS2", E.KIND_ENTRY, i, 0, 100 + i)
+            for i in range(8)]
+    rows = _tape(spec)
+    ms_scan, _ = _run_mode(rt, rows, "scan")
+    ms_fused, _ = _run_mode(rt, rows, "fused")
+    _assert_states_equal(ms_scan, ms_fused, "shared-ringbuf fallback")
+
+
+def test_fused_falls_back_on_multi_attached_scan_ringbuf():
+    """A loop-tier ringbuf program attached to TWO sites loses
+    per-attachment record order in a combined scan — must fall back."""
+    rt = BpftimeRuntime()
+    p1 = rt.load_asm("loop_rb", LOOP_RB, [RB_SHARED], "uprobe")
+    rt.attach(p1, "uprobe:fpM1")
+    rt.attach(p1, "uprobe:fpM2")
+    spec = [("fpM1" if i % 2 else "fpM2", E.KIND_ENTRY, i, 0, 0)
+            for i in range(6)]
+    rows = _tape(spec)
+    ms_scan, _ = _run_mode(rt, rows, "scan")
+    ms_fused, _ = _run_mode(rt, rows, "fused")
+    _assert_states_equal(ms_scan, ms_fused, "multi-attach fallback")
+
+
+def test_commutative_sharing_stays_fused():
+    """Two programs sharing one ARRAY map via fetch_add only: commutative,
+    no fallback needed — and still bit-identical."""
+    from repro.core.runtime import _has_ordering_conflict
+    rt = BpftimeRuntime()
+    p1 = rt.load_asm("count_by_layer", COUNT_BY_LAYER, [ARR], "uprobe")
+    rt.attach(p1, "uprobe:fpC1")
+    prog2 = COUNT_BY_LAYER.replace("ctx:layer", "ctx:numel")
+    p2 = rt.load_asm("count_by_numel", prog2, [ARR], "uprobe")
+    rt.attach(p2, "uprobe:fpC2")
+    assert not _has_ordering_conflict(
+        [rt.progs[p1].vprog, rt.progs[p2].vprog])
+    spec = [("fpC1" if i % 2 else "fpC2", E.KIND_ENTRY, i % 4, 0, i % 3)
+            for i in range(10)]
+    rows = _tape(spec)
+    ms_scan, _ = _run_mode(rt, rows, "scan")
+    ms_fused, _ = _run_mode(rt, rows, "fused")
+    _assert_states_equal(ms_scan, ms_fused, "commutative sharing")
+
+
+def test_touched_maps_footprint():
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("count_by_layer", COUNT_BY_LAYER, [ARR], "uprobe")
+    vp = rt.progs[pid].vprog
+    assert vp.touched_map_names() == ("layer_counts",)
+    assert vp.touched_aux == frozenset()
+    pid2 = rt.load_asm("hist_rms", HIST_RMS, [HIST], "uprobe")
+    vp2 = rt.progs[pid2].vprog
+    assert vp2.touched_map_names() == ("rms_hist",)
+
+
+# ---------------------------------------------------------------- word stack
+
+def _run_both(text, ctx_words=None):
+    """vm oracle vs JIT on a map-free program; returns (r0_vm, r0_jit)."""
+    ctx_words = ctx_words or [0] * 8
+    a = asm.assemble(text)
+    vprog = verifier.verify(a.insns, [], ctx_words=len(ctx_words))
+    res = vm.run(a.insns, vm.pack_ctx(ctx_words), [], {})
+    prog = J.compile_program(vprog)
+    ctx = jnp.asarray([isa.s64(isa.u64(w)) for w in ctx_words], jnp.int64)
+    r0, _, _ = jax.jit(prog)(ctx, {}, J.make_aux())
+    assert isa.u64(int(r0)) == isa.u64(res.r0), \
+        f"jit={isa.u64(int(r0)):#x} vm={isa.u64(res.r0):#x}"
+    return res.r0, int(r0)
+
+
+def test_word_stack_aligned_roundtrip():
+    _run_both("""
+        lddw r6, 0x1122334455667788
+        stxdw [r10-8], r6
+        ldxdw r0, [r10-8]
+        exit
+    """)
+
+
+def test_word_stack_subword_load_zero_extends():
+    _run_both("""
+        lddw r6, 0xfedcba9876543210
+        stxdw [r10-8], r6
+        ldxw r0, [r10-8]
+        exit
+    """)
+    _run_both("""
+        lddw r6, 0xfedcba9876543210
+        stxdw [r10-8], r6
+        ldxh r0, [r10-6]
+        exit
+    """)
+    _run_both("""
+        lddw r6, 0xfedcba9876543210
+        stxdw [r10-8], r6
+        ldxb r0, [r10-3]
+        exit
+    """)
+
+
+def test_word_stack_unaligned_cross_word():
+    """8-byte load/store spanning two stack words stays byte-exact."""
+    _run_both("""
+        lddw r6, 0x0102030405060708
+        stxdw [r10-16], r6
+        lddw r6, 0x1112131415161718
+        stxdw [r10-8], r6
+        ldxdw r0, [r10-13]
+        exit
+    """)
+    _run_both("""
+        lddw r6, 0x00000000deadbeef
+        stxdw [r10-16], r6
+        stxdw [r10-8], r6
+        stxw [r10-10], r6
+        ldxdw r3, [r10-16]
+        ldxdw r0, [r10-8]
+        xor r0, r3
+        exit
+    """)
+
+
+def test_word_stack_byte_stores_then_word_load():
+    _run_both("""
+        mov r6, 0
+        stxdw [r10-8], r6
+        mov r6, 0xab
+        stxb [r10-8], r6
+        mov r6, 0xcd
+        stxb [r10-5], r6
+        mov r6, 0x1234
+        stxh [r10-4], r6
+        ldxdw r0, [r10-8]
+        exit
+    """)
+
+
+def test_word_stack_st_imm_sign_extension():
+    _run_both("""
+        mov r6, 0
+        stxdw [r10-8], r6
+        stw [r10-8], -2
+        ldxdw r0, [r10-8]
+        exit
+    """)
+
+
+def test_memann_aligned_flag():
+    a = asm.assemble("""
+        mov r6, 1
+        stxdw [r10-8], r6
+        stxb [r10-9], r6
+        ldxdw r0, [r10-8]
+        exit
+    """)
+    vp = verifier.verify(a.insns, [], ctx_words=8)
+    anns = [ann for ann in vp.anns.values()
+            if isinstance(ann, verifier.MemAnn) and ann.region == "stack"]
+    flags = {(ann.off, ann.size): ann.aligned for ann in anns}
+    assert flags[(504, 8)] is True
+    assert flags[(503, 1)] is False

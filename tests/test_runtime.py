@@ -113,7 +113,7 @@ def test_vectorized_matches_scan():
                                           err_msg=f"{name}.{f}")
 
 
-def test_vector_safety_rejects_hash_and_loops():
+def test_vector_safety_accepts_hash_rejects_loops():
     rt = BpftimeRuntime()
     hash_prog = """
         ldxdw r6, [r1+0]
@@ -128,7 +128,9 @@ def test_vector_safety_rejects_hash_and_loops():
     """
     pid = rt.load_asm("h", hash_prog,
                       [M.MapSpec("h", M.MapKind.HASH, max_entries=8)])
-    assert not V.is_vector_safe(rt.progs[pid].vprog)
+    # HASH fetch_add is batchable since the fused pipeline (sort-by-key +
+    # segment_sum scatter); bit-identical to scan mode by differential test.
+    assert V.is_vector_safe(rt.progs[pid].vprog)
 
     loop_prog = """
         mov r6, 5
