@@ -1,0 +1,91 @@
+"""CI perf-regression gate over BENCH_probe.json (DESIGN.md §8).
+
+Hard floors:
+  * fused-vs-scan speedup >= 5x — the fused pipeline's contract;
+  * interpreter-lane (live attach) ns/event within TOLERANCE of the budget
+    recorded in benchmarks/BENCH_baseline.json — dispatch-as-data may not
+    silently decay;
+  * live attach latency within TOLERANCE of its recorded budget — the whole
+    point of the lane is that attach is milliseconds, not a retrace.
+
+    python benchmarks/check_regression.py BENCH_probe.json \
+        [--baseline benchmarks/BENCH_baseline.json] [--tolerance 2.0]
+
+Exits 1 with a per-check report on any violation. The tolerance absorbs
+CI-runner noise; tighten it as the fleet stabilizes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+FUSED_FLOOR = 5.0
+
+
+def check(result: dict, baseline: dict, tolerance: float) -> list[str]:
+    failures = []
+
+    speedup = result.get("speedup_fused_vs_scan", 0.0)
+    if speedup < FUSED_FLOOR:
+        failures.append(
+            f"fused-vs-scan speedup {speedup:.2f}x is below the "
+            f"{FUSED_FLOOR}x floor (DESIGN.md §8)")
+
+    interp = result.get("modes", {}).get("interp", {}).get("ns_per_event")
+    budget = baseline.get("modes", {}).get("interp", {}).get("ns_per_event")
+    if interp is None:
+        failures.append("result json has no interpreter-lane measurement "
+                        "(modes.interp.ns_per_event)")
+    elif budget and interp > budget * tolerance:
+        failures.append(
+            f"interpreter lane {interp:.0f}ns/event exceeds budget "
+            f"{budget:.0f}ns/event x{tolerance}")
+
+    attach = result.get("attach_latency_ms")
+    attach_budget = baseline.get("attach_latency_ms")
+    if attach is None:
+        failures.append("result json has no attach_latency_ms")
+    elif attach_budget and attach > attach_budget * tolerance:
+        failures.append(
+            f"live attach latency {attach:.2f}ms exceeds budget "
+            f"{attach_budget:.2f}ms x{tolerance}")
+
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("result", help="BENCH_probe.json from this run")
+    ap.add_argument("--baseline", default="benchmarks/BENCH_baseline.json")
+    ap.add_argument("--tolerance", type=float, default=2.0,
+                    help="allowed multiple of the recorded budgets")
+    args = ap.parse_args(argv)
+
+    with open(args.result) as f:
+        result = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures = check(result, baseline, args.tolerance)
+    print(f"fused vs scan: {result.get('speedup_fused_vs_scan', 0):.2f}x "
+          f"(floor {FUSED_FLOOR}x)")
+    if "interp" in result.get("modes", {}):
+        print(f"interp lane:   "
+              f"{result['modes']['interp']['ns_per_event']:.0f}ns/event "
+              f"(budget {baseline['modes']['interp']['ns_per_event']:.0f} "
+              f"x{args.tolerance})")
+    if "attach_latency_ms" in result:
+        print(f"attach:        {result['attach_latency_ms']:.2f}ms "
+              f"(budget {baseline.get('attach_latency_ms', 0):.2f} "
+              f"x{args.tolerance})")
+    if failures:
+        for msg in failures:
+            print(f"REGRESSION: {msg}", file=sys.stderr)
+        return 1
+    print("perf gate OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,10 +1,16 @@
 """Probe-pipeline benchmark: ns/event of the probe-execution stage for a
 multi-program tape, per exec mode.
 
-The perf claim tracked across PRs (BENCH_probe.json): the fused single-pass
-pipeline scales with call sites instead of programs x events, so it must
-beat the seed per-attachment scan mode by a wide margin on a
-3-program / 4096-event tape.
+Perf claims tracked across PRs (BENCH_probe.json, gated by
+benchmarks/check_regression.py):
+  * the fused single-pass pipeline scales with call sites instead of
+    programs x events, so it must beat the seed per-attachment scan mode by
+    >= 5x on a 3-program / 4096-event tape (DESIGN.md §8);
+  * the live program-table interpreter lane ("interp" mode — the same 3
+    programs hot-attached instead of compiled in) pays a bounded ns/event
+    premium for dispatch-as-data, and its attach latency (encode + verify +
+    table sync onto the running compiled step) is milliseconds — vs the
+    seconds-scale retrace it replaces.
 
     PYTHONPATH=src python -m benchmarks.run --json BENCH_probe.json
 """
@@ -58,17 +64,34 @@ MAPS = [
 ]
 
 
+PROGS = [("bp_count", COUNT_BY_LAYER, MAPS[0], "uprobe:bp_block"),
+         ("bp_hash", COUNT_KEY_HASH, MAPS[1], "uprobe:bp_block"),
+         ("bp_hist", HIST_RMS, MAPS[2], "uretprobe:bp_block")]
+
+
 def build_runtime() -> BpftimeRuntime:
     """3 programs (ARRAY fetch_add, HASH fetch_add, LOG2HIST) across two
     sites/kinds — the representative per-layer instrumentation load."""
     rt = BpftimeRuntime()
-    p1 = rt.load_asm("bp_count", COUNT_BY_LAYER, [MAPS[0]], "uprobe")
-    rt.attach(p1, "uprobe:bp_block")
-    p2 = rt.load_asm("bp_hash", COUNT_KEY_HASH, [MAPS[1]], "uprobe")
-    rt.attach(p2, "uprobe:bp_block")
-    p3 = rt.load_asm("bp_hist", HIST_RMS, [MAPS[2]], "uprobe")
-    rt.attach(p3, "uretprobe:bp_block")
+    for name, text, spec, target in PROGS:
+        pid = rt.load_asm(name, text, [spec], "uprobe")
+        rt.attach(pid, target)
     return rt
+
+
+def build_live_runtime() -> tuple[BpftimeRuntime, list[int]]:
+    """The SAME 3 programs hot-attached through the program table instead
+    of compiled into the step — the interpreter-lane workload."""
+    rt = BpftimeRuntime()
+    for spec in MAPS:
+        rt.create_map(spec)
+    rt.enable_live_attach(max_programs=4, max_insns=64,
+                          arm=("uprobe:bp_block", "uretprobe:bp_block"))
+    lids = []
+    for name, text, spec, target in PROGS:
+        pid = rt.load_asm(name, text, [spec], "uprobe")
+        lids.append(rt.attach_live(pid, target))
+    return rt, lids
 
 
 def make_tape(n_events: int):
@@ -95,37 +118,85 @@ def _timeit(fn, *args, iters=10, warmup=2, repeats=5):
     return best
 
 
+def _measure_stage(rt, rows, iters, mode=None):
+    n_events = rows.shape[0]
+
+    @jax.jit
+    def stage(rows, maps):
+        maps, _ = rt.probe_stage(rows, maps, J.make_aux(), mode=mode)
+        return maps
+
+    maps0 = rt.init_device_maps()
+    t0 = time.perf_counter()
+    warm = jax.block_until_ready(stage(rows, maps0))
+    compile_s = time.perf_counter() - t0
+    # steady state: probe maps persist across train steps, so the
+    # recurring per-step cost runs on a warmed table (first step pays
+    # the cold hash inserts once — reported separately).
+    t_cold = _timeit(stage, rows, maps0, iters=iters)
+    t = _timeit(stage, rows, warm, iters=iters)
+    return stage, {
+        "ns_per_event": t / n_events * 1e9,
+        "cold_ns_per_event": t_cold / n_events * 1e9,
+        "wall_s": t,
+        "compile_s": round(compile_s, 3),
+    }
+
+
+def measure_attach_latency(repeats: int = 5) -> float:
+    """Wall time to make a program live on an ALREADY-COMPILED step:
+    verify-for-table + encode + generation bump + table sync. This is the
+    number that replaces the retrace (compile_s above) the epoch lane pays
+    per attach."""
+    rt, lids = build_live_runtime()
+    rows = make_tape(64)
+
+    @jax.jit
+    def stage(rows, maps):
+        maps, _ = rt.probe_stage(rows, maps, J.make_aux())
+        return maps
+
+    maps = jax.block_until_ready(stage(rows, rt.init_device_maps()))
+    pid = next(iter(rt.progs))          # re-attach the first program
+    rt.detach_live(lids[0])
+    maps = rt.sync_live_table(maps)
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        lid = rt.attach_live(pid, "uprobe:bp_block")
+        maps = rt.sync_live_table(maps)
+        jax.block_until_ready(maps["__live_table__"])
+        best = min(best, time.perf_counter() - t0)
+        rt.detach_live(lid)
+        maps = rt.sync_live_table(maps)
+    assert stage._cache_size() == 1, "attach latency bench retraced"
+    return best
+
+
 def run(n_events: int = 4096, iters: int = 20,
-        modes=("scan", "vectorized", "fused")) -> dict:
+        modes=("scan", "vectorized", "fused", "interp")) -> dict:
     rt = build_runtime()
     rows = make_tape(n_events)
     out = {"n_events": n_events, "n_programs": len(rt.progs),
            "modes": {}}
     for mode in modes:
-        @jax.jit
-        def stage(rows, maps):
-            maps, _ = rt.probe_stage(rows, maps, J.make_aux(), mode=mode)
-            return maps
-
-        maps0 = rt.init_device_maps()
-        t0 = time.perf_counter()
-        warm = jax.block_until_ready(stage(rows, maps0))
-        compile_s = time.perf_counter() - t0
-        # steady state: probe maps persist across train steps, so the
-        # recurring per-step cost runs on a warmed table (first step pays
-        # the cold hash inserts once — reported separately).
-        t_cold = _timeit(stage, rows, maps0, iters=iters)
-        t = _timeit(stage, rows, warm, iters=iters)
-        out["modes"][mode] = {
-            "ns_per_event": t / n_events * 1e9,
-            "cold_ns_per_event": t_cold / n_events * 1e9,
-            "wall_s": t,
-            "compile_s": round(compile_s, 3),
-        }
+        if mode == "interp":
+            # same programs, hot-attached: probe stage runs ONLY the
+            # program-table interpreter lane
+            live_rt, _ = build_live_runtime()
+            _, out["modes"]["interp"] = _measure_stage(live_rt, rows, iters)
+            continue
+        _, out["modes"][mode] = _measure_stage(rt, rows, iters, mode=mode)
     if "scan" in out["modes"] and "fused" in out["modes"]:
         out["speedup_fused_vs_scan"] = (
             out["modes"]["scan"]["ns_per_event"]
             / max(out["modes"]["fused"]["ns_per_event"], 1e-12))
+    if "scan" in out["modes"] and "interp" in out["modes"]:
+        out["interp_overhead_vs_scan"] = (
+            out["modes"]["interp"]["ns_per_event"]
+            / max(out["modes"]["scan"]["ns_per_event"], 1e-12))
+    if "interp" in modes:
+        out["attach_latency_ms"] = measure_attach_latency() * 1e3
     return out
 
 
@@ -136,6 +207,9 @@ def main():
         print(f"{mode},{r['ns_per_event']:.1f},{r['compile_s']}")
     if "speedup_fused_vs_scan" in res:
         print(f"# fused vs scan: {res['speedup_fused_vs_scan']:.1f}x")
+    if "attach_latency_ms" in res:
+        print(f"# live attach latency: {res['attach_latency_ms']:.2f}ms "
+              f"(vs retrace: {res['modes']['fused']['compile_s']}s)")
 
 
 if __name__ == "__main__":

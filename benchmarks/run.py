@@ -7,7 +7,8 @@ Sections:
   table1   probe latency, kernel-mode vs bpftime-mode (paper Table 1)
   fig3     VM/JIT micro-suite vs interpreter + native (paper Figure 3)
   maps     map-op throughput (ref vs Pallas-interpret)
-  probe    probe-stage ns/event per exec mode (scan/vectorized/fused)
+  probe    probe-stage ns/event per exec mode (scan/vectorized/fused/
+           interp — the live program-table lane) + live attach latency
   roofline aggregate of dry-run cells (results/*.json), if present
 
 `--json PATH` runs ONLY the probe-pipeline section and writes the
@@ -57,6 +58,13 @@ def main(argv=None):
             print(f"{mode},{r['ns_per_event']:.1f}ns/event")
         if "speedup_fused_vs_scan" in res:
             print(f"# fused vs scan: {res['speedup_fused_vs_scan']:.1f}x")
+        if "interp_overhead_vs_scan" in res:
+            print(f"# interp lane vs scan: "
+                  f"{res['interp_overhead_vs_scan']:.1f}x overhead")
+        if "attach_latency_ms" in res:
+            print(f"# live attach latency: "
+                  f"{res['attach_latency_ms']:.2f}ms (retrace avoided: "
+                  f"~{res['modes']['fused']['compile_s']}s)")
         print(f"\nwrote {args.json}\nOK")
         return
 

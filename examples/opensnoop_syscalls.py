@@ -4,6 +4,7 @@ saves) with enter/exit tracepoints + a ring buffer, and FILTER some of them
 
     PYTHONPATH=src python examples/opensnoop_syscalls.py
 """
+import sys
 import tempfile
 
 import jax
@@ -44,32 +45,45 @@ NO_CKPT_BEFORE_STEP5 = """
     exit
 """
 
-rt = BpftimeRuntime()
-rb = M.MapSpec("events", M.MapKind.RINGBUF, max_entries=64, rec_width=3)
-pid = rt.load_asm("snoop", SNOOP, [rb], "tracepoint")
-rt.attach(pid, "tracepoint:sys_data_fetch:exit")
-rt.attach(pid, "tracepoint:sys_checkpoint_save:exit")
-flt = rt.load_asm("nockpt", NO_CKPT_BEFORE_STEP5, [], "filter")
-rt.attach(flt, "filter:sys_checkpoint_save")
+def main() -> int:
+    rt = BpftimeRuntime()
+    rb = M.MapSpec("events", M.MapKind.RINGBUF, max_entries=64, rec_width=3)
+    pid = rt.load_asm("snoop", SNOOP, [rb], "tracepoint")
+    rt.attach(pid, "tracepoint:sys_data_fetch:exit")
+    rt.attach(pid, "tracepoint:sys_checkpoint_save:exit")
+    flt = rt.load_asm("nockpt", NO_CKPT_BEFORE_STEP5, [], "filter")
+    rt.attach(flt, "filter:sys_checkpoint_save")
 
-cfg = registry.smoke("mamba2-780m")
-tcfg = TrainConfig(warmup=2)
-state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg, rt)
-step = jax.jit(make_train_step(cfg, tcfg, rt))
-data = SyntheticDataset(cfg, ShapeConfig("o", 32, 4, "train"), tcfg,
-                        runtime=rt)
+    cfg = registry.smoke("mamba2-780m")
+    tcfg = TrainConfig(warmup=2)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg, rt)
+    step = jax.jit(make_train_step(cfg, tcfg, rt))
+    data = SyntheticDataset(cfg, ShapeConfig("o", 32, 4, "train"), tcfg,
+                            runtime=rt)
 
-ckpt_dir = tempfile.mkdtemp(prefix="opensnoop_ckpt_")
-for i in range(8):
-    state, m = step(state, data.next())
-    CK.save(ckpt_dir, int(state["step"]), state, runtime=rt)
+    ckpt_dir = tempfile.mkdtemp(prefix="opensnoop_ckpt_")
+    for _ in range(8):
+        state, m = step(state, data.next())
+        CK.save(ckpt_dir, int(state["step"]), state, runtime=rt)
 
-print(f"latest committed checkpoint: step {CK.latest(ckpt_dir)} "
-      "(steps 1-4 were vetoed by the filter)\n")
+    latest = CK.latest(ckpt_dir)
+    print(f"latest committed checkpoint: step {latest} "
+          "(steps 1-4 were vetoed by the filter)\n")
 
-from repro.core.syscalls import SYSCALL_IDS
-names = {v: k for k, v in SYSCALL_IDS.items()}
-recs, _ = M.n_ringbuf_drain(rt.host_maps["events"], 0)
-print(f"{'SYSCALL':24s} {'ARG0':>6s} {'RET':>5s}")
-for sid, arg0, ret in recs[-16:]:
-    print(f"{names.get(sid, sid):24s} {arg0:6d} {ret:5d}")
+    from repro.core.syscalls import SYSCALL_IDS
+    names = {v: k for k, v in SYSCALL_IDS.items()}
+    recs, _ = M.n_ringbuf_drain(rt.host_maps["events"], 0)
+    print(f"{'SYSCALL':24s} {'ARG0':>6s} {'RET':>5s}")
+    for sid, arg0, ret in recs[-16:]:
+        print(f"{names.get(sid, sid):24s} {arg0:6d} {ret:5d}")
+
+    assert latest == 8, f"filter should only block steps < 5, got {latest}"
+    assert recs, "ring buffer should have captured syscall records"
+    assert any(names.get(sid) == "sys_checkpoint_save" and ret != 0
+               for sid, _a, ret in recs), "no vetoed save was traced"
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

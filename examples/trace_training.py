@@ -1,13 +1,16 @@
 """The paper's flagship scenario on a trainer: attach to a RUNNING training
-loop without restarting it (ptrace-injection analogue), stream metrics to a
-shared-memory control plane another process can watch live.
+loop without restarting it — and, since PR 2, without even RECOMPILING the
+step. The step is jitted once with the live program-table lane enabled; a
+daemon-side handle then injects a grad-norm watcher through shared memory
+and the already-compiled step starts executing it on its next call (watch
+the jit cache size stay at 1).
 
     PYTHONPATH=src python examples/trace_training.py
     # in another shell, while it runs:
     PYTHONPATH=src python -m repro.core.daemon /tmp/bpftime_shm --once
 """
 import os
-import tempfile
+import sys
 
 import jax
 import numpy as np
@@ -31,47 +34,74 @@ GRAD_WATCH = """
     exit
 """
 
-rt = BpftimeRuntime()
-rt.create_map(M.MapSpec("grad_hist", M.MapKind.LOG2HIST))
-rt.setup_shm(SHM)
-print(f"shm control plane at {SHM}")
 
-cfg = registry.smoke("qwen2-0.5b")
-tcfg = TrainConfig(warmup=2)
-state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg, rt)
-data = SyntheticDataset(cfg, ShapeConfig("t", 64, 8, "train"), tcfg,
-                        runtime=rt)
+def main() -> int:
+    rt = BpftimeRuntime()
+    rt.create_map(M.MapSpec("grad_hist", M.MapKind.LOG2HIST))
+    # live lane: arm the candidate site BEFORE compiling (the patched-but-
+    # idle trampoline); any verified program can hot-attach to it later
+    rt.enable_live_attach(max_programs=4, max_insns=64,
+                          arm=("probe:grad.norm",))
+    rt.setup_shm(SHM)
+    print(f"shm control plane at {SHM}")
 
-jit_cache = {}
-def step_fn():
-    e = rt.attach_epoch
-    if e not in jit_cache:
-        jit_cache[e] = jax.jit(make_train_step(cfg, tcfg, rt))
-    return jit_cache[e]
+    cfg = registry.smoke("qwen2-0.5b")
+    tcfg = TrainConfig(warmup=2)
+    state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg, rt)
+    data = SyntheticDataset(cfg, ShapeConfig("t", 64, 8, "train"), tcfg,
+                            runtime=rt)
+    step = jax.jit(make_train_step(cfg, tcfg, rt))
 
-# --- steps 0-4: UNinstrumented (probe sites are nops)
-for i in range(5):
-    state, m = step_fn()(state, data.next())
-print(f"steps 0-4 uninstrumented: loss={float(m['loss']):.4f}, "
-      f"hist events={int(np.asarray(state['maps']['grad_hist']['bins']).sum())}")
+    # --- steps 0-4: UNinstrumented (armed site emits, table is empty)
+    for _ in range(5):
+        state, m = step(state, data.next())
+    hist0 = int(np.asarray(state["maps"]["grad_hist"]["bins"]).sum())
+    print(f"steps 0-4 uninstrumented: loss={float(m['loss']):.4f}, "
+          f"hist events={hist0}")
+    assert hist0 == 0, "empty table must execute nothing"
+    assert step._cache_size() == 1
 
-# --- a 'daemon' injects a grad-norm watcher into the RUNNING loop
-obj = loader.build_object(
-    "grad_watch", GRAD_WATCH,
-    [M.MapSpec("grad_hist", M.MapKind.LOG2HIST)],
-    prog_type="uprobe", attach_to="probe:grad.norm")
-other = ShmRegion.attach(SHM)
-request_load_attach(other, obj.to_json())
+    # --- a 'daemon' injects a grad-norm watcher into the RUNNING loop
+    obj = loader.build_object(
+        "grad_watch", GRAD_WATCH,
+        [M.MapSpec("grad_hist", M.MapKind.LOG2HIST)],
+        prog_type="uprobe", attach_to="probe:grad.norm")
+    other = ShmRegion.attach(SHM)
+    request_load_attach(other, obj.to_json(), live=True)
 
-applied = rt.poll_control()             # trainer picks it up between steps
-print(f"live-injected: {applied[0]['op']} (epoch {rt.attach_epoch}) — "
-      "training did NOT restart")
+    applied = rt.poll_control()             # picked up between steps
+    assert applied and "error" not in applied[0], applied
+    state["maps"] = rt.sync_live_table(state["maps"])
+    print(f"live-injected: {applied[0]['op']} as link "
+          f"{applied[0]['link_id']} (table gen "
+          f"{int(rt.live.host['gen'][0])}) — training did NOT restart")
 
-# --- steps 5-14: instrumented; publish maps for the daemon each step
-for i in range(10):
-    state, m = step_fn()(state, data.next())
-    rt.publish(state["maps"])
-print(f"steps 5-14 instrumented: loss={float(m['loss']):.4f}")
-print("\ngradient-norm histogram (live in shm for the daemon):")
-print(render_log2_hist(np.asarray(state["maps"]["grad_hist"]["bins"]),
-                       label="grad_norm"))
+    # --- steps 5-14: instrumented, SAME compiled step; publish for daemons
+    for _ in range(10):
+        state, m = step(state, data.next())
+        rt.publish(state["maps"])
+    hist1 = int(np.asarray(state["maps"]["grad_hist"]["bins"]).sum())
+    print(f"steps 5-14 instrumented: loss={float(m['loss']):.4f}, "
+          f"hist events={hist1}")
+    assert hist1 == 10, f"one grad.norm event per step, got {hist1}"
+    assert step._cache_size() == 1, \
+        "live attach must not retrace/recompile the step"
+
+    # --- detach, still no recompile; events stop
+    rt.detach(applied[0]["link_id"])
+    state["maps"] = rt.sync_live_table(state["maps"])
+    for _ in range(3):
+        state, m = step(state, data.next())
+    hist2 = int(np.asarray(state["maps"]["grad_hist"]["bins"]).sum())
+    assert hist2 == hist1, "detached program kept running"
+    assert step._cache_size() == 1
+
+    print("\ngradient-norm histogram (live in shm for the daemon):")
+    print(render_log2_hist(np.asarray(state["maps"]["grad_hist"]["bins"]),
+                           label="grad_norm"))
+    print("OK: attach+detach on the running step, jit cache size stayed 1")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -68,8 +68,13 @@ def summarize(shm: ShmRegion, section: str = "device") -> str:
 
 
 def request_load_attach(shm: ShmRegion, obj_json: str,
-                        target: str | None = None) -> None:
-    shm.request({"op": "load_attach", "object": obj_json, "target": target})
+                        target: str | None = None,
+                        live: bool = False) -> None:
+    """live=True routes into the trainer's program-table interpreter lane:
+    the program goes live on the ALREADY-COMPILED step (no retrace) — watch
+    `live_gen` in read_status() bump to confirm application."""
+    shm.request({"op": "load_attach", "object": obj_json, "target": target,
+                 "live": live})
 
 
 def request_detach(shm: ShmRegion, link_id: int) -> None:
@@ -83,17 +88,30 @@ def main(argv=None):
     ap.add_argument("--once", action="store_true")
     ap.add_argument("--attach", help="path to a ProgramObject json to inject")
     ap.add_argument("--target", help="attach target for --attach")
+    ap.add_argument("--live", action="store_true",
+                    help="inject via the live program table (no retrace in "
+                         "the target process)")
+    ap.add_argument("--detach", type=int, metavar="LINK_ID",
+                    help="queue a detach of a previously applied link")
     args = ap.parse_args(argv)
 
     shm = ShmRegion.attach(args.shm_dir)
     if args.attach:
         with open(args.attach) as f:
-            request_load_attach(shm, f.read(), args.target)
-        print(f"queued load+attach of {args.attach}")
+            request_load_attach(shm, f.read(), args.target, live=args.live)
+        print(f"queued {'live ' if args.live else ''}load+attach "
+              f"of {args.attach}")
+        return
+    if args.detach is not None:
+        request_detach(shm, args.detach)
+        print(f"queued detach of link {args.detach}")
         return
     while True:
+        status = shm.read_status()
         print(f"=== {time.strftime('%H:%M:%S')} "
-              f"programs: {list(shm.read_programs())}")
+              f"programs: {list(shm.read_programs())} "
+              f"live_gen: {status.get('live_gen', 0)} "
+              f"links: {status.get('links', {})}")
         print(summarize(shm))
         if args.once:
             break

@@ -191,6 +191,90 @@ def insn_slots(insns: list[Insn]) -> list[int]:
     return slots
 
 
+# ---------------------------------------------------------------- table form
+# Handler classes for the device-resident program-table interpreter
+# (table_interp.py): every decoded insn maps to one of these at ENCODE time,
+# so the in-graph interpreter dispatches on a small data-driven switch
+# instead of decoding opcodes with tensor bit arithmetic.
+(TH_ALU64, TH_ALU32, TH_LDDW, TH_LDX, TH_ST, TH_STX, TH_JA, TH_JCOND64,
+ TH_JCOND32, TH_CALL, TH_EXIT) = range(11)
+
+# Fields of the packed form, one flat i64 array per field (length = n insns):
+#   hcls     handler class (TH_*)
+#   dst/src  register numbers
+#   off      s16 memory offset (jump offsets are pre-resolved into `tgt`)
+#   imm      sign-extended immediate; full s64 value for LDDW
+#   aluop    (op & OP_MASK) >> 4 — ALU op index, or cond-jump op index
+#   use_imm  1 when the K (immediate) source form is used
+#   size     access width in bytes for ld/st
+#   tgt      next insn INDEX when the insn transfers control (ja/taken cond);
+#            i + 1 for everything else, so `tgt` is the universal "taken" pc
+#   hid      helper BRANCH index (via helper_index) for TH_CALL
+TABLE_FIELDS = ("hcls", "dst", "src", "off", "imm", "aluop", "use_imm",
+                "size", "tgt", "hid")
+
+
+def encode_table_program(insns: list[Insn],
+                         helper_index: dict[int, int] | None = None) -> dict:
+    """Pack decoded (already verified) bytecode into fixed-layout i64 arrays
+    for the table interpreter. Jump targets are resolved from slot units to
+    decoded-insn indices here, so the interpreter never touches slot math.
+    Returns {field: list[int]} of equal length (see TABLE_FIELDS)."""
+    n = len(insns)
+    slots = insn_slots(insns)
+    slot2idx = {s: i for i, s in enumerate(slots)}
+    out = {f: [0] * n for f in TABLE_FIELDS}
+
+    def jump_target(i: int) -> int:
+        tgt_slot = slots[i] + 1 + insns[i].off
+        if tgt_slot not in slot2idx:
+            raise ValueError(f"insn {i}: jump to invalid slot {tgt_slot}")
+        return slot2idx[tgt_slot]
+
+    for i, ins in enumerate(insns):
+        cls = ins.cls
+        out["dst"][i] = ins.dst
+        out["src"][i] = ins.src
+        out["off"][i] = ins.off
+        out["tgt"][i] = i + 1
+        if ins.is_lddw():
+            out["hcls"][i] = TH_LDDW
+            out["imm"][i] = s64(ins.imm64 or 0)
+        elif cls in (BPF_ALU64, BPF_ALU):
+            out["hcls"][i] = TH_ALU64 if cls == BPF_ALU64 else TH_ALU32
+            out["aluop"][i] = (ins.op & OP_MASK) >> 4
+            out["use_imm"][i] = 0 if ins.op & SRC_MASK else 1
+            out["imm"][i] = ins.imm
+        elif cls == BPF_LDX:
+            out["hcls"][i] = TH_LDX
+            out["size"][i] = SIZE_BYTES[ins.op & SIZE_MASK]
+        elif cls in (BPF_ST, BPF_STX):
+            out["hcls"][i] = TH_ST if cls == BPF_ST else TH_STX
+            out["size"][i] = SIZE_BYTES[ins.op & SIZE_MASK]
+            out["imm"][i] = ins.imm
+        elif cls in (BPF_JMP, BPF_JMP32):
+            jop = ins.op & OP_MASK
+            if jop == BPF_EXIT:
+                out["hcls"][i] = TH_EXIT
+            elif jop == BPF_JA:
+                out["hcls"][i] = TH_JA
+                out["tgt"][i] = jump_target(i)
+            elif jop == BPF_CALL:
+                out["hcls"][i] = TH_CALL
+                out["hid"][i] = (helper_index[ins.imm] if helper_index
+                                 else ins.imm)
+            else:
+                out["hcls"][i] = (TH_JCOND64 if cls == BPF_JMP
+                                  else TH_JCOND32)
+                out["aluop"][i] = jop >> 4
+                out["use_imm"][i] = 0 if ins.op & SRC_MASK else 1
+                out["imm"][i] = ins.imm
+                out["tgt"][i] = jump_target(i)
+        else:
+            raise ValueError(f"insn {i}: unknown class {cls:#x}")
+    return out
+
+
 def disasm_one(ins: Insn) -> str:
     cls = ins.cls
     if ins.is_lddw():

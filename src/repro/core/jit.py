@@ -199,6 +199,59 @@ def _stack_store(stack, off: int, size: int, val, aligned: bool | None = None):
     return stack
 
 
+def dyn_word_load(words, off, size):
+    """Little-endian load of `size` bytes at DYNAMIC byte offset `off` from
+    an i64 word array — the traced-offset twin of `_stack_load`, used by the
+    program-table interpreter where offsets are data, not constants. The
+    verifier has proven accesses in bounds before a program is table-encoded;
+    indices are clipped only to keep XLA gathers well-defined. Shift amounts
+    are masked to [0, 63] with `where` guards for the rb == 0 / size == 8
+    edge cases (a shift by 64 is undefined in XLA)."""
+    nwords = words.shape[0]
+    w0 = jnp.clip(off >> 3, 0, nwords - 1).astype(jnp.int32)
+    w1 = jnp.minimum(w0 + 1, nwords - 1)
+    rb = _u(off & 7)
+    lo = _u(words[w0]) >> (jnp.uint64(8) * rb)
+    hi_sh = (jnp.uint64(64) - jnp.uint64(8) * rb) & jnp.uint64(63)
+    hi = jnp.where(rb == 0, jnp.uint64(0), _u(words[w1]) << hi_sh)
+    v = lo | hi
+    nbits = (jnp.uint64(8) * _u(size)) & jnp.uint64(63)
+    mask = jnp.where(size >= 8, jnp.uint64(_U64_FULL),
+                     (jnp.uint64(1) << nbits) - jnp.uint64(1))
+    return (v & mask).astype(I64)
+
+
+def dyn_word_store(words, off, size, val):
+    """Little-endian store of the low `size` bytes of `val` at DYNAMIC byte
+    offset `off` — the traced-offset twin of `_stack_store`. Read-modify-
+    writes the one or two covering words; the second-word write is a
+    self-assignment when the access doesn't span (and the spanning case is
+    verifier-proven in bounds, so w1 never aliases w0)."""
+    nwords = words.shape[0]
+    w0 = jnp.clip(off >> 3, 0, nwords - 1).astype(jnp.int32)
+    w1 = jnp.minimum(w0 + 1, nwords - 1)
+    rb = off & 7
+    nbits = (jnp.uint64(8) * _u(size)) & jnp.uint64(63)
+    v = jnp.where(size >= 8, _u(val),
+                  _u(val) & ((jnp.uint64(1) << nbits) - jnp.uint64(1)))
+    nb0 = jnp.minimum(size, 8 - rb)              # bytes landing in word0
+    m0_bits = (jnp.uint64(8) * _u(nb0)) & jnp.uint64(63)
+    m0 = jnp.where(nb0 >= 8, jnp.uint64(_U64_FULL),
+                   (jnp.uint64(1) << m0_bits) - jnp.uint64(1)) \
+        << (jnp.uint64(8) * _u(rb))
+    new0 = (_u(words[w0]) & ~m0) | ((v << (jnp.uint64(8) * _u(rb))) & m0)
+    spans = (rb + size) > 8
+    nb1 = jnp.clip(rb + size - 8, 0, 7)
+    m1 = (jnp.uint64(1) << (jnp.uint64(8) * _u(nb1))) - jnp.uint64(1)
+    sh1 = (jnp.uint64(8) * _u(8 - rb)) & jnp.uint64(63)
+    new1 = (_u(words[w1]) & ~m1) | ((v >> sh1) & m1)
+    # word1 first: when not spanning this is a self-assignment, so it cannot
+    # clobber the word0 write even if w1 was clipped onto w0.
+    words = words.at[w1].set(jnp.where(spans, new1.astype(I64), words[w1]))
+    words = words.at[w0].set(new0.astype(I64))
+    return words
+
+
 def _imm_src(ins, is64: bool):
     if is64:
         return jnp.int64(ins.imm)          # sign-extended s32 -> s64

@@ -11,6 +11,11 @@ Responsibilities:
   * attach/detach WITHOUT restart: every device change bumps `attach_epoch`;
     the training loop re-jits its step on epoch change and carries state
     over — the ptrace-pause analogue;
+  * attach/detach WITHOUT RECOMPILATION: the live program-table lane
+    (`enable_live_attach` + `attach_live`/`detach_live`) encodes verified
+    bytecode into a device-resident table read by a generic in-graph
+    interpreter — dispatch is data, so a hot attach is a buffer write, not
+    a retrace (DESIGN.md §9);
   * shm control plane: publish device maps, poll daemon attach requests.
 """
 from __future__ import annotations
@@ -105,6 +110,12 @@ class BpftimeRuntime:
         # 'fused' (default): single-pass multi-program dispatch;
         # 'scan' / 'vectorized': the per-attachment seed paths.
         self.exec_mode = "fused"
+        # live program-table lane (enable_live_attach)
+        self.live = None
+        self._armed: set[tuple[int, int]] = set()
+        self._live_slot_of: dict[int, int] = {}   # link_id -> table slot
+        self._table_writer = None
+        self._synced_gen = 0                      # last gen pushed to device
 
     # ---------------------------------------------------------------- maps
     def create_map(self, spec: MapSpec) -> int:
@@ -122,7 +133,10 @@ class BpftimeRuntime:
         return fd
 
     def init_device_maps(self) -> dict:
-        return M.init_states(self.map_specs, jnp)
+        st = M.init_states(self.map_specs, jnp)
+        if self.live is not None:
+            st["__live_table__"] = self.live.device_state()
+        return st
 
     # ---------------------------------------------------------------- load
     def load_object(self, obj: ProgramObject) -> int:
@@ -143,6 +157,103 @@ class BpftimeRuntime:
         obj = loader.build_object(name, text, list(maps), prog_type,
                                   ctx_words=ctx_words)
         return self.load_object(obj)
+
+    # ---------------------------------------------------------------- live lane
+    @staticmethod
+    def _parse_device_target(target: str):
+        """(site_id, event_kind) for a device target, None for host targets."""
+        parts = target.split(":")
+        if parts[0] not in ("uprobe", "uretprobe", "probe"):
+            return None
+        ev_kind = {"uprobe": E.KIND_ENTRY, "uretprobe": E.KIND_EXIT,
+                   "probe": E.KIND_TRACEPOINT}[parts[0]]
+        return E.SITES.get_or_create(parts[1]), ev_kind
+
+    def enable_live_attach(self, max_programs: int = 4, max_insns: int = 64,
+                           arm=()):
+        """Opt into the program-table interpreter lane. Must run BEFORE the
+        step function is traced (it changes the trace: the table joins the
+        map-state pytree and the interpreter joins probe_stage) — after
+        which attach_live/detach_live never retrace. `arm` pre-declares
+        device targets whose events are collected even with no program
+        attached (the paper's patched-but-idle trampoline), since event
+        collection is fixed at trace time."""
+        from .table_interp import LiveTable
+        self.live = LiveTable(list(self.map_specs),
+                              ctx_words=E.EVENT_WIDTH,
+                              max_programs=max_programs,
+                              max_insns=max_insns)
+        for target in arm:
+            self.arm_site(target)
+        self.attach_epoch += 1
+        return self.live
+
+    def arm_site(self, target: str) -> None:
+        """Collect events for a device target so hot-attached programs can
+        consume them. Changes the trace (bump epoch); call before compile."""
+        parsed = self._parse_device_target(target)
+        if parsed is None:
+            raise ValueError(f"cannot arm non-device target {target!r}")
+        if parsed not in self._armed:
+            self._armed.add(parsed)
+            self.attach_epoch += 1
+
+    def attach_live(self, pid: int, target: str) -> int:
+        """Attach a loaded+verified program to an already-compiled step via
+        the live table: encode into a free slot, bump the generation
+        counter. NO attach_epoch bump — the caller pushes the new table with
+        sync_live_table() and keeps using the same compiled step."""
+        if self.live is None:
+            raise loader.LoadError("enable_live_attach() was not called "
+                                   "before the step was compiled")
+        prog = self.progs[pid]
+        parsed = self._parse_device_target(target)
+        if parsed is None:
+            raise ValueError(f"live attach needs a device target, got "
+                             f"{target!r}")
+        from .verifier import check_table_encodable
+        check_table_encodable(prog.vprog, n_maps=self.live.n_maps,
+                              max_insns=self.live.max_insns,
+                              ctx_words=self.live.ctx_words)
+        slot = self.live.free_slot()
+        if slot is None:
+            raise loader.LoadError(
+                f"live table full ({self.live.max_programs} slots)")
+        sid, ev_kind = parsed
+        self.live.encode_slot(slot, prog.vprog, sid, ev_kind, pid=pid)
+        lid = next(self._next_link)
+        self.links[lid] = Link(lid, pid, target)
+        self._live_slot_of[lid] = slot
+        self.publish_status()
+        return lid
+
+    def detach_live(self, link_id: int) -> None:
+        slot = self._live_slot_of.pop(link_id)
+        self.links.pop(link_id)
+        self.live.clear_slot(slot)
+        self.publish_status()
+
+    def sync_live_table(self, map_states, force: bool = False):
+        """Push the host-side table into the device map-state WITHOUT
+        retracing: shapes/dtypes are unchanged and the old table buffers are
+        donated, so this is a pure buffer update on the running state.
+        Generation-gated: an idle call (no attach/detach since the last
+        sync) returns the state untouched, so the training loop can call it
+        every step for free."""
+        if self.live is None or "__live_table__" not in map_states:
+            return map_states
+        gen = int(self.live.host["gen"][0])
+        if not force and gen == self._synced_gen:
+            return map_states
+        self._synced_gen = gen
+        if self._table_writer is None:
+            # buffer donation is a no-op (with a warning) on CPU backends
+            donate = (0,) if jax.default_backend() != "cpu" else ()
+            self._table_writer = jax.jit(lambda old, new: new,
+                                         donate_argnums=donate)
+        new = self._table_writer(map_states["__live_table__"],
+                                 self.live.device_state())
+        return {**map_states, "__live_table__": new}
 
     # ---------------------------------------------------------------- attach
     def attach(self, pid: int, target: str) -> int:
@@ -173,6 +284,9 @@ class BpftimeRuntime:
         return lid
 
     def detach(self, link_id: int) -> None:
+        if link_id in self._live_slot_of:
+            self.detach_live(link_id)
+            return
         link = self.links.pop(link_id)
         prog = self.progs[link.pid]
         parts = link.target.split(":")
@@ -194,7 +308,7 @@ class BpftimeRuntime:
 
     # ---------------------------------------------------------------- device
     def wanted_sites(self) -> set[tuple[int, int]]:
-        return set(self.device_attach.keys())
+        return set(self.device_attach.keys()) | self._armed
 
     def collector(self, stats_fn=None) -> E.Collector:
         return E.Collector(self.wanted_sites(), stats_fn=stats_fn)
@@ -211,8 +325,28 @@ class BpftimeRuntime:
         touched-maps footprint. Cost: O(events + call_sites) instead of the
         seed's O(programs x events x total_state).
         'scan' / 'vectorized' keep the seed per-attachment behavior (oracle
-        for differential tests and the benchmark baseline)."""
+        for differential tests and the benchmark baseline).
+
+        When the live lane is enabled, a third stage runs after the static
+        lanes: the program-table interpreter executes whatever verified
+        bytecode the `__live_table__` data currently holds (DESIGN.md §9) —
+        its trace never depends on which programs are attached."""
         mode = mode or self.exec_mode
+        table = None
+        if "__live_table__" in map_states:
+            table = map_states["__live_table__"]
+            map_states = {k: v for k, v in map_states.items()
+                          if k != "__live_table__"}
+        map_states, aux = self._static_lanes(event_rows, map_states, aux,
+                                             mode)
+        if table is not None:
+            if self.live is not None and event_rows.shape[0] > 0:
+                map_states, aux = self.live.run(table, event_rows,
+                                                map_states, aux)
+            map_states = {**map_states, "__live_table__": table}
+        return map_states, aux
+
+    def _static_lanes(self, event_rows, map_states, aux, mode):
         if event_rows.shape[0] == 0 or not self.device_attach:
             return map_states, aux
         if mode == "fused":
@@ -274,6 +408,7 @@ class BpftimeRuntime:
             self.host_maps[spec.name] = self.shm.host[spec.name]
         for name, obj_json in self._objects.items():
             self.shm.publish_program(obj_json, name)
+        self.publish_status()
         return self.shm
 
     def publish(self, map_states) -> None:
@@ -285,7 +420,12 @@ class BpftimeRuntime:
             impl=lambda: self.shm.publish_device(host_states))
 
     def poll_control(self) -> list[dict]:
-        """Pick up daemon attach/detach/load requests (between steps)."""
+        """Pick up daemon attach/detach/load requests (between steps).
+        Requests with "live": true route into the program table
+        (attach_live) — the running compiled step picks them up after the
+        loop calls sync_live_table(); everything else goes through the
+        epoch-bumping (retrace) path. Each applied load_attach reports the
+        assigned link_id so the daemon can detach it later."""
         if self.shm is None:
             return []
         reqs, self._req_cursor = self.shm.poll_requests(self._req_cursor)
@@ -296,13 +436,34 @@ class BpftimeRuntime:
                     obj = ProgramObject.from_json(r["object"])
                     pid = self.load_object(obj)
                     tgt = r.get("target") or obj.attach_to
-                    self.attach(pid, tgt)
+                    lid = (self.attach_live(pid, tgt) if r.get("live")
+                           else self.attach(pid, tgt))
+                    applied.append({**r, "link_id": lid})
+                    continue
                 elif r["op"] == "detach":
                     self.detach(int(r["link_id"]))
                 applied.append(r)
             except Exception as e:  # control plane must not kill training
                 applied.append({**r, "error": str(e)})
+        if applied:     # idle polls stay a pure request-counter read
+            self.publish_status()
         return applied
+
+    def publish_status(self) -> None:
+        """Expose the control plane's view to the daemon: live-table
+        generation + active links, so a requester can confirm its program
+        went live (or was rejected) without attaching a debugger."""
+        if self.shm is None:
+            return
+        self.shm.publish_status({
+            "attach_epoch": self.attach_epoch,
+            "live_gen": int(self.live.host["gen"][0]) if self.live else 0,
+            "live_slots": ({str(p): (self.progs[pid].name
+                                     if pid is not None else None)
+                            for p, pid in enumerate(self.live.slot_pid)}
+                           if self.live else {}),
+            "links": {str(lid): lk.target for lid, lk in self.links.items()},
+        })
 
     # ---------------------------------------------------------------- misc
     def ringbuf_drain(self, map_states, name: str, cursor: int):

@@ -13,6 +13,8 @@ permissions, see DESIGN.md §5):
     <dir>/device/.seq.npy           seqlock (odd while a publish is in flight)
     <dir>/control/requests.json     daemon -> trainer attach/detach requests
     <dir>/control/.reqseq.npy       request counter
+    <dir>/control/status.json       trainer -> daemon control-plane status
+                                    (live-table generation, active links)
 """
 from __future__ import annotations
 
@@ -135,6 +137,23 @@ class ShmRegion:
                 with open(os.path.join(d, fn)) as f:
                     out[fn[:-5]] = f.read()
         return out
+
+    # ---------------------------------------------------------------- status
+    def publish_status(self, status: dict) -> None:
+        """trainer side: publish the control plane's state (live-table
+        generation, active links) for daemons to poll."""
+        p = os.path.join(self.root, "control", "status.json")
+        tmp = p + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(status, f)
+        os.replace(tmp, p)              # atomic for concurrent readers
+
+    def read_status(self) -> dict:
+        p = os.path.join(self.root, "control", "status.json")
+        if not os.path.exists(p):
+            return {}
+        with open(p) as f:
+            return json.load(f)
 
     # ---------------------------------------------------------------- control
     def request(self, req: dict) -> None:

@@ -1,0 +1,520 @@
+"""Device-resident program-table interpreter — live attach/detach without
+recompilation (the dispatch-as-data tier; DESIGN.md §9).
+
+The fused/scan lanes (vectorized.py, jit.py) specialize the step HLO to the
+attached program SET: any attach/detach changes the traced computation and
+forces a retrace + XLA recompile — the exact restart-analogue the paper's
+userspace runtime eliminates. This module compiles ONE generic in-graph eBPF
+interpreter whose behavior is driven entirely by tensor DATA:
+
+  * verified bytecode is packed by `isa.encode_table_program` into flat i64
+    arrays (handler class, regs, immediates, pre-resolved jump targets,
+    helper branch indices) and padded into a `max_programs x max_insns`
+    table that rides inside the step's map-state pytree;
+  * the interpreter is a `lax.while_loop` stepping a pc through the padded
+    rows, dispatching on the encoded handler class with one `lax.switch`
+    (ALU/cond ops use compute-all-then-select — branch-free on a vector
+    machine), helper calls with a nested switch over the helper table and,
+    inside map helpers, over the map registry as of compile time;
+  * memory accesses reuse jit.py's word-oriented machinery via the
+    dynamic-offset twins `dyn_word_load` / `dyn_word_store`; the verifier
+    has proven every access in bounds before a program may be encoded
+    (`verifier.check_table_encodable`), so no dynamic indexing can escape
+    the padded table.
+
+The compiled graph depends only on (map registry, ctx width, table dims) —
+never on table contents — so `BpftimeRuntime.attach_live` / `detach_live`
+just write new table rows + a generation counter through a donated buffer
+update and the running compiled step picks them up on its next call: the
+paper's attach-to-a-running-PID, with zero retrace.
+
+Semantics are bit-identical to scan mode (`jit.run_over_events`): the same
+maps.j_* twins, the same predication, the same aux handling — pinned by the
+full differential corpus in tests/test_vm_jit_differential.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa, jit as J, maps as M
+from .helpers import HELPERS
+from .isa import (TABLE_FIELDS, TH_EXIT, STACK_BASE, STACK_SIZE, CTX_BASE)
+from .verifier import VerifiedProgram
+
+I64 = jnp.int64
+
+# stable helper branch order for TH_CALL dispatch (encode-time index)
+TABLE_HELPER_IDS = tuple(sorted(HELPERS))
+TABLE_HELPER_INDEX = {hid: i for i, hid in enumerate(TABLE_HELPER_IDS)}
+
+# per-program metadata rows carried next to the packed insn arrays
+META_FIELDS = ("active", "site", "kind", "n_insns", "fuel")
+
+# ALU handler order — index == (op & OP_MASK) >> 4
+_ALU_ORDER = (isa.BPF_ADD, isa.BPF_SUB, isa.BPF_MUL, isa.BPF_DIV, isa.BPF_OR,
+              isa.BPF_AND, isa.BPF_LSH, isa.BPF_RSH, isa.BPF_NEG, isa.BPF_MOD,
+              isa.BPF_XOR, isa.BPF_MOV, isa.BPF_ARSH)
+# cond-jump ops by (op & OP_MASK) >> 4 slot; None slots (ja/call/exit) are
+# structurally present so the encoded index addresses the stack directly
+_COND_ORDER = (None, isa.BPF_JEQ, isa.BPF_JGT, isa.BPF_JGE, isa.BPF_JSET,
+               isa.BPF_JNE, isa.BPF_JSGT, isa.BPF_JSGE, None, None,
+               isa.BPF_JLT, isa.BPF_JLE, isa.BPF_JSLT, isa.BPF_JSLE)
+
+
+def _spec_key(specs) -> tuple:
+    """Hashable identity of a map universe (flags don't affect codegen)."""
+    return tuple((s.name, s.kind.value, s.max_entries, s.rec_width,
+                  s.num_shards) for s in specs)
+
+
+def _specs_from_key(key):
+    return [M.MapSpec(name=n, kind=M.MapKind(k), max_entries=me,
+                      rec_width=rw, num_shards=ns)
+            for n, k, me, rw, ns in key]
+
+
+# --------------------------------------------------------------------------
+# the generic interpreter (compiled once per map universe)
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def _build_core(spec_key: tuple, ctx_words: int):
+    """Build the single-(program, event) interpreter for a fixed map
+    universe. The returned `core(prog, ctx_row, maps_state, aux, pred)`
+    traces a graph whose SHAPE depends only on (spec_key, ctx_words) and the
+    padded insn dimension — table contents are pure data, which is the whole
+    trace-stability invariant."""
+    specs = _specs_from_key(spec_key)
+    nmaps = len(specs)
+
+    def core(prog: dict, ctx_row, maps_state, aux, pred):
+        """prog: {field: i64[N]} packed rows + 'fuel' i64 scalar. Returns
+        (r0, maps_state, aux); all side effects are gated on `pred` exactly
+        like the scan-lane helpers, so an invalid event is a no-op (and the
+        while loop is skipped outright via the initial done flag)."""
+        n_pad = prog["hcls"].shape[0]
+        zero = jnp.int64(0)
+
+        def key_at(stack, ptr):
+            return J.dyn_word_load(stack, ptr - STACK_BASE, jnp.int64(8))
+
+        def map_switch(fd, mk_branch, operand, fallback):
+            """Dispatch on a DYNAMIC map fd over the compile-time registry.
+            mk_branch(spec) -> fn(operand) -> (r0, ms, aux)."""
+            if nmaps == 0:
+                return fallback
+            idx = jnp.clip(fd, 0, nmaps - 1).astype(jnp.int32)
+            return jax.lax.switch(idx, [mk_branch(sp) for sp in specs],
+                                  operand)
+
+        # ---- helper branches: (regs, stack, ms, aux) -> (r0, ms, aux)
+        def h_map_lookup_elem(o):
+            regs, stack, ms, aux = o
+            key = key_at(stack, regs[2])
+
+            def mk(sp):
+                def br(o2):
+                    key, ms, aux = o2
+                    st = ms[sp.name]
+                    if sp.kind == M.MapKind.ARRAY:
+                        r0 = M.j_array_lookup(st, key, pred)
+                    elif sp.kind == M.MapKind.PERCPU_ARRAY:
+                        r0 = M.j_percpu_lookup(st, aux["cpu"], key, pred)
+                    elif sp.kind == M.MapKind.HASH:
+                        r0 = M.j_hash_lookup(st, key, pred)
+                    else:           # verifier-rejected kind; structural only
+                        r0 = jnp.int64(0)
+                    return r0, ms, aux
+                return br
+            return map_switch(regs[1], mk, (key, ms, aux), (zero, ms, aux))
+
+        def h_map_update_elem(o):
+            regs, stack, ms, aux = o
+            key = key_at(stack, regs[2])
+            val = key_at(stack, regs[3])
+
+            def mk(sp):
+                def br(o2):
+                    key, val, ms, aux = o2
+                    st = ms[sp.name]
+                    if sp.kind == M.MapKind.ARRAY:
+                        new = M.j_array_update(st, key, val, pred)
+                        r0 = jnp.int64(0)
+                    elif sp.kind == M.MapKind.HASH:
+                        new, ok = M.j_hash_update(st, key, val, pred)
+                        r0 = jnp.where(ok, jnp.int64(0), jnp.int64(-7))
+                    else:
+                        return jnp.int64(0), ms, aux
+                    return r0, {**ms, sp.name: new}, aux
+                return br
+            return map_switch(regs[1], mk, (key, val, ms, aux),
+                              (zero, ms, aux))
+
+        def h_map_delete_elem(o):
+            regs, stack, ms, aux = o
+            key = key_at(stack, regs[2])
+
+            def mk(sp):
+                def br(o2):
+                    key, ms, aux = o2
+                    if sp.kind != M.MapKind.HASH:
+                        return jnp.int64(0), ms, aux
+                    new, found = M.j_hash_delete(ms[sp.name], key, pred)
+                    r0 = jnp.where(found, jnp.int64(0), jnp.int64(-2))
+                    return r0, {**ms, sp.name: new}, aux
+                return br
+            return map_switch(regs[1], mk, (key, ms, aux), (zero, ms, aux))
+
+        def h_map_fetch_add(o):
+            regs, stack, ms, aux = o
+            key = key_at(stack, regs[2])
+
+            def mk(sp):
+                def br(o2):
+                    key, delta, ms, aux = o2
+                    st = ms[sp.name]
+                    if sp.kind == M.MapKind.ARRAY:
+                        new, old = M.j_array_fetch_add(st, key, delta, pred)
+                    elif sp.kind == M.MapKind.HASH:
+                        new, old = M.j_hash_fetch_add(st, key, delta, pred)
+                    else:
+                        return jnp.int64(0), ms, aux
+                    return old, {**ms, sp.name: new}, aux
+                return br
+            return map_switch(regs[1], mk, (key, regs[3], ms, aux),
+                              (zero, ms, aux))
+
+        def h_percpu_fetch_add(o):
+            regs, stack, ms, aux = o
+            key = key_at(stack, regs[2])
+
+            def mk(sp):
+                def br(o2):
+                    key, delta, ms, aux = o2
+                    if sp.kind != M.MapKind.PERCPU_ARRAY:
+                        return jnp.int64(0), ms, aux
+                    new, old = M.j_percpu_fetch_add(
+                        ms[sp.name], aux["cpu"], key, delta, pred)
+                    return old, {**ms, sp.name: new}, aux
+                return br
+            return map_switch(regs[1], mk, (key, regs[3], ms, aux),
+                              (zero, ms, aux))
+
+        def h_hist_add(o):
+            regs, stack, ms, aux = o
+
+            def mk(sp):
+                def br(o2):
+                    v, ms, aux = o2
+                    if sp.kind != M.MapKind.LOG2HIST:
+                        return jnp.int64(0), ms, aux
+                    new = M.j_hist_add(ms[sp.name], v, pred)
+                    return jnp.int64(0), {**ms, sp.name: new}, aux
+                return br
+            return map_switch(regs[1], mk, (regs[2], ms, aux),
+                              (zero, ms, aux))
+
+        def h_ringbuf_output(o):
+            regs, stack, ms, aux = o
+            size = regs[3]
+
+            def mk(sp):
+                def br(o2):
+                    ptr, size, ms, aux = o2
+                    if sp.kind != M.MapKind.RINGBUF:
+                        return jnp.int64(0), ms, aux
+                    # read rec_width lanes, zero those beyond the dynamic
+                    # size — matches the scan lane's zero padding exactly
+                    lanes = [jnp.where(
+                        jnp.int64(8 * i) < size,
+                        J.dyn_word_load(stack, ptr - STACK_BASE + 8 * i,
+                                        jnp.int64(8)),
+                        jnp.int64(0)) for i in range(sp.rec_width)]
+                    new = M.j_ringbuf_emit(ms[sp.name], jnp.stack(lanes),
+                                           pred)
+                    return jnp.int64(0), {**ms, sp.name: new}, aux
+                return br
+            return map_switch(regs[1], mk, (regs[2], size, ms, aux),
+                              (zero, ms, aux))
+
+        def h_ktime_get_ns(o):
+            regs, stack, ms, aux = o
+            return aux["time_ns"], ms, aux
+
+        def h_get_smp_processor_id(o):
+            regs, stack, ms, aux = o
+            return aux["cpu"], ms, aux
+
+        def h_get_current_pid_tgid(o):
+            regs, stack, ms, aux = o
+            return aux["pid"], ms, aux
+
+        def h_log2(o):
+            regs, stack, ms, aux = o
+            return M.jnp_log2_bin(regs[1]).astype(I64), ms, aux
+
+        def h_get_prandom_u32(o):
+            regs, stack, ms, aux = o
+            x = jnp.bitwise_and(aux["rand"], jnp.int64(0xFFFFFFFF))
+            x = jnp.where(x == 0, jnp.int64(1), x)
+            x = jnp.bitwise_and(x ^ (x << 13), jnp.int64(0xFFFFFFFF))
+            x = x ^ (x >> 17)
+            x = jnp.bitwise_and(x ^ (x << 5), jnp.int64(0xFFFFFFFF))
+            new_rand = jnp.where(pred, x, aux["rand"])
+            return jnp.where(pred, x, jnp.int64(0)), ms, \
+                {**aux, "rand": new_rand}
+
+        def h_trace_printk(o):
+            regs, stack, ms, aux = o
+            slot = jnp.clip(aux["printk_n"], 0, 7).astype(jnp.int32)
+            row = jnp.stack([regs[1], regs[2]])
+            buf = aux["printk_buf"].at[slot].set(
+                jnp.where(pred, row, aux["printk_buf"][slot]))
+            n = aux["printk_n"] + jnp.where(pred, jnp.int64(1), jnp.int64(0))
+            return zero, ms, {**aux, "printk_buf": buf, "printk_n": n}
+
+        def h_override_return(o):
+            regs, stack, ms, aux = o
+            ov_s = jnp.where(pred, jnp.int64(1), aux["override_set"])
+            ov_v = jnp.where(pred, regs[1], aux["override_val"])
+            return zero, ms, {**aux, "override_set": ov_s,
+                              "override_val": ov_v}
+
+        helper_fns = {
+            "map_lookup_elem": h_map_lookup_elem,
+            "map_update_elem": h_map_update_elem,
+            "map_delete_elem": h_map_delete_elem,
+            "map_fetch_add": h_map_fetch_add,
+            "percpu_fetch_add": h_percpu_fetch_add,
+            "hist_add": h_hist_add,
+            "ringbuf_output": h_ringbuf_output,
+            "ktime_get_ns": h_ktime_get_ns,
+            "get_smp_processor_id": h_get_smp_processor_id,
+            "get_current_pid_tgid": h_get_current_pid_tgid,
+            "log2": h_log2,
+            "get_prandom_u32": h_get_prandom_u32,
+            "trace_printk": h_trace_printk,
+            "override_return": h_override_return,
+        }
+        helper_branches = [helper_fns[HELPERS[hid].name]
+                           for hid in TABLE_HELPER_IDS]
+
+        # ---- opcode handlers: opnd -> (regs, stack, ms, aux, taken)
+        def b_alu(is64):
+            def br(o):
+                dst, src, off, imm, aluop, use_imm, size, hid, \
+                    regs, stack, ms, aux = o
+                d = regs[dst]
+                s = jnp.where(use_imm != 0, imm, regs[src])
+                rs = [J._alu_jax(op, d, s, is64) for op in _ALU_ORDER]
+                r = jnp.stack(rs)[jnp.clip(aluop, 0, 12).astype(jnp.int32)]
+                return regs.at[dst].set(r), stack, ms, aux, jnp.asarray(True)
+            return br
+
+        def b_lddw(o):
+            dst, src, off, imm, aluop, use_imm, size, hid, \
+                regs, stack, ms, aux = o
+            return regs.at[dst].set(imm), stack, ms, aux, jnp.asarray(True)
+
+        def b_ldx(o):
+            dst, src, off, imm, aluop, use_imm, size, hid, \
+                regs, stack, ms, aux = o
+            addr = regs[src] + off
+            is_ctx = addr >= CTX_BASE
+            v_stack = J.dyn_word_load(stack, addr - STACK_BASE, size)
+            v_ctx = J.dyn_word_load(ctx_row, addr - CTX_BASE, size)
+            v = jnp.where(is_ctx, v_ctx, v_stack)
+            return regs.at[dst].set(v), stack, ms, aux, jnp.asarray(True)
+
+        def b_store(from_reg):
+            def br(o):
+                dst, src, off, imm, aluop, use_imm, size, hid, \
+                    regs, stack, ms, aux = o
+                val = regs[src] if from_reg else imm
+                stack = J.dyn_word_store(stack, regs[dst] + off - STACK_BASE,
+                                         size, val)
+                return regs, stack, ms, aux, jnp.asarray(True)
+            return br
+
+        def b_nop(o):      # ja (tgt pre-resolved) and exit (done set outside)
+            dst, src, off, imm, aluop, use_imm, size, hid, \
+                regs, stack, ms, aux = o
+            return regs, stack, ms, aux, jnp.asarray(True)
+
+        def b_jcond(is64):
+            def br(o):
+                dst, src, off, imm, aluop, use_imm, size, hid, \
+                    regs, stack, ms, aux = o
+                lhs = regs[dst]
+                rhs = jnp.where(use_imm != 0, imm, regs[src])
+                conds = [jnp.asarray(False) if op is None
+                         else J._jmp_cond_jax(op, lhs, rhs, is64)
+                         for op in _COND_ORDER]
+                taken = jnp.stack(conds)[
+                    jnp.clip(aluop, 0, len(conds) - 1).astype(jnp.int32)]
+                return regs, stack, ms, aux, taken
+            return br
+
+        def b_call(o):
+            dst, src, off, imm, aluop, use_imm, size, hid, \
+                regs, stack, ms, aux = o
+            idx = jnp.clip(hid, 0, len(helper_branches) - 1).astype(jnp.int32)
+            r0, ms, aux = jax.lax.switch(idx, helper_branches,
+                                         (regs, stack, ms, aux))
+            regs = regs.at[0].set(r0)
+            regs = regs.at[1:6].set(jnp.zeros((5,), I64))
+            return regs, stack, ms, aux, jnp.asarray(True)
+
+        branches = [b_alu(True), b_alu(False), b_lddw, b_ldx,
+                    b_store(False), b_store(True), b_nop,
+                    b_jcond(True), b_jcond(False), b_call, b_nop]
+
+        def loop_cond(c):
+            pc, fuel, regs, stack, ms, ax, done = c
+            return (~done) & (fuel > 0)
+
+        def loop_body(c):
+            pc, fuel, regs, stack, ms, ax, done = c
+            i = jnp.clip(pc, 0, n_pad - 1).astype(jnp.int32)
+            hcls = prog["hcls"][i]
+            opnd = (prog["dst"][i], prog["src"][i], prog["off"][i],
+                    prog["imm"][i], prog["aluop"][i], prog["use_imm"][i],
+                    prog["size"][i], prog["hid"][i], regs, stack, ms, ax)
+            regs, stack, ms, ax, taken = jax.lax.switch(
+                jnp.clip(hcls, 0, len(branches) - 1).astype(jnp.int32),
+                branches, opnd)
+            nxt = jnp.where(taken, prog["tgt"][i], pc + 1)
+            return (nxt, fuel - 1, regs, stack, ms, ax,
+                    done | (hcls == TH_EXIT))
+
+        regs0 = jnp.zeros((11,), I64)
+        regs0 = regs0.at[isa.R1].set(jnp.int64(CTX_BASE))
+        regs0 = regs0.at[isa.R10].set(jnp.int64(STACK_BASE + STACK_SIZE))
+        stack0 = jnp.zeros((J.STACK_WORDS,), I64)
+        init = (jnp.int64(0), prog["fuel"], regs0, stack0, maps_state, aux,
+                ~pred)
+        _pc, _fuel, regs, _stack, ms, ax, _done = jax.lax.while_loop(
+            loop_cond, loop_body, init)
+        return regs[0], ms, ax
+
+    return core
+
+
+# --------------------------------------------------------------------------
+# the live table (host-side owner + in-step lane driver)
+# --------------------------------------------------------------------------
+
+class LiveTable:
+    """Host-side owner of the device-resident program table.
+
+    Encoding/clearing mutates numpy arrays here and bumps the generation
+    counter; `BpftimeRuntime.sync_live_table` pushes the arrays into the
+    step's map-state pytree through a donated buffer update. The device copy
+    is read-only in-graph."""
+
+    def __init__(self, map_specs, ctx_words: int = 16, max_programs: int = 4,
+                 max_insns: int = 64):
+        self.spec_key = _spec_key(map_specs)
+        self.n_maps = len(self.spec_key)
+        self.ctx_words = ctx_words
+        self.max_programs = max_programs
+        self.max_insns = max_insns
+        self.host: dict[str, np.ndarray] = {
+            f: np.zeros((max_programs, max_insns), np.int64)
+            for f in TABLE_FIELDS}
+        # padded rows halt immediately if a (verified-impossible) runaway pc
+        # ever lands on them
+        self.host["hcls"][:, :] = TH_EXIT
+        for f in META_FIELDS:
+            self.host[f] = np.zeros((max_programs,), np.int64)
+        self.host["gen"] = np.zeros((1,), np.int64)
+        self.slot_pid: list[int | None] = [None] * max_programs
+
+    # ------------------------------------------------------------- host side
+    def device_state(self) -> dict:
+        return {k: jnp.asarray(v) for k, v in self.host.items()}
+
+    def free_slot(self) -> int | None:
+        for p in range(self.max_programs):
+            if not self.host["active"][p]:
+                return p
+        return None
+
+    def encode_slot(self, slot: int, vprog: VerifiedProgram, site_id: int,
+                    kind: int, pid: int = 0) -> None:
+        tp = isa.encode_table_program(vprog.insns, TABLE_HELPER_INDEX)
+        n = len(vprog.insns)
+        for f in TABLE_FIELDS:
+            self.host[f][slot, :] = TH_EXIT if f == "hcls" else 0
+            self.host[f][slot, :n] = tp[f]
+        self.host["active"][slot] = 1
+        self.host["site"][slot] = site_id
+        self.host["kind"][slot] = kind
+        self.host["n_insns"][slot] = n
+        # fuel in INSN steps. The scan-lane T2 budget is vprog.max_insns
+        # BLOCK-dispatch steps (jit.compile_t2); scale by the longest block
+        # so any execution that completes within the scan lane's budget also
+        # completes here — exhausting either budget (the kernel's 1M-insn
+        # safety net, not a semantic) is outside the equivalence contract.
+        max_block = max((b.end - b.start for b in vprog.blocks), default=1)
+        self.host["fuel"][slot] = vprog.max_insns * max(1, max_block)
+        self.host["gen"][0] += 1
+        self.slot_pid[slot] = pid
+
+    def clear_slot(self, slot: int) -> None:
+        self.host["active"][slot] = 0
+        self.host["gen"][0] += 1
+        self.slot_pid[slot] = None
+
+    # ------------------------------------------------------------- device side
+    def run(self, table_state: dict, event_rows, maps_state, aux):
+        """The interpreter lane: scan the event tape, running every active
+        table slot on each row (slot order — the combined-scan interleave,
+        like jit.run_fused_scan). Traced inside the step function; everything
+        about `table_state` is data."""
+        core = _build_core(self.spec_key, self.ctx_words)
+
+        def step(carry, row):
+            ms, ax = carry
+            for p in range(self.max_programs):
+                prog = {f: table_state[f][p] for f in TABLE_FIELDS}
+                prog["fuel"] = table_state["fuel"][p]
+                pred = ((table_state["active"][p] != 0)
+                        & (row[0] == table_state["site"][p])
+                        & (row[1] == table_state["kind"][p]))
+                _r0, ms, ax = core(prog, row, ms, ax, pred)
+            return (ms, ax), jnp.int64(0)
+
+        (ms, ax), _ = jax.lax.scan(step, (maps_state, aux), event_rows)
+        return ms, ax
+
+
+# --------------------------------------------------------------------------
+# differential-test entry point
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _jit_run_single(spec_key, ctx_words, prog, ctx_row, maps_state, aux):
+    core = _build_core(spec_key, ctx_words)
+    return core(prog, ctx_row, maps_state, aux, jnp.asarray(True))
+
+
+def run_program(vprog: VerifiedProgram, ctx_row, maps_state, aux,
+                pad_insns: int = 128):
+    """Run ONE verified program through the table interpreter on a single
+    ctx row with pred=True — the differential-test twin of
+    `jit.compile_program`. Padded to a shared width so the corpus reuses one
+    compiled interpreter per (map universe, ctx width)."""
+    lt = LiveTable(vprog.map_specs, ctx_words=vprog.ctx_words,
+                   max_programs=1,
+                   max_insns=max(pad_insns, len(vprog.insns)))
+    lt.encode_slot(0, vprog, site_id=0, kind=0)
+    tbl = lt.device_state()
+    prog = {f: tbl[f][0] for f in TABLE_FIELDS}
+    prog["fuel"] = tbl["fuel"][0]
+    return _jit_run_single(lt.spec_key, lt.ctx_words, prog,
+                           jnp.asarray(ctx_row, I64), maps_state, aux)

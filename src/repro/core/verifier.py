@@ -283,6 +283,36 @@ def verify(insns: list[Insn], map_specs: list[MapSpec], ctx_words: int = 16,
                            touched_aux=frozenset(touched_aux))
 
 
+def check_table_encodable(vprog: VerifiedProgram, n_maps: int,
+                          max_insns: int, ctx_words: int) -> None:
+    """Gate for hot-attaching into a live program table (table_interp.py).
+
+    The table interpreter is compiled ONCE against a fixed universe — the
+    padded insn dimension, the event-row width, and the map registry as of
+    interpreter compile time. A verified program may still be impossible to
+    attach without a retrace; this raises VerifierError for each such case
+    so the control plane can reject the request cleanly (generation counter
+    untouched)."""
+    if len(vprog.insns) > max_insns:
+        raise VerifierError(
+            f"program has {len(vprog.insns)} insns, live table is padded to "
+            f"{max_insns} — recompile the step with a larger table")
+    if vprog.ctx_words > ctx_words:
+        raise VerifierError(
+            f"program reads {vprog.ctx_words} ctx words, live table rows "
+            f"carry {ctx_words}")
+    for ann in vprog.anns.values():
+        if isinstance(ann, CallAnn):
+            sig = HELPERS[ann.hid]
+            for i, kind in enumerate(sig.args):
+                if kind == "mapfd" and ann.statics[i] >= n_maps:
+                    raise VerifierError(
+                        f"program touches map fd {ann.statics[i]} "
+                        f"({vprog.map_specs[ann.statics[i]].name!r}) created "
+                        f"after the live table was compiled "
+                        f"(knows fds 0..{n_maps - 1})")
+
+
 # ---------------------------------------------------------------- transfer fn
 
 def _require_init(st: AbsState, r: int, pc: int, what: str) -> Reg:

@@ -57,6 +57,9 @@ def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
     while int(state["step"]) < steps:
         if runtime is not None:
             runtime.poll_control()          # daemon injection point
+            # push any live-table change onto the running compiled step
+            # (no-op unless a live attach/detach happened since last sync)
+            state["maps"] = runtime.sync_live_table(state["maps"])
             runtime.syscalls.invoke("sys_step_begin", [int(state["step"])],
                                     impl=lambda: None)
         batch_np = data.next()

@@ -15,7 +15,24 @@ def test_bench_probe_json_smoke(tmp_path):
     d = json.loads(out.read_text())
     assert d["n_programs"] == 3
     assert d["n_events"] == 512
-    assert set(d["modes"]) == {"scan", "vectorized", "fused"}
+    assert set(d["modes"]) == {"scan", "vectorized", "fused", "interp"}
     for mode, r in d["modes"].items():
         assert r["ns_per_event"] > 0, mode
     assert d["speedup_fused_vs_scan"] > 0
+    assert d["interp_overhead_vs_scan"] > 0
+    assert d["attach_latency_ms"] > 0
+
+
+def test_regression_gate_on_current_baseline():
+    """The committed baseline must pass its own gate, and decayed results
+    must fail it — so CI can trust a red gate."""
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks import check_regression as cr
+    base = json.load(open(os.path.join(os.path.dirname(__file__), "..",
+                                       "benchmarks", "BENCH_baseline.json")))
+    assert cr.check(base, base, tolerance=2.0) == []
+    bad = json.loads(json.dumps(base))
+    bad["speedup_fused_vs_scan"] = 1.0
+    bad["modes"]["interp"]["ns_per_event"] *= 10
+    bad["attach_latency_ms"] *= 10
+    assert len(cr.check(bad, base, tolerance=2.0)) == 3

@@ -1,14 +1,18 @@
 """Cross-PROCESS control plane: the monitor daemon runs as a real separate
 process (subprocess) against a live shm region — the paper's bpftime-daemon
-story, not just same-process API calls."""
+story, not just same-process API calls — plus the live program-table
+round trip (request_load_attach(live=True) -> table update -> detach)."""
 import os
 import subprocess
 import sys
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from repro.core import maps as M
+from repro.core import daemon, events as E, jit as J, loader, maps as M
 from repro.core.runtime import BpftimeRuntime
+from repro.core.shm import ShmRegion
 
 
 def test_daemon_subprocess_reads_live_maps(tmp_path):
@@ -70,3 +74,140 @@ def test_daemon_subprocess_injects_program(tmp_path):
     applied = rt.poll_control()
     assert len(applied) == 1 and "error" not in applied[0]
     assert rt.device_attach            # program is live
+
+
+# ---------------------------------------------------------------- live table
+
+HITS_PROG = """
+    mov r6, 0
+    stxdw [r10-8], r6
+    lddw r1, map:hits
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+
+def _live_trainer(tmp_path):
+    """Trainer side: live lane enabled, shm up, step already compiled."""
+    rt = BpftimeRuntime()
+    spec = M.MapSpec("hits", M.MapKind.ARRAY, max_entries=8)
+    rt.create_map(spec)
+    rt.enable_live_attach(max_programs=2, max_insns=32,
+                          arm=("uprobe:block",))
+    rt.setup_shm(str(tmp_path / "shm"))
+
+    rows = np.zeros((4, E.EVENT_WIDTH), np.int64)
+    rows[:, 0] = E.SITES.get_or_create("block")
+    rows[:, 1] = E.KIND_ENTRY
+    rows = jnp.asarray(rows)
+
+    @jax.jit
+    def stage(r, m):
+        m, _ = rt.probe_stage(r, m, J.make_aux())
+        return m
+
+    maps = stage(rows, rt.init_device_maps())
+    assert stage._cache_size() == 1
+    return rt, stage, rows, maps
+
+
+def test_live_round_trip_through_shm(tmp_path):
+    """Full paper scenario over a REAL shm region: a daemon-side handle
+    queues a live load+attach, the trainer applies it into the running
+    compiled step (generation bumps, no retrace), the daemon confirms via
+    the published status, then detaches — all without the trainer ever
+    re-jitting."""
+    rt, stage, rows, maps = _live_trainer(tmp_path)
+
+    spec = M.MapSpec("hits", M.MapKind.ARRAY, max_entries=8)
+    obj = loader.build_object("hits_live", HITS_PROG, [spec], "uprobe",
+                              attach_to="uprobe:block")
+    other = ShmRegion.attach(str(tmp_path / "shm"))
+    daemon.request_load_attach(other, obj.to_json(), live=True)
+
+    applied = rt.poll_control()
+    assert len(applied) == 1 and "error" not in applied[0]
+    maps = rt.sync_live_table(maps)
+    maps = stage(rows, maps)
+    assert stage._cache_size() == 1, "live inject retraced the step"
+    assert np.asarray(maps["hits"]["values"])[0] == rows.shape[0]
+
+    status = other.read_status()
+    assert status["live_gen"] == 1
+    assert status["live_slots"]["0"] == "hits_live"
+    lid = applied[0]["link_id"]
+    assert status["links"][str(lid)] == "uprobe:block"
+
+    daemon.request_detach(other, lid)
+    assert rt.poll_control() == [{"op": "detach", "link_id": lid}]
+    maps = rt.sync_live_table(maps)
+    before = int(np.asarray(maps["hits"]["values"])[0])
+    maps = stage(rows, maps)
+    assert int(np.asarray(maps["hits"]["values"])[0]) == before
+    assert other.read_status()["live_gen"] == 2
+    assert other.read_status()["live_slots"]["0"] is None
+
+
+def test_live_reject_leaves_generation_untouched(tmp_path):
+    """A verifier-failing program and a program against an unknown map are
+    both rejected at the control plane: error reported, generation counter
+    (and therefore the running table) untouched."""
+    rt, stage, rows, maps = _live_trainer(tmp_path)
+    other = ShmRegion.attach(str(tmp_path / "shm"))
+
+    # (a) fails verification outright: r0 never set before exit
+    bad = loader.ProgramObject(
+        name="bad", prog_type="uprobe",
+        insns_hex="9500000000000000",        # bare `exit`
+        maps=[], relocs={}, attach_to="uprobe:block")
+    daemon.request_load_attach(other, bad.to_json(), live=True)
+    applied = rt.poll_control()
+    assert "error" in applied[0] and "r0" in applied[0]["error"]
+
+    # (b) verifies, but touches a map unknown to the compiled interpreter
+    late = M.MapSpec("late_map", M.MapKind.ARRAY, max_entries=8)
+    obj = loader.build_object(
+        "late", HITS_PROG.replace("map:hits", "map:late_map"), [late],
+        "uprobe", attach_to="uprobe:block")
+    daemon.request_load_attach(other, obj.to_json(), live=True)
+    applied = rt.poll_control()
+    assert "error" in applied[0] and "created after" in applied[0]["error"]
+
+    assert rt.live.host["gen"][0] == 0
+    assert other.read_status()["live_gen"] == 0
+    maps = rt.sync_live_table(maps)
+    maps = stage(rows, maps)
+    assert stage._cache_size() == 1
+    assert np.asarray(maps["hits"]["values"]).sum() == 0
+
+
+def test_daemon_cli_live_inject(tmp_path):
+    """The daemon CLI --attach --live queues a live-table injection."""
+    rt, stage, rows, maps = _live_trainer(tmp_path)
+    spec = M.MapSpec("hits", M.MapKind.ARRAY, max_entries=8)
+    obj = loader.build_object("cli_live", HITS_PROG, [spec], "uprobe",
+                              attach_to="uprobe:block")
+    objpath = tmp_path / "prog.json"
+    objpath.write_text(obj.to_json())
+
+    env = dict(os.environ, PYTHONPATH="src")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.core.daemon",
+         str(tmp_path / "shm"), "--attach", str(objpath), "--live"],
+        capture_output=True, text=True, env=env, cwd=os.getcwd(),
+        timeout=120)
+    assert out.returncode == 0, out.stderr[-2000:]
+    assert "live" in out.stdout
+
+    applied = rt.poll_control()
+    assert len(applied) == 1 and "error" not in applied[0]
+    assert rt.live.host["active"][0] == 1
+    assert not rt.device_attach         # no epoch-lane attachment happened
+    maps = rt.sync_live_table(maps)
+    maps = stage(rows, maps)
+    assert stage._cache_size() == 1
+    assert np.asarray(maps["hits"]["values"])[0] == rows.shape[0]

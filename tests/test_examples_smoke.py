@@ -1,0 +1,40 @@
+"""Examples can't silently rot: run them as real subprocesses and require a
+zero exit code (each example asserts its own end-to-end invariants and exits
+non-zero on failure). Marked slow — deselected from tier-1, run by CI's
+bench job via `pytest -m slow`."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+pytestmark = pytest.mark.slow
+
+_REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run_example(name, tmp_path, extra_env=None):
+    env = dict(os.environ,
+               PYTHONPATH=os.path.join(_REPO, "src"),
+               **(extra_env or {}))
+    out = subprocess.run(
+        [sys.executable, os.path.join(_REPO, "examples", name)],
+        capture_output=True, text=True, env=env, cwd=str(tmp_path),
+        timeout=1200)
+    assert out.returncode == 0, \
+        f"{name} exited {out.returncode}\n--- stdout\n{out.stdout[-2000:]}" \
+        f"\n--- stderr\n{out.stderr[-2000:]}"
+    return out.stdout
+
+
+def test_trace_training_live_inject(tmp_path):
+    out = _run_example("trace_training.py", tmp_path,
+                       {"BPFTIME_SHM": str(tmp_path / "shm")})
+    assert "did NOT restart" in out
+    assert "jit cache size stayed 1" in out
+
+
+def test_opensnoop_syscalls(tmp_path):
+    out = _run_example("opensnoop_syscalls.py", tmp_path)
+    assert "latest committed checkpoint: step 8" in out
+    assert "OK" in out

@@ -1,0 +1,351 @@
+"""Live attach/detach via the program-table interpreter lane: trace
+stability (NO retrace on attach), bit-identical semantics vs scan mode,
+slot lifecycle, and control-plane rejection paths."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import events as E, jit as J, loader, maps as M
+from repro.core.runtime import BpftimeRuntime
+from repro.core.verifier import VerifierError
+
+COUNT_BY_LAYER = """
+    ldxdw r6, [r1+ctx:layer]
+    stxdw [r10-8], r6
+    lddw r1, map:lt_counts
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+HASH_BY_LAYER = """
+    ldxdw r6, [r1+ctx:layer]
+    stxdw [r10-8], r6
+    lddw r1, map:lt_hash
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+HIST_RMS = """
+    ldxdw r2, [r1+ctx:rms]
+    lddw r1, map:lt_hist
+    call hist_add
+    mov r0, 0
+    exit
+"""
+
+LOOP_SUM = """
+    ldxdw r6, [r1+ctx:layer]
+    mov r7, 0
+    loop:
+    add r7, 1
+    sub r6, 1
+    jsgt r6, 0, loop
+    stxdw [r10-8], r7
+    lddw r1, map:lt_counts
+    mov r2, r10
+    add r2, -8
+    mov r3, r7
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+ARR = M.MapSpec("lt_counts", M.MapKind.ARRAY, max_entries=64)
+HASH = M.MapSpec("lt_hash", M.MapKind.HASH, max_entries=64)
+HIST = M.MapSpec("lt_hist", M.MapKind.LOG2HIST)
+SPECS = [ARR, HASH, HIST]
+PROGS = [("lt_count", COUNT_BY_LAYER, [ARR], "uprobe:lt_block"),
+         ("lt_hashp", HASH_BY_LAYER, [HASH], "uprobe:lt_block"),
+         ("lt_histp", HIST_RMS, [HIST], "uretprobe:lt_block")]
+
+
+def make_tape(n=48):
+    rng = np.random.default_rng(7)
+    rows = np.zeros((n, E.EVENT_WIDTH), np.int64)
+    rows[:, 0] = E.SITES.get_or_create("lt_block")
+    rows[:, 1] = np.where(np.arange(n) % 3 == 2, E.KIND_EXIT, E.KIND_ENTRY)
+    rows[:, 2] = rng.integers(0, 32, n)
+    rows[:, 6] = rng.integers(1, 1 << 30, n)
+    return jnp.asarray(rows)
+
+
+def live_runtime():
+    rt = BpftimeRuntime()
+    for sp in SPECS:
+        rt.create_map(sp)
+    rt.enable_live_attach(max_programs=4, max_insns=64,
+                          arm=("uprobe:lt_block", "uretprobe:lt_block"))
+    return rt
+
+
+def scan_runtime():
+    rt = BpftimeRuntime()
+    for sp in SPECS:
+        rt.create_map(sp)
+    for name, text, maps, target in PROGS:
+        pid = rt.load_asm(name, text, maps, "uprobe")
+        rt.attach(pid, target)
+    return rt
+
+
+def map_values(maps_state):
+    return {name: {k: np.asarray(v) for k, v in maps_state[name].items()}
+            for name in ("lt_counts", "lt_hash", "lt_hist")}
+
+
+def test_interp_lane_matches_scan_mode():
+    """Hot-attached programs through the table interpreter produce exactly
+    the state a static scan-mode attachment produces."""
+    rows = make_tape()
+    rt = live_runtime()
+    for name, text, maps, target in PROGS:
+        pid = rt.load_asm(name, text, maps, "uprobe")
+        rt.attach_live(pid, target)
+    maps_live = rt.init_device_maps()
+    stage = jax.jit(lambda r, m: rt.probe_stage(r, m, J.make_aux()))
+    maps_live, _ = stage(rows, maps_live)
+
+    rt2 = scan_runtime()
+    maps_scan = rt2.init_device_maps()
+    maps_scan, _ = jax.jit(
+        lambda r, m: rt2.probe_stage(r, m, J.make_aux(), mode="scan"))(
+            rows, maps_scan)
+
+    got, want = map_values(maps_live), map_values(maps_scan)
+    for name in want:
+        for k in want[name]:
+            np.testing.assert_array_equal(got[name][k], want[name][k],
+                                          err_msg=f"{name}.{k}")
+
+
+def test_attach_live_does_not_retrace():
+    """The headline paper property: attach/detach on a RUNNING compiled
+    step is a data write — the jit cache must not grow."""
+    rows = make_tape()
+    rt = live_runtime()
+    pid = rt.load_asm(*PROGS[0][:3], "uprobe")
+
+    @jax.jit
+    def stage(r, m):
+        m, _ = rt.probe_stage(r, m, J.make_aux())
+        return m
+
+    maps = rt.init_device_maps()
+    maps = stage(rows, maps)
+    assert stage._cache_size() == 1
+    assert np.asarray(maps["lt_counts"]["values"]).sum() == 0
+
+    lid = rt.attach_live(pid, "uprobe:lt_block")
+    maps = rt.sync_live_table(maps)
+    maps = stage(rows, maps)
+    n_entry = int(np.asarray(rows[:, 1] == E.KIND_ENTRY).sum())
+    assert np.asarray(maps["lt_counts"]["values"]).sum() == n_entry
+    assert stage._cache_size() == 1, "live attach retraced the step"
+    assert int(np.asarray(maps["__live_table__"]["gen"])[0]) == 1
+
+    rt.detach_live(lid)
+    maps = rt.sync_live_table(maps)
+    before = np.asarray(maps["lt_counts"]["values"]).sum()
+    maps = stage(rows, maps)
+    assert np.asarray(maps["lt_counts"]["values"]).sum() == before
+    assert stage._cache_size() == 1, "live detach retraced the step"
+    assert int(np.asarray(maps["__live_table__"]["gen"])[0]) == 2
+
+
+def test_detach_routes_live_links():
+    rt = live_runtime()
+    pid = rt.load_asm(*PROGS[0][:3], "uprobe")
+    lid = rt.attach_live(pid, "uprobe:lt_block")
+    assert rt.live.host["active"][0] == 1
+    rt.detach(lid)                      # generic detach routes to the table
+    assert rt.live.host["active"][0] == 0
+    assert lid not in rt.links
+
+
+def test_slot_reuse_and_full_table():
+    rt = live_runtime()
+    pid = rt.load_asm(*PROGS[0][:3], "uprobe")
+    lids = [rt.attach_live(pid, "uprobe:lt_block") for _ in range(4)]
+    with pytest.raises(loader.LoadError, match="full"):
+        rt.attach_live(pid, "uprobe:lt_block")
+    rt.detach_live(lids[1])
+    lid = rt.attach_live(pid, "uprobe:lt_block")
+    assert rt._live_slot_of[lid] == 1   # freed slot is reused
+
+
+def test_attach_live_rejects_unknown_map():
+    """A program touching a map created AFTER the interpreter was compiled
+    cannot go live (the compiled graph has no branch for it) — and the
+    rejection must leave the generation counter untouched."""
+    rt = live_runtime()
+    new_map = M.MapSpec("lt_after", M.MapKind.ARRAY, max_entries=8)
+    prog = COUNT_BY_LAYER.replace("map:lt_counts", "map:lt_after")
+    pid = rt.load_asm("late", prog, [new_map], "uprobe")
+    with pytest.raises(VerifierError, match="created after"):
+        rt.attach_live(pid, "uprobe:lt_block")
+    assert rt.live.host["gen"][0] == 0
+
+
+def test_attach_live_rejects_oversized_program():
+    rt = BpftimeRuntime()
+    rt.create_map(ARR)
+    rt.enable_live_attach(max_programs=1, max_insns=8)
+    pid = rt.load_asm(*PROGS[0][:3], "uprobe")
+    with pytest.raises(VerifierError, match="padded"):
+        rt.attach_live(pid, "uprobe:lt_block")
+    assert rt.live.host["gen"][0] == 0
+
+
+def test_attach_live_requires_enable():
+    rt = BpftimeRuntime()
+    rt.create_map(ARR)
+    pid = rt.load_asm(*PROGS[0][:3], "uprobe")
+    with pytest.raises(loader.LoadError, match="enable_live_attach"):
+        rt.attach_live(pid, "uprobe:lt_block")
+
+
+def test_loop_program_in_lane():
+    """Tier-2 (fuel-bounded loop) bytecode runs natively in the table
+    interpreter and matches the scan-mode result."""
+    rows = make_tape(24)
+    rt = BpftimeRuntime()
+    rt.create_map(ARR)
+    rt.enable_live_attach(arm=("uprobe:lt_block",))
+    pid = rt.load_asm("loopy", LOOP_SUM, [ARR], "uprobe")
+    assert rt.progs[pid].vprog.tier == "loop"
+    rt.attach_live(pid, "uprobe:lt_block")
+    maps, _ = jax.jit(lambda r, m: rt.probe_stage(r, m, J.make_aux()))(
+        rows, rt.init_device_maps())
+
+    rt2 = BpftimeRuntime()
+    rt2.create_map(ARR)
+    pid2 = rt2.load_asm("loopy", LOOP_SUM, [ARR], "uprobe")
+    rt2.attach(pid2, "uprobe:lt_block")
+    maps2, _ = jax.jit(
+        lambda r, m: rt2.probe_stage(r, m, J.make_aux(), mode="scan"))(
+            rows, rt2.init_device_maps())
+    np.testing.assert_array_equal(np.asarray(maps["lt_counts"]["values"]),
+                                  np.asarray(maps2["lt_counts"]["values"]))
+
+
+def test_live_lane_composes_with_fused_lane():
+    """Static fused attachments and hot-attached table programs run in one
+    probe stage; disjoint maps, so order across lanes is irrelevant."""
+    rows = make_tape()
+    rt = live_runtime()
+    # static attachment (fused lane) on the hist map
+    pid_h = rt.load_asm("lt_histp", HIST_RMS, [HIST], "uprobe")
+    rt.attach(pid_h, "uretprobe:lt_block")
+    # hot attachment (table lane) on the array map
+    pid_c = rt.load_asm("lt_count", COUNT_BY_LAYER, [ARR], "uprobe")
+    rt.attach_live(pid_c, "uprobe:lt_block")
+
+    maps, _ = jax.jit(lambda r, m: rt.probe_stage(r, m, J.make_aux()))(
+        rows, rt.init_device_maps())
+    n_entry = int(np.asarray(rows[:, 1] == E.KIND_ENTRY).sum())
+    n_exit = rows.shape[0] - n_entry
+    assert np.asarray(maps["lt_counts"]["values"]).sum() == n_entry
+    assert np.asarray(maps["lt_hist"]["bins"]).sum() == n_exit
+
+
+def test_long_loop_fuel_matches_scan_lane():
+    """Fuel-budget parity: the scan-lane T2 budget is max_insns BLOCK steps
+    while the interpreter counts INSNS — the encoded fuel is scaled by the
+    longest block so any execution completing under the scan lane's budget
+    completes (identically) in the table lane. 30k iterations of a 3-insn
+    loop body used to truncate at 65536 insns (regression test)."""
+    from repro.core import table_interp, vm
+    long_loop = """
+        ldxdw r6, [r1+ctx:layer]
+        mov r7, 0
+        loop:
+        add r7, 1
+        sub r6, 1
+        jsgt r6, 0, loop
+        mov r8, r7
+        and r8, 63
+        stxdw [r10-8], r8
+        lddw r1, map:lt_counts
+        mov r2, r10
+        add r2, -8
+        mov r3, r7
+        call map_fetch_add
+        mov r0, 0
+        exit
+    """
+    rt = BpftimeRuntime()
+    rt.create_map(ARR)
+    pid = rt.load_asm("long", long_loop, [ARR], "uprobe")
+    vprog = rt.progs[pid].vprog
+
+    ctx = np.zeros((E.EVENT_WIDTH,), np.int64)
+    ctx[2] = 30_000                     # ctx:layer — loop iterations
+    np_maps = M.init_states(vprog.map_specs, np)
+    res = vm.run(vprog.insns, vm.pack_ctx([int(w) for w in ctx]),
+                 vprog.map_specs, np_maps)
+    assert res.insns_executed > 65_536  # beyond the old insn-fuel ceiling
+    r0, j_maps, _ = table_interp.run_program(
+        vprog, jnp.asarray(ctx), M.init_states(vprog.map_specs, jnp),
+        J.make_aux())
+    assert int(r0) == res.r0 == 0
+    np.testing.assert_array_equal(np.asarray(j_maps["lt_counts"]["values"]),
+                                  np_maps["lt_counts"]["values"])
+    assert np_maps["lt_counts"]["values"][30_000 & 63] == 30_000
+
+
+def test_run_training_applies_daemon_live_inject(tmp_path):
+    """The PRODUCTION loop (launch.train.run_training) must both pick up a
+    daemon live injection AND push it onto its running compiled step —
+    without re-jitting (the jit cache stays on one epoch)."""
+    from repro.core import daemon, loader
+    from repro.core.shm import ShmRegion
+    from repro.launch.train import run_training
+
+    rt = BpftimeRuntime()
+    rt.create_map(ARR)
+    rt.enable_live_attach(max_programs=2, max_insns=64,
+                          arm=("probe:grad.norm",))
+    epoch_at_compile = {}
+
+    prog = loader.build_object(
+        "inject", COUNT_BY_LAYER.replace("ctx:layer", "ctx:step"), [ARR],
+        "uprobe", attach_to="probe:grad.norm")
+
+    def on_step(s, state, metrics):
+        epoch_at_compile[s] = rt.attach_epoch
+        if s == 2:      # a 'daemon' injects while training runs
+            other = ShmRegion.attach(str(tmp_path / "shm"))
+            daemon.request_load_attach(other, prog.to_json(), live=True)
+
+    state, hist = run_training(
+        "qwen2-0.5b", steps=6, smoke=True, runtime=rt,
+        shm_dir=str(tmp_path / "shm"), probe_mode="fused",
+        seq_len=16, batch=2, log_every=0, on_step=on_step)
+
+    # injected at the boundary after step 2 -> counts steps 3..6
+    counts = np.asarray(state["maps"]["lt_counts"]["values"])
+    assert counts.sum() == 4, counts[:8]
+    # one attach_epoch for the whole run: the injection did not re-jit
+    assert len(set(epoch_at_compile.values())) == 1
+    assert rt.live.host["gen"][0] == 1
+    assert rt.shm.read_status()["live_slots"]["0"] == "inject"
+
+
+def test_armed_sites_collect_without_programs():
+    rt = live_runtime()
+    assert (E.SITES.get_or_create("lt_block"), E.KIND_ENTRY) in \
+        rt.wanted_sites()
+    with rt.collector() as col:
+        E.probe_site("lt_block", jnp.ones((4,), jnp.float32),
+                     kind=E.KIND_ENTRY)
+        rows = col.take_all_rows()
+    assert rows.shape[0] == 1           # collected even with zero programs

@@ -1,22 +1,43 @@
-"""Differential tests: interpreter oracle (vm.py) vs JAX JIT (jit.py),
+"""Differential tests: interpreter oracle (vm.py) vs JAX JIT (jit.py) vs the
+program-table interpreter (table_interp.py — the live attach/detach lane),
 on hand-written programs and hypothesis-generated random ones."""
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-pytest.importorskip("hypothesis", reason="property tests need hypothesis")
-from hypothesis import given, settings, strategies as st  # noqa: E402
+try:        # hypothesis is optional: only the property tests need it
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
-from repro.core import asm, isa, jit, maps as M, verifier, vm
+from repro.core import asm, isa, jit, maps as M, table_interp, verifier, vm
 
 
 def _mk_maps(specs):
     return M.init_states(specs, np), M.init_states(specs, jnp)
 
 
+def _check_outputs(label, res, oracle_aux, np_maps, specs, r0, maps_out,
+                   aux_out, check_maps):
+    assert isa.u64(int(r0)) == isa.u64(res.r0), \
+        f"r0 mismatch: {label}={isa.u64(int(r0)):#x} vm={isa.u64(res.r0):#x}"
+    if check_maps:
+        for sp in specs:
+            for k, arr in np_maps[sp.name].items():
+                np.testing.assert_array_equal(
+                    np.asarray(maps_out[sp.name][k]), arr,
+                    err_msg=f"[{label}] map {sp.name}.{k}")
+    assert int(aux_out["override_set"]) == oracle_aux.override_set
+    if oracle_aux.override_set:
+        assert isa.u64(int(aux_out["override_val"])) == \
+            oracle_aux.override_val
+
+
 def run_both(text, ctx_words=None, specs=(), aux_kw=None, check_maps=True):
-    """Assemble, verify, run oracle + JIT, compare r0/maps/aux."""
+    """Assemble, verify, run oracle + JIT + table interpreter, compare
+    r0/maps/aux across all three."""
     ctx_words = ctx_words or [0] * 8
     specs = list(specs)
     a = asm.assemble(text)
@@ -33,18 +54,15 @@ def run_both(text, ctx_words=None, specs=(), aux_kw=None, check_maps=True):
     jaux = jit.make_aux(**aux_kw)
     f = jax.jit(lambda c, m, x: prog(c, m, x))
     r0, j_maps_out, jaux_out = f(ctx, j_maps, jaux)
+    _check_outputs("jit", res, oracle_aux, np_maps, specs, r0, j_maps_out,
+                   jaux_out, check_maps)
 
-    assert isa.u64(int(r0)) == isa.u64(res.r0), \
-        f"r0 mismatch: jit={isa.u64(int(r0)):#x} vm={isa.u64(res.r0):#x}"
-    if check_maps:
-        for sp in specs:
-            for k, arr in np_maps[sp.name].items():
-                np.testing.assert_array_equal(
-                    np.asarray(j_maps_out[sp.name][k]), arr,
-                    err_msg=f"map {sp.name}.{k}")
-    assert int(jaux_out["override_set"]) == oracle_aux.override_set
-    if oracle_aux.override_set:
-        assert isa.u64(int(jaux_out["override_val"])) == oracle_aux.override_val
+    # the live-attach lane must agree with the oracle on the SAME corpus
+    _, t_maps = _mk_maps(specs)
+    t_r0, t_maps_out, t_aux_out = table_interp.run_program(
+        vprog, ctx, t_maps, jit.make_aux(**aux_kw))
+    _check_outputs("table", res, oracle_aux, np_maps, specs, t_r0,
+                   t_maps_out, t_aux_out, check_maps)
     return res, r0
 
 
@@ -426,80 +444,77 @@ def test_branchy_map_updates_predication():
 _ALU64 = ["add", "sub", "mul", "div", "or", "and", "lsh", "rsh", "mod",
           "xor", "arsh"]
 
-
-@st.composite
-def straightline_program(draw):
-    """Random straight-line ALU program over r0-r5 + ctx loads + stack ops."""
-    lines = [f"ldxdw r{i}, [r1+{8 * i}]" for i in range(2, 6)]
-    lines.append("mov r0, 0")
-    n = draw(st.integers(2, 25))
-    for _ in range(n):
-        op = draw(st.sampled_from(_ALU64 + ["mov"]))
-        w = draw(st.sampled_from(["", "32"]))
-        dst = draw(st.integers(0, 5))
-        if dst == 1:
-            dst = 0  # keep r1 = ctx ptr intact
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def straightline_program(draw):
+        """Random straight-line ALU program over r0-r5 + ctx/stack ops."""
+        lines = [f"ldxdw r{i}, [r1+{8 * i}]" for i in range(2, 6)]
+        lines.append("mov r0, 0")
+        n = draw(st.integers(2, 25))
+        for _ in range(n):
+            op = draw(st.sampled_from(_ALU64 + ["mov"]))
+            w = draw(st.sampled_from(["", "32"]))
+            dst = draw(st.integers(0, 5))
+            if dst == 1:
+                dst = 0  # keep r1 = ctx ptr intact
+            if draw(st.booleans()):
+                src = draw(st.integers(2, 5))
+                lines.append(f"{op}{w} r{dst}, r{src}")
+            else:
+                imm = draw(st.integers(-2**31, 2**31 - 1))
+                lines.append(f"{op}{w} r{dst}, {imm}")
+        # occasional stack round-trip
         if draw(st.booleans()):
-            src = draw(st.integers(2, 5))
-            lines.append(f"{op}{w} r{dst}, r{src}")
-        else:
-            imm = draw(st.integers(-2**31, 2**31 - 1))
-            lines.append(f"{op}{w} r{dst}, {imm}")
-    # occasional stack round-trip
-    if draw(st.booleans()):
-        lines.append("stxdw [r10-8], r0")
-        lines.append("ldxdw r0, [r10-8]")
-    lines.append("exit")
-    return "\n".join(lines)
+            lines.append("stxdw [r10-8], r0")
+            lines.append("ldxdw r0, [r10-8]")
+        lines.append("exit")
+        return "\n".join(lines)
 
+    @settings(max_examples=60, deadline=None)
+    @given(prog=straightline_program(),
+           ctx=st.lists(st.integers(0, 2**63 - 1), min_size=8, max_size=8))
+    def test_differential_random_straightline(prog, ctx):
+        run_both(prog, ctx_words=ctx)
 
-@settings(max_examples=60, deadline=None)
-@given(prog=straightline_program(),
-       ctx=st.lists(st.integers(0, 2**63 - 1), min_size=8, max_size=8))
-def test_differential_random_straightline(prog, ctx):
-    run_both(prog, ctx_words=ctx)
+    @st.composite
+    def branchy_program(draw):
+        """Random DAG with forward branches (tier-1 if-conversion stress)."""
+        lines = ["ldxdw r2, [r1+0]", "ldxdw r3, [r1+8]", "mov r0, 0"]
+        nblk = draw(st.integers(1, 4))
+        for b in range(nblk):
+            cond = draw(st.sampled_from(["jeq", "jgt", "jsgt", "jlt",
+                                         "jset"]))
+            imm = draw(st.integers(-100, 100))
+            lines.append(f"{cond} r2, {imm}, skip{b}")
+            for _ in range(draw(st.integers(1, 3))):
+                op = draw(st.sampled_from(_ALU64))
+                imm2 = draw(st.integers(-1000, 1000))
+                lines.append(f"{op} r0, {imm2}")
+            lines.append("add r3, 1")
+            lines.append(f"skip{b}:")
+            lines.append("add r0, r3")
+        lines.append("exit")
+        return "\n".join(lines)
 
+    @settings(max_examples=40, deadline=None)
+    @given(prog=branchy_program(),
+           ctx=st.lists(st.integers(-200, 200), min_size=8, max_size=8))
+    def test_differential_random_branches(prog, ctx):
+        run_both(prog, ctx_words=[isa.u64(c) for c in ctx])
 
-@st.composite
-def branchy_program(draw):
-    """Random DAG with forward branches (tier-1 if-conversion stress)."""
-    lines = ["ldxdw r2, [r1+0]", "ldxdw r3, [r1+8]", "mov r0, 0"]
-    nblk = draw(st.integers(1, 4))
-    for b in range(nblk):
-        cond = draw(st.sampled_from(["jeq", "jgt", "jsgt", "jlt", "jset"]))
-        imm = draw(st.integers(-100, 100))
-        lines.append(f"{cond} r2, {imm}, skip{b}")
-        for _ in range(draw(st.integers(1, 3))):
-            op = draw(st.sampled_from(_ALU64))
-            imm2 = draw(st.integers(-1000, 1000))
-            lines.append(f"{op} r0, {imm2}")
-        lines.append(f"add r3, 1")
-        lines.append(f"skip{b}:")
-        lines.append("add r0, r3")
-    lines.append("exit")
-    return "\n".join(lines)
-
-
-@settings(max_examples=40, deadline=None)
-@given(prog=branchy_program(),
-       ctx=st.lists(st.integers(-200, 200), min_size=8, max_size=8))
-def test_differential_random_branches(prog, ctx):
-    run_both(prog, ctx_words=[isa.u64(c) for c in ctx])
-
-
-@settings(max_examples=20, deadline=None)
-@given(keys=st.lists(st.integers(-50, 50), min_size=1, max_size=12),
-       deltas=st.lists(st.integers(-5, 5), min_size=12, max_size=12))
-def test_differential_hash_fetch_add(keys, deltas):
-    lines = []
-    for k, d in zip(keys, deltas):
-        lines += [
-            f"mov r6, {k}",
-            "stxdw [r10-8], r6",
-            "mov r1, 0",
-            "mov r2, r10", "add r2, -8",
-            f"mov r3, {d}",
-            "call map_fetch_add",
-        ]
-    lines += ["mov r0, 0", "exit"]
-    run_both("\n".join(lines), specs=[_hash("h", 8)])
+    @settings(max_examples=20, deadline=None)
+    @given(keys=st.lists(st.integers(-50, 50), min_size=1, max_size=12),
+           deltas=st.lists(st.integers(-5, 5), min_size=12, max_size=12))
+    def test_differential_hash_fetch_add(keys, deltas):
+        lines = []
+        for k, d in zip(keys, deltas):
+            lines += [
+                f"mov r6, {k}",
+                "stxdw [r10-8], r6",
+                "mov r1, 0",
+                "mov r2, r10", "add r2, -8",
+                f"mov r3, {d}",
+                "call map_fetch_add",
+            ]
+        lines += ["mov r0, 0", "exit"]
+        run_both("\n".join(lines), specs=[_hash("h", 8)])
