@@ -6,7 +6,10 @@ Hard floors:
     recorded in benchmarks/BENCH_baseline.json — dispatch-as-data may not
     silently decay;
   * live attach latency within TOLERANCE of its recorded budget — the whole
-    point of the lane is that attach is milliseconds, not a retrace.
+    point of the lane is that attach is milliseconds, not a retrace;
+  * fleet merge throughput (events/s aggregated across 3 workers through
+    the interprocess map plane, DESIGN.md §10) no worse than the recorded
+    budget divided by TOLERANCE.
 
     python benchmarks/check_regression.py BENCH_probe.json \
         [--baseline benchmarks/BENCH_baseline.json] [--tolerance 2.0]
@@ -51,6 +54,16 @@ def check(result: dict, baseline: dict, tolerance: float) -> list[str]:
             f"live attach latency {attach:.2f}ms exceeds budget "
             f"{attach_budget:.2f}ms x{tolerance}")
 
+    fleet = result.get("fleet", {}).get("events_per_s")
+    fleet_budget = baseline.get("fleet", {}).get("events_per_s")
+    if fleet is None:
+        failures.append("result json has no fleet merge measurement "
+                        "(fleet.events_per_s)")
+    elif fleet_budget and fleet < fleet_budget / tolerance:
+        failures.append(
+            f"fleet merge throughput {fleet:.0f} events/s is below budget "
+            f"{fleet_budget:.0f}/{tolerance}")
+
     return failures
 
 
@@ -79,6 +92,11 @@ def main(argv=None) -> int:
         print(f"attach:        {result['attach_latency_ms']:.2f}ms "
               f"(budget {baseline.get('attach_latency_ms', 0):.2f} "
               f"x{args.tolerance})")
+    if "fleet" in result:
+        print(f"fleet merge:   "
+              f"{result['fleet']['events_per_s']:.0f} events/s "
+              f"(budget {baseline.get('fleet', {}).get('events_per_s', 0):.0f}"
+              f" /{args.tolerance})")
     if failures:
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)

@@ -173,6 +173,56 @@ def measure_attach_latency(repeats: int = 5) -> float:
     return best
 
 
+def measure_fleet_merge(n_workers: int = 3, rounds: int = 8,
+                        events_per_round: int = 2048) -> dict:
+    """Merge throughput of the interprocess map plane (DESIGN.md §10):
+    N workers publish seqlocked snapshots of a representative map set
+    (ARRAY + HASH + LOG2HIST), the daemon's Aggregator polls and folds the
+    deltas into the global view. events/s counts every map update that
+    flowed through the merge; only the aggregation cycles are timed
+    (worker-side state updates are precomputed)."""
+    import shutil
+    import tempfile
+
+    from repro.core import daemon as D, shm as SH
+
+    specs = [M.MapSpec("fl_arr", M.MapKind.ARRAY, max_entries=128),
+             M.MapSpec("fl_hash", M.MapKind.HASH, max_entries=256),
+             M.MapSpec("fl_hist", M.MapKind.LOG2HIST)]
+    per_kind = events_per_round // 3
+    root = tempfile.mkdtemp(prefix="bpftime_fleetbench_")
+    try:
+        regions = {w: SH.ShmRegion.create(root, specs, worker_id=f"w{w}")
+                   for w in range(n_workers)}
+        states = {w: M.init_states(specs, np) for w in range(n_workers)}
+        rng = np.random.default_rng(0)
+        agg = D.Aggregator(root)
+        agg.poll_once()          # discovery + zero-delta warmup cycle
+        total = 0.0
+        for _ in range(rounds):
+            for w in range(n_workers):
+                st = states[w]
+                np.add.at(st["fl_arr"]["values"],
+                          rng.integers(0, 128, per_kind), 1)
+                M.n_hash_fetch_add_batch(
+                    st["fl_hash"],
+                    rng.integers(0, 64, per_kind).astype(np.int64),
+                    np.ones(per_kind, np.int64))
+                np.add.at(st["fl_hist"]["bins"],
+                          rng.integers(0, 64, per_kind), 1)
+                regions[w].publish_device(st)
+            t0 = time.perf_counter()
+            agg.poll_once()
+            total += time.perf_counter() - t0
+        n_events = n_workers * rounds * 3 * per_kind
+        return {"workers": n_workers, "rounds": rounds,
+                "events_per_round_per_worker": 3 * per_kind,
+                "merge_wall_s": round(total, 4),
+                "events_per_s": n_events / max(total, 1e-9)}
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def run(n_events: int = 4096, iters: int = 20,
         modes=("scan", "vectorized", "fused", "interp")) -> dict:
     rt = build_runtime()
@@ -197,6 +247,9 @@ def run(n_events: int = 4096, iters: int = 20,
             / max(out["modes"]["scan"]["ns_per_event"], 1e-12))
     if "interp" in modes:
         out["attach_latency_ms"] = measure_attach_latency() * 1e3
+    # interprocess map plane: merge throughput across a 3-worker fleet
+    out["fleet"] = measure_fleet_merge(
+        events_per_round=max(384, n_events // 2))
     return out
 
 
@@ -210,6 +263,10 @@ def main():
     if "attach_latency_ms" in res:
         print(f"# live attach latency: {res['attach_latency_ms']:.2f}ms "
               f"(vs retrace: {res['modes']['fused']['compile_s']}s)")
+    if "fleet" in res:
+        fl = res["fleet"]
+        print(f"# fleet merge: {fl['events_per_s']:.0f} events/s "
+              f"across {fl['workers']} workers")
 
 
 if __name__ == "__main__":

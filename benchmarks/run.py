@@ -65,6 +65,9 @@ def main(argv=None):
             print(f"# live attach latency: "
                   f"{res['attach_latency_ms']:.2f}ms (retrace avoided: "
                   f"~{res['modes']['fused']['compile_s']}s)")
+        if "fleet" in res:
+            print(f"# fleet merge: {res['fleet']['events_per_s']:.0f} "
+                  f"events/s across {res['fleet']['workers']} workers")
         print(f"\nwrote {args.json}\nOK")
         return
 

@@ -1,0 +1,135 @@
+"""Fleet aggregation demo: THREE worker processes, ONE global view.
+
+Each worker is an independent process running its own BpftimeRuntime with a
+LOG2HIST probe compiled into its step; all three join the same shm region
+under workers/<wid>/. The parent runs the daemon's aggregation engine
+(`daemon.Aggregator`), which polls every worker's seqlocked snapshots,
+merges the per-worker histograms with the commutative delta-sum twins, and
+publishes one fleet-wide histogram under <dir>/global/ — the paper's
+"interprocess eBPF Maps within shared memory, catering to summary
+aggregation" (C3), at N>1 for the first time.
+
+    PYTHONPATH=src python examples/fleet_agg.py
+
+Asserts (exits non-zero on failure):
+  * the merged global LOG2HIST is bin-for-bin the SUM of what each worker
+    measured locally;
+  * every worker (including ones that already exited) is accounted for in
+    the aggregation status;
+  * the bpftool-style CLI can read the global view.
+"""
+import multiprocessing as mp
+import os
+import shutil
+import sys
+import tempfile
+import time
+
+import numpy as np
+
+N_WORKERS = 3
+N_STEPS = 4
+EVENTS_PER_STEP = 64
+
+HIST_RMS = """
+    ldxdw r2, [r1+ctx:rms]
+    lddw r1, map:fleet_hist
+    call hist_add
+    mov r0, 0
+    exit
+"""
+
+
+def worker_main(root: str, wid: str) -> None:
+    """One trainer-analogue process: probe compiled into its step, shm
+    joined as workers/<wid>/, one publish per step."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core import events as E, jit as J, maps as M
+    from repro.core.runtime import BpftimeRuntime
+
+    rt = BpftimeRuntime()
+    spec = M.MapSpec("fleet_hist", M.MapKind.LOG2HIST)
+    pid = rt.load_asm("fleet_hist_rms", HIST_RMS, [spec], "uprobe")
+    rt.attach(pid, "uprobe:fleet_block")
+    rt.setup_shm(root, worker_id=wid)
+
+    @jax.jit
+    def stage(rows, maps):
+        maps, _ = rt.probe_stage(rows, maps, J.make_aux())
+        return maps
+
+    maps = rt.init_device_maps()
+    rng = np.random.default_rng(seed=int(wid[1:]))
+    sid = E.SITES.get_or_create("fleet_block")
+    for step in range(N_STEPS):
+        rows = np.zeros((EVENTS_PER_STEP, E.EVENT_WIDTH), np.int64)
+        rows[:, 0] = sid
+        rows[:, 1] = E.KIND_ENTRY
+        rows[:, 3] = step
+        rows[:, 6] = rng.integers(1, 1 << 24, EVENTS_PER_STEP)  # rms (fx)
+        maps = stage(jnp.asarray(rows), maps)
+        rt.publish(maps)
+    # leave the locally-measured truth on disk for the parent's assertion
+    np.save(os.path.join(root, f"expect_{wid}.npy"),
+            np.asarray(maps["fleet_hist"]["bins"]))
+
+
+def main() -> int:
+    root = tempfile.mkdtemp(prefix="bpftime_fleet_")
+    try:
+        return _run(root)
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+def _run(root: str) -> int:
+    from repro.core import daemon, shm as SH
+
+    ctx = mp.get_context("spawn")     # fresh interpreters (jax-safe)
+    wids = [f"w{i}" for i in range(N_WORKERS)]
+    procs = [ctx.Process(target=worker_main, args=(root, wid))
+             for wid in wids]
+    for p in procs:
+        p.start()
+
+    # aggregate WHILE the fleet runs (workers publish every step), then do
+    # a final harvest once everyone has exited
+    agg = None
+    while any(p.is_alive() for p in procs):
+        if agg is None and SH.list_workers(root):
+            agg = daemon.Aggregator(root)
+        if agg is not None:
+            agg.poll_once()
+        time.sleep(0.05)
+    for p in procs:
+        p.join()
+    assert all(p.exitcode == 0 for p in procs), \
+        f"worker crashed: {[p.exitcode for p in procs]}"
+    if agg is None:
+        agg = daemon.Aggregator(root)
+    status = agg.poll_once()          # final harvest (dead-worker rule)
+
+    merged = SH.GlobalView.attach(root).snapshot("fleet_hist")["bins"]
+    expect = sum(np.load(os.path.join(root, f"expect_{w}.npy"))
+                 for w in wids)
+    print(f"fleet status: accounted={sorted(status['alive']) + sorted(status['dead'])} "
+          f"merged_updates={status['merged_updates']}")
+    print(daemon.render_log2_hist(merged, label="rms"))
+    print(f"\nglobal total={int(merged.sum())} "
+          f"(= {N_WORKERS} workers x {N_STEPS * EVENTS_PER_STEP} events)")
+
+    assert sorted(status["alive"]) + sorted(status["dead"]) and \
+        set(status["alive"]) | set(status["dead"]) == set(wids), status
+    np.testing.assert_array_equal(merged, expect)
+    assert int(merged.sum()) == N_WORKERS * N_STEPS * EVENTS_PER_STEP
+
+    # the bpftool-style CLI reads the same global view
+    rc = daemon.main([root, "map", "top", "fleet_hist", "-n", "3"])
+    assert rc == 0
+    print("OK: global histogram is the exact bin-wise sum of all workers")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

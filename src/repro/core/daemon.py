@@ -3,23 +3,42 @@
   * attaches to the shm region (no privileges over the trainer needed —
     plain file permissions, paper SP4);
   * reads live host maps and seqlocked device-map snapshots;
+  * aggregates a FLEET of worker processes into one global map view
+    (`Aggregator`, DESIGN.md §10): per-cycle delta extraction against a
+    last-seen baseline, commutative merge per map kind, dead/stale worker
+    detection, seqlocked publish under `<dir>/global/`;
   * renders bcc-style log2 histograms / counters;
   * queues load+attach requests the trainer applies at the next step
-    boundary (injection-without-restart, paper C5).
+    boundary (injection-without-restart, paper C5) — fanned out to every
+    worker of a fleet.
 
-Usable as a library (tests) or CLI:
+Usable as a library (tests) or CLI. bpftool-style subcommands:
+
+    python -m repro.core.daemon <shm_dir> map dump [MAP] [--section S]
+    python -m repro.core.daemon <shm_dir> map top MAP [-n K]
+    python -m repro.core.daemon <shm_dir> prog list
+    python -m repro.core.daemon <shm_dir> attach OBJ.json [--live] [--target T]
+    python -m repro.core.daemon <shm_dir> detach LINK_ID
+    python -m repro.core.daemon <shm_dir> agg [--watch SECONDS] [--once]
+
+plus the legacy single-process watcher flags:
+
     python -m repro.core.daemon <shm_dir> [--watch SECONDS] [--once]
+                                [--attach OBJ --live] [--detach LINK_ID]
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
+import sys
 import time
 
 import numpy as np
 
-from .maps import MapKind
-from .shm import ShmRegion
+from . import maps as M, shm as SH
+from .maps import MapKind, MapSpec
+from .shm import GlobalView, ShmRegion
 
 
 def render_log2_hist(bins: np.ndarray, label: str = "value") -> str:
@@ -41,29 +60,36 @@ def render_log2_hist(bins: np.ndarray, label: str = "value") -> str:
     return "\n".join(out)
 
 
+def _summarize_state(spec: MapSpec, st: dict) -> list[str]:
+    lines = []
+    if spec.kind == MapKind.LOG2HIST:
+        lines.append(f"[{spec.name}] log2 histogram:")
+        lines.append(render_log2_hist(st["bins"]))
+    elif spec.kind == MapKind.ARRAY:
+        nz = np.nonzero(st["values"])[0]
+        kv = {int(i): int(st["values"][i]) for i in nz[:16]}
+        lines.append(f"[{spec.name}] array: {kv}")
+    elif spec.kind == MapKind.HASH:
+        items = M.n_hash_items(st)
+        kv = dict(sorted(items.items())[:16])
+        lines.append(f"[{spec.name}] hash: {kv}")
+    elif spec.kind == MapKind.PERCPU_ARRAY:
+        tot = st["values"].sum(axis=0)
+        nz = np.nonzero(tot)[0]
+        lines.append(f"[{spec.name}] percpu (summed): "
+                     f"{ {int(i): int(tot[i]) for i in nz[:16]} }")
+    elif spec.kind == MapKind.RINGBUF:
+        lines.append(f"[{spec.name}] ringbuf head={int(st['head'][0])} "
+                     f"dropped={int(st['dropped'][0])}")
+    return lines
+
+
 def summarize(shm: ShmRegion, section: str = "device") -> str:
     lines = []
     for spec in shm.specs:
         st = (shm.snapshot_device(spec.name) if section == "device"
               else {f: np.array(a) for f, a in shm.host[spec.name].items()})
-        if spec.kind == MapKind.LOG2HIST:
-            lines.append(f"[{spec.name}] log2 histogram:")
-            lines.append(render_log2_hist(st["bins"]))
-        elif spec.kind == MapKind.ARRAY:
-            nz = np.nonzero(st["values"])[0]
-            kv = {int(i): int(st["values"][i]) for i in nz[:16]}
-            lines.append(f"[{spec.name}] array: {kv}")
-        elif spec.kind == MapKind.HASH:
-            used = np.nonzero(st["used"])[0]
-            kv = {int(st['keys'][i]): int(st['values'][i]) for i in used[:16]}
-            lines.append(f"[{spec.name}] hash: {kv}")
-        elif spec.kind == MapKind.PERCPU_ARRAY:
-            tot = st["values"].sum(axis=0)
-            nz = np.nonzero(tot)[0]
-            lines.append(f"[{spec.name}] percpu (summed): "
-                         f"{ {int(i): int(tot[i]) for i in nz[:16]} }")
-        elif spec.kind == MapKind.RINGBUF:
-            lines.append(f"[{spec.name}] ringbuf head={int(st['head'][0])}")
+        lines.extend(_summarize_state(spec, st))
     return "\n".join(lines)
 
 
@@ -81,7 +107,511 @@ def request_detach(shm: ShmRegion, link_id: int) -> None:
     shm.request({"op": "detach", "link_id": link_id})
 
 
+# --------------------------------------------------------------------------
+# aggregation engine (DESIGN.md §10)
+# --------------------------------------------------------------------------
+
+class SeqRegression(Exception):
+    """A worker's seqlock went BACKWARDS: its shm section was re-created
+    (restart) under the aggregator. The cycle's snapshot is a different
+    incarnation's state and must be forfeited, never diffed."""
+
+
+class Aggregator:
+    """Polls every worker's seqlocked device snapshots, extracts per-cycle
+    deltas against a last-seen baseline, and folds them into one global
+    view with the commutative merge twins (maps.n_summary_merge /
+    n_hash_fetch_add_batch / ringbuf_merge_global).
+
+    Failure/eviction rules:
+      * a worker whose registered pid is gone is DEAD: its final on-disk
+        snapshot is harvested ONCE (the mmap files outlive the process;
+        a crash mid-publish leaves the seqlock odd and forfeits only that
+        last delta), then it is excluded from polling — its already-merged
+        contribution stays in the global view (summary aggregation keeps
+        fleet totals). A dead worker id is RE-ADMITTED, with a fresh
+        baseline, once a new incarnation appears under it (boot id
+        changed);
+      * a worker whose seqlock cannot be read within the retry budget
+        (crashed mid-publish) is STALE for the cycle: skipped, baseline
+        kept, retried next cycle; it turns dead once its pid goes;
+      * a worker whose boot id changed RESTARTED: its baseline resets to
+        zero so the fresh process's counts merge from scratch (the old
+        incarnation's contribution stays, like a dead worker's);
+      * a worker whose seqlock REGRESSED (a restart re-created the section
+        under the aggregator — zeroed files, seq back to 0 — before
+        worker.json caught up) forfeits that cycle's delta entirely: the
+        zeroed snapshot must never fold as a negative delta. Merges are
+        snapshot-all-then-fold, so a mid-cycle failure never lands a
+        partial merge.
+    """
+
+    def __init__(self, root: str, snapshot_retries: int = 50):
+        self.root = root
+        self.specs = SH.read_meta_specs(root)
+        self.snapshot_retries = snapshot_retries
+        self.view = GlobalView.create(root, self.specs)
+        # global accumulators
+        self.summary = {s.name: M.init_state(s, np) for s in self.specs
+                        if M.is_summary_kind(s.kind)}
+        self.hash_tbl = {s.name: M.init_state(s, np) for s in self.specs
+                         if s.kind == MapKind.HASH}
+        # keys lost because the UNION of worker keys overflowed the
+        # (spec-sized) global table — counted and surfaced in the status,
+        # never silent (the advanced baseline makes the loss permanent)
+        self.hash_dropped = {s.name: 0 for s in self.specs
+                             if s.kind == MapKind.HASH}
+        # ringbuf: per-worker retained tagged records + per-worker heads.
+        # rb_offset is each worker's PERMANENT stream base: past
+        # incarnations' final heads, so a restarted worker's positions
+        # continue after the old incarnation's instead of restarting at 0
+        # (the global head must never regress).
+        self.rb_tagged: dict[str, dict[str, list]] = \
+            {s.name: {} for s in self.specs if s.kind == MapKind.RINGBUF}
+        self.rb_heads: dict[str, dict[str, int]] = \
+            {s.name: {} for s in self.specs if s.kind == MapKind.RINGBUF}
+        self.rb_offset: dict[str, dict[str, int]] = \
+            {s.name: {} for s in self.specs if s.kind == MapKind.RINGBUF}
+        # per-worker step floor: interleave keys must be monotone in each
+        # worker's emit order (maps.ringbuf_merge_global's window
+        # argument), so step tags are clamped to never regress — a
+        # restarted worker whose steps restart at 0 sorts after its old
+        # incarnation, not before it
+        self.rb_step_floor: dict[str, dict[str, int]] = \
+            {s.name: {} for s in self.specs if s.kind == MapKind.RINGBUF}
+        # per-worker poll state; dead maps worker id -> boot id at death,
+        # so a NEW incarnation under the same id is re-admitted
+        self.workers: dict[str, dict] = {}
+        self.dead: dict[str, str | None] = {}
+        self.cycles = 0
+        self.merged_updates = 0
+        self.last_states: dict = {}
+        self._published = False
+
+    # ---------------------------------------------------------------- workers
+    def _fresh_baseline(self) -> dict:
+        return {"summary": {s.name: M.init_state(s, np) for s in self.specs
+                            if M.is_summary_kind(s.kind)},
+                "hash_items": {s.name: {} for s in self.specs
+                               if s.kind == MapKind.HASH},
+                "rb_head": {s.name: 0 for s in self.specs
+                            if s.kind == MapKind.RINGBUF}}
+
+    def _discover(self) -> None:
+        for wid in SH.list_workers(self.root):
+            if wid in self.workers:
+                continue
+            if wid in self.dead:
+                boot = SH.worker_info(self.root, wid).get("boot")
+                if boot == self.dead[wid]:
+                    continue            # same incarnation: stays retired
+                del self.dead[wid]      # new incarnation: re-admit
+                for name in self.rb_offset:
+                    self.rb_offset[name][wid] = \
+                        self.rb_heads[name].get(wid, 0)
+            self.workers[wid] = {
+                "region": ShmRegion.attach(self.root, mode="r",
+                                           worker_id=wid),
+                "boot": SH.worker_info(self.root, wid).get("boot"),
+                "base": self._fresh_baseline(),
+                "seq": 0,
+            }
+
+    def _check_restart(self, wid: str, w: dict) -> None:
+        boot = SH.worker_info(self.root, wid).get("boot")
+        if boot != w["boot"]:
+            w["boot"] = boot
+            w["base"] = self._fresh_baseline()
+            w["seq"] = 0
+            w["region"] = ShmRegion.attach(self.root, mode="r",
+                                           worker_id=wid)
+            # the old incarnation's ringbuf contribution stays: its final
+            # head becomes the new incarnation's stream base
+            for name in self.rb_offset:
+                self.rb_offset[name][wid] = self.rb_heads[name].get(wid, 0)
+
+    # ---------------------------------------------------------------- merge
+    def _merge_worker(self, wid: str, w: dict) -> int:
+        """Snapshot + delta + fold for one worker. Returns the number of
+        updates merged. Raises TimeoutError if the seqlock never settles,
+        SeqRegression if the section was re-created under us (restart mid
+        detection: zeroed files must never fold as a negative delta).
+        Snapshots ALL maps before folding any, so a failure mid-cycle
+        never lands a partial merge."""
+        region, base = w["region"], w["base"]
+        snaps = {}
+        seq_seen = w.get("seq", 0)
+        for spec in self.specs:
+            cur, seq, _ = region.snapshot_device_meta(
+                spec.name, retries=self.snapshot_retries)
+            if seq < w.get("seq", 0):
+                raise SeqRegression(wid)
+            seq_seen = max(seq_seen, seq)
+            snaps[spec.name] = cur
+        w["seq"] = seq_seen
+        updates = 0
+        for spec in self.specs:
+            cur = snaps[spec.name]
+            if M.is_summary_kind(spec.kind):
+                delta = M.n_summary_delta(spec, cur, base["summary"][spec.name])
+                M.n_summary_merge(spec, self.summary[spec.name], delta)
+                updates += int(sum(np.abs(d).sum() for d in delta.values()))
+                base["summary"][spec.name] = cur
+            elif spec.kind == MapKind.HASH:
+                items = M.n_hash_items(cur)
+                adds, dels = M.n_hash_delta(items,
+                                            base["hash_items"][spec.name])
+                if adds:
+                    keys = np.array([k for k, _ in adds], np.int64)
+                    deltas = np.array([d for _, d in adds], np.int64)
+                    M.n_hash_fetch_add_batch(self.hash_tbl[spec.name],
+                                             keys, deltas)
+                    resident = M.n_hash_slots(self.hash_tbl[spec.name])
+                    lost = sum(1 for k, _ in adds if k not in resident)
+                    self.hash_dropped[spec.name] += lost
+                for k in dels:
+                    M.n_hash_delete(self.hash_tbl[spec.name], k)
+                updates += len(adds) + len(dels)
+                base["hash_items"][spec.name] = items
+            elif spec.kind == MapKind.RINGBUF:
+                lane = spec.flags.get("step_lane")
+                tagged, head = M.n_ringbuf_tagged(
+                    cur, wid, lo=base["rb_head"][spec.name], step_lane=lane)
+                # shift this incarnation's local positions onto the
+                # worker's permanent stream, and clamp step tags to the
+                # worker's floor: the interleave key stays monotone in
+                # emit order across restarts (records keep their real
+                # step values — only the sort tags are clamped)
+                off = self.rb_offset[spec.name].get(wid, 0)
+                floor = self.rb_step_floor[spec.name].get(wid, 0)
+                adj = []
+                for (s, w_, i), rec in tagged:
+                    floor = max(floor, s)
+                    adj.append(((floor, w_, off + i), rec))
+                tagged = adj
+                self.rb_step_floor[spec.name][wid] = floor
+                buf = self.rb_tagged[spec.name].setdefault(wid, [])
+                buf.extend(tagged)
+                del buf[:-spec.max_entries]     # ring retention mirror
+                self.rb_heads[spec.name][wid] = off + head
+                updates += len(tagged)
+                base["rb_head"][spec.name] = head
+        return updates
+
+    # ---------------------------------------------------------------- cycle
+    def poll_once(self) -> dict:
+        """One aggregation cycle: discover, poll, merge, publish. Returns
+        the status dict also written to <dir>/global/status.json."""
+        self._discover()
+        stale = []
+        cycle_updates = 0
+        for wid in sorted(self.workers):
+            w = self.workers[wid]
+            # restart detection FIRST, even for a dead worker: a worker
+            # that restarted AND died within one poll interval must be
+            # harvested against the new incarnation's (zero) baseline and
+            # recorded dead under the new boot id — else its contribution
+            # would be mis-diffed now and double-counted on re-admission
+            self._check_restart(wid, w)
+            if not SH.worker_alive(self.root, wid):
+                try:        # harvest the final snapshot, then retire
+                    cycle_updates += self._merge_worker(wid, w)
+                except (TimeoutError, SeqRegression):
+                    pass    # died mid-publish / restart under way:
+                            # the last delta is forfeit
+                self.dead[wid] = w["boot"]
+                del self.workers[wid]
+                continue
+            try:
+                cycle_updates += self._merge_worker(wid, w)
+            except (TimeoutError, SeqRegression):
+                stale.append(wid)       # crashed mid-publish? retry next
+        self.merged_updates += cycle_updates
+        self.cycles += 1
+        # rebuild + republish only when something merged: idle polling
+        # stays O(workers), not O(total map state). Cached for observers
+        # (loop's display) — recomputing repeats the hash canonicalization
+        # and the ringbuf merge-sort.
+        if cycle_updates or not self._published:
+            self.last_states = self.global_states()
+            self.view.publish(self.last_states)
+            self._published = True
+        status = {
+            "alive": sorted(self.workers),
+            "dead": sorted(self.dead),
+            "stale": stale,
+            "cycles": self.cycles,
+            "merged_updates": self.merged_updates,
+            "hash_dropped": dict(self.hash_dropped),
+            "rb_heads": {n: dict(h) for n, h in self.rb_heads.items()},
+            "time": time.time(),
+        }
+        self.view.publish_status(status)
+        return status
+
+    def global_states(self) -> dict:
+        """The merged global view, deterministic for a given set of worker
+        contributions: summary kinds are element-wise sums, hash tables are
+        canonicalized (sorted-key rebuild), ringbufs are the (step, wid,
+        seq) interleave of every worker's retained records."""
+        out = {}
+        for spec in self.specs:
+            if M.is_summary_kind(spec.kind):
+                out[spec.name] = {f: a.copy()
+                                  for f, a in self.summary[spec.name].items()}
+            elif spec.kind == MapKind.HASH:
+                items = M.n_hash_items(self.hash_tbl[spec.name])
+                out[spec.name] = M.n_hash_canonical(spec, items)
+            elif spec.kind == MapKind.RINGBUF:
+                tagged = [t for buf in self.rb_tagged[spec.name].values()
+                          for t in buf]
+                total = sum(self.rb_heads[spec.name].values())
+                out[spec.name] = M.ringbuf_merge_global(spec, tagged, total)
+        return out
+
+    def loop(self, watch: float = 2.0, once: bool = False,
+             out=sys.stdout) -> None:
+        while True:
+            status = self.poll_once()
+            print(f"=== {time.strftime('%H:%M:%S')} agg cycle "
+                  f"{status['cycles']} alive={status['alive']} "
+                  f"dead={status['dead']} stale={status['stale']} "
+                  f"merged={status['merged_updates']}", file=out)
+            for spec in self.specs:
+                if spec.name in self.last_states:
+                    print("\n".join(_summarize_state(
+                        spec, self.last_states[spec.name])), file=out)
+            if once:
+                break
+            time.sleep(watch)
+
+
+# --------------------------------------------------------------------------
+# bpftool-style CLI
+# --------------------------------------------------------------------------
+
+_SUBCOMMANDS = ("map", "prog", "attach", "detach", "agg")
+
+
+def _section_loader(root: str, section: str, worker: str | None):
+    """One attach for the whole CLI invocation; returns name -> state."""
+    if section == "global":
+        view = GlobalView.attach(root)
+        return view.snapshot
+    region = ShmRegion.attach(root, mode="r", worker_id=worker)
+    if section == "device":
+        return region.snapshot_device
+    return lambda name: {f: np.array(a) for f, a in region.host[name].items()}
+
+
+def _default_section(root: str) -> str:
+    return "global" if GlobalView.exists(root) else "device"
+
+
+def _state_to_json(spec: MapSpec, st: dict) -> dict:
+    return {"name": spec.name, "kind": spec.kind.value,
+            **{f: np.asarray(a).tolist() for f, a in st.items()}}
+
+
+def _top_entries(spec: MapSpec, st: dict, n: int) -> list[tuple]:
+    """(key, value) rows sorted by value desc — bpftool's `map top`."""
+    if spec.kind == MapKind.ARRAY:
+        vals = np.asarray(st["values"])
+        idx = np.argsort(-vals, kind="stable")[:n]
+        return [(int(i), int(vals[i])) for i in idx if vals[i] != 0]
+    if spec.kind == MapKind.PERCPU_ARRAY:
+        tot = np.asarray(st["values"]).sum(axis=0)
+        idx = np.argsort(-tot, kind="stable")[:n]
+        return [(int(i), int(tot[i])) for i in idx if tot[i] != 0]
+    if spec.kind == MapKind.HASH:
+        items = M.n_hash_items(st)
+        return sorted(items.items(), key=lambda kv: (-kv[1], kv[0]))[:n]
+    if spec.kind == MapKind.LOG2HIST:
+        bins = np.asarray(st["bins"])
+        idx = np.argsort(-bins, kind="stable")[:n]
+        return [(int(i), int(bins[i])) for i in idx if bins[i] != 0]
+    if spec.kind == MapKind.RINGBUF:
+        recs, _ = M.n_ringbuf_drain(
+            {f: np.asarray(a) for f, a in st.items()}, 0)
+        return [(i, tuple(r)) for i, r in enumerate(recs[-n:])]
+    return []
+
+
+def _cmd_map(root: str, args) -> int:
+    specs = SH.read_meta_specs(root)
+    section = args.section or _default_section(root)
+    wids = SH.list_workers(root)
+    if section == "global" and not GlobalView.exists(root):
+        print("no global view published yet — run `agg` first, or pass "
+              "--section device --worker W", file=sys.stderr)
+        return 1
+    if section in ("device", "host") and wids and args.worker is None:
+        print(f"fleet layout: pass --worker (workers: {', '.join(wids)})",
+              file=sys.stderr)
+        return 1
+    if args.worker is not None and _check_workers(root, [args.worker]):
+        return 1
+    chosen = [s for s in specs if args.name in (None, s.name)]
+    if not chosen:
+        print(f"no such map: {args.name}", file=sys.stderr)
+        return 1
+    load = _section_loader(root, section, args.worker)
+    out_json = []
+    for spec in chosen:
+        st = load(spec.name)
+        if args.action == "dump":
+            if args.json:
+                out_json.append(_state_to_json(spec, st))
+            else:
+                print(f"# section={section}"
+                      + (f" worker={args.worker}" if args.worker else ""))
+                print("\n".join(_summarize_state(spec, st)))
+        else:  # top
+            rows = _top_entries(spec, st, args.top_n)
+            if args.json:
+                out_json.append({"name": spec.name, "top": rows})
+            else:
+                print(f"[{spec.name}] top {len(rows)} ({section}):")
+                for k, v in rows:
+                    print(f"  {k:>8} : {v}")
+    if args.json:
+        print(json.dumps(out_json, indent=1))
+    return 0
+
+
+def _cmd_prog(root: str, args) -> int:
+    from .loader import ProgramObject
+    progs = SH.read_programs(root)
+    wids = SH.list_workers(root)
+    links: dict[str, list] = {}
+    for wid in wids or [None]:
+        try:
+            status = ShmRegion.attach(root, mode="r",
+                                      worker_id=wid).read_status()
+        except OSError:
+            continue
+        for lid, target in status.get("links", {}).items():
+            links.setdefault(wid or "-", []).append((lid, target))
+    rows = []
+    for name, obj_json in progs.items():
+        obj = ProgramObject.from_json(obj_json)
+        rows.append({"name": name, "type": obj.prog_type,
+                     "attach_to": obj.attach_to,
+                     "maps": [m["name"] for m in obj.maps]})
+    if args.json:
+        print(json.dumps({"programs": rows,
+                          "links": {w: ls for w, ls in links.items()}},
+                         indent=1))
+        return 0
+    print(f"{'NAME':20s} {'TYPE':12s} {'ATTACH_TO':24s} MAPS")
+    for r in rows:
+        print(f"{r['name']:20s} {r['type']:12s} "
+              f"{str(r['attach_to']):24s} {','.join(r['maps'])}")
+    for w, ls in sorted(links.items()):
+        for lid, target in ls:
+            print(f"link {lid} -> {target} (worker {w})")
+    return 0
+
+
+def _check_workers(root: str, requested) -> int:
+    """0 if every requested worker id is registered, else 1 + message."""
+    known = SH.list_workers(root)
+    unknown = [w for w in (requested or []) if w not in known]
+    if unknown:
+        print(f"unknown worker(s): {', '.join(unknown)} "
+              f"(registered: {', '.join(known) or 'none'})", file=sys.stderr)
+        return 1
+    return 0
+
+
+def _cmd_attach(root: str, args) -> int:
+    if _check_workers(root, args.worker):
+        return 1
+    with open(args.object) as f:
+        obj_json = f.read()
+    req = {"op": "load_attach", "object": obj_json,
+           "target": args.target, "live": args.live}
+    wids = args.worker or SH.list_workers(root)
+    if wids:
+        reached = SH.fanout_request(root, req, wids)
+        print(f"queued {'live ' if args.live else ''}load+attach of "
+              f"{args.object} to workers {reached}")
+    else:
+        ShmRegion.attach(root).request(req)
+        print(f"queued {'live ' if args.live else ''}load+attach "
+              f"of {args.object}")
+    return 0
+
+
+def _cmd_detach(root: str, args) -> int:
+    if _check_workers(root, args.worker):
+        return 1
+    req = {"op": "detach", "link_id": args.link_id}
+    wids = args.worker or SH.list_workers(root)
+    if wids:
+        reached = SH.fanout_request(root, req, wids)
+        print(f"queued detach of link {args.link_id} to workers {reached}")
+    else:
+        ShmRegion.attach(root).request(req)
+        print(f"queued detach of link {args.link_id}")
+    return 0
+
+
+def _main_bpftool(argv: list[str]) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.core.daemon")
+    ap.add_argument("shm_dir")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    mp = sub.add_parser("map", help="dump or rank map contents")
+    mp.add_argument("action", choices=("dump", "top"))
+    mp.add_argument("name", nargs="?")
+    mp.add_argument("--section", choices=("global", "device", "host"),
+                    help="default: global if aggregated, else device")
+    mp.add_argument("--worker", help="worker id for device/host sections")
+    mp.add_argument("-n", "--top-n", type=int, default=10)
+    mp.add_argument("--json", action="store_true")
+
+    pp = sub.add_parser("prog", help="list loaded programs and links")
+    pp.add_argument("action", choices=("list",))
+    pp.add_argument("--json", action="store_true")
+
+    at = sub.add_parser("attach", help="queue load+attach (fleet fan-out)")
+    at.add_argument("object", help="path to a ProgramObject json")
+    at.add_argument("--target")
+    at.add_argument("--live", action="store_true",
+                    help="route into the live program table (no retrace "
+                         "in any worker)")
+    at.add_argument("--worker", action="append",
+                    help="restrict to worker id(s); default: all workers")
+
+    dt = sub.add_parser("detach", help="queue a detach (fleet fan-out)")
+    dt.add_argument("link_id", type=int)
+    dt.add_argument("--worker", action="append")
+
+    ag = sub.add_parser("agg", help="run the fleet aggregation engine")
+    ag.add_argument("--watch", type=float, default=2.0)
+    ag.add_argument("--once", action="store_true")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "map":
+        return _cmd_map(args.shm_dir, args)
+    if args.cmd == "prog":
+        return _cmd_prog(args.shm_dir, args)
+    if args.cmd == "attach":
+        return _cmd_attach(args.shm_dir, args)
+    if args.cmd == "detach":
+        return _cmd_detach(args.shm_dir, args)
+    if args.cmd == "agg":
+        Aggregator(args.shm_dir).loop(watch=args.watch, once=args.once)
+        return 0
+    return 2            # pragma: no cover - argparse enforces choices
+
+
 def main(argv=None):
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if len(argv) >= 2 and argv[1] in _SUBCOMMANDS:
+        return _main_bpftool(argv)
+
     ap = argparse.ArgumentParser()
     ap.add_argument("shm_dir")
     ap.add_argument("--watch", type=float, default=2.0)
@@ -95,6 +625,11 @@ def main(argv=None):
                     help="queue a detach of a previously applied link")
     args = ap.parse_args(argv)
 
+    if not os.path.exists(os.path.join(args.shm_dir, "device", ".seq.npy")) \
+            and SH.list_workers(args.shm_dir):
+        print("fleet-layout region (no single-process section): use the "
+              "subcommands — map/prog/attach/detach/agg", file=sys.stderr)
+        return 1
     shm = ShmRegion.attach(args.shm_dir)
     if args.attach:
         with open(args.attach) as f:
@@ -119,4 +654,4 @@ def main(argv=None):
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

@@ -41,6 +41,44 @@ _FX_MAX = (1 << 62) - 1
 I64 = jnp.int64
 
 
+def _fallback_tensor_stats(x) -> dict:
+    """Self-contained jnp twin of repro.kernels.ref.tensor_stats — the
+    EXPLICIT fallback used when the Pallas kernels package is unavailable
+    (optional layer). Semantics must match the kernel exactly; the
+    differential test in tests/test_kernels_fallback.py pins it."""
+    xf = jnp.asarray(x, jnp.float32).reshape(-1)
+    nan = jnp.isnan(xf)
+    inf = jnp.isinf(xf)
+    bad = nan | inf
+    n_ok = jnp.maximum(jnp.sum(~bad).astype(jnp.float32), 1.0)
+    z = jnp.where(bad, 0.0, xf)
+    mn = jnp.min(jnp.where(bad, jnp.inf, xf))
+    mx = jnp.max(jnp.where(bad, -jnp.inf, xf))
+    any_ok = jnp.any(~bad)
+    mn = jnp.where(any_ok, mn, 0.0)
+    mx = jnp.where(any_ok, mx, 0.0)
+    return {
+        "mean": jnp.sum(z) / n_ok,
+        "rms": jnp.sqrt(jnp.sum(z * z) / n_ok),
+        "min": mn,
+        "max": mx,
+        "absmax": jnp.maximum(jnp.abs(mn), jnp.abs(mx)),
+        "nan_cnt": jnp.sum(nan).astype(I64),
+        "inf_cnt": jnp.sum(inf).astype(I64),
+    }
+
+
+def default_tensor_stats(tensor) -> dict:
+    """The collector's stats path: the fused kernels package when
+    importable, else the in-module jnp fallback — probes keep working on
+    hosts without the accelerator toolchain."""
+    try:
+        from repro.kernels import ops
+    except ImportError:
+        return _fallback_tensor_stats(tensor)
+    return ops.tensor_stats(tensor)
+
+
 def to_fx(x):
     """f32 -> saturating Q47.16 fixed-point i64 (NaN -> 0)."""
     x = jnp.asarray(x, jnp.float32)
@@ -166,8 +204,7 @@ class Collector:
     def _stats(self, tensor):
         if self.stats_fn is not None:
             return self.stats_fn(tensor)
-        from repro.kernels import ops
-        return ops.tensor_stats(tensor)
+        return default_tensor_stats(tensor)
 
     def stacked_rows(self, frame: _Frame):
         parts = []

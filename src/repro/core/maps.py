@@ -181,22 +181,31 @@ def _j_hash_find(st, key):
     Scans the whole table from the hash position — identical to the numpy
     twin. Vectorized (no data-dependent loop) so it is vmap/scan friendly:
     capacity is small (probe maps, not model state).
+
+    `used` is tri-state: 0 empty, 1 occupied, 2 tombstone. Probe chains
+    terminate at EMPTY slots only — tombstones keep chains intact (deletes
+    never unreach other keys, so map content is layout-independent; the
+    interprocess merge plane depends on this, DESIGN.md §10). Inserts reuse
+    the first tombstone-or-empty slot in probe order.
     """
     n = st["keys"].shape[0]
     start = _jnp_hash_idx(_as_i64(key), n).astype(jnp.int32)
     order = (start + jnp.arange(n, dtype=jnp.int32)) % n          # probe seq
-    used = st["used"][order] != 0
-    match = used & (st["keys"][order] == key)
-    free = ~used
-    # first index in probe order where match / free occurs
+    u = st["used"][order]
+    occupied = u == 1
+    match = occupied & (st["keys"][order] == key)
+    free = ~occupied                     # tombstone or empty: insertable
+    empty = u == 0                       # chain terminator
+    # first index in probe order where match / free / empty occurs
     big = jnp.int32(n)
-    first_match = jnp.min(jnp.where(match, jnp.arange(n, dtype=jnp.int32), big))
-    first_free = jnp.min(jnp.where(free, jnp.arange(n, dtype=jnp.int32), big))
-    found = first_match < big
+    idx = jnp.arange(n, dtype=jnp.int32)
+    first_match = jnp.min(jnp.where(match, idx, big))
+    first_free = jnp.min(jnp.where(free, idx, big))
+    first_empty = jnp.min(jnp.where(empty, idx, big))
+    # an EMPTY slot before the first match terminates probing in the numpy
+    # twin; tombstones do not
+    found = (first_match < big) & (first_match < first_empty)
     has_free = first_free < big
-    # an empty slot BEFORE the first match terminates probing in the numpy
-    # twin; replicate: a match only counts if it occurs before the first free
-    found = found & (first_match < jnp.where(has_free, first_free, big))
     slot = order[jnp.clip(first_match, 0, n - 1)]
     free_slot = order[jnp.clip(first_free, 0, n - 1)]
     return slot, found, free_slot, has_free
@@ -231,9 +240,11 @@ def j_hash_fetch_add(st, key, delta, pred):
 
 
 def _next_free_dist(used):
-    """For every start position s: probe-order distance to the first free
-    slot (>= n means the table is full). One suffix-min over the doubled
-    free mask — O(2n), shared across the whole event batch."""
+    """For every start position s: probe-order distance to the first slot
+    NOT set in `used` (>= n means none). Pass the occupied-or-tombstone
+    mask to get the chain-termination distance (first EMPTY slot). One
+    suffix-min over the doubled mask — O(2n), shared across the whole
+    event batch."""
     n = used.shape[0]
     free2 = jnp.concatenate([~used, ~used])
     pos = jnp.arange(2 * n, dtype=jnp.int32)
@@ -249,19 +260,20 @@ def _j_hash_lookup_batch(st, keys):
     Key insight: whether a TABLE ENTRY is probe-reachable is a property of
     the table alone — entry j holding key k is found by a probe for k iff
     its probe distance (j - hash(k)) mod n is smaller than the distance to
-    the first free slot from hash(k) (`_next_free_dist`); duplicates of a
-    key (broken chains) resolve to the smallest probe distance. So the
-    whole lookup is O(n log n) table-side preprocessing (lexsort by
+    the first chain-terminating EMPTY slot from hash(k) (`_next_free_dist`
+    over the non-empty mask; tombstones block termination). So the whole
+    lookup is O(n log n) table-side preprocessing (lexsort by
     (key, probe_dist)) + an O(B log n) per-lane binary search — no [B, n]
     work at all."""
     kt, ut = st["keys"], st["used"]
     n = kt.shape[0]
     j = jnp.arange(n, dtype=jnp.int32)
-    used = ut != 0
+    used = ut == 1
+    nonempty = ut != 0                           # occupied or tombstone
     startj = _jnp_hash_idx(kt, n).astype(jnp.int32)
     dmj = j - startj
     dmj = jnp.where(dmj < 0, dmj + n, dmj)       # probe dist of entry j
-    reach = used & (dmj < _next_free_dist(used)[startj])
+    reach = used & (dmj < _next_free_dist(nonempty)[startj])
     skey = jnp.where(reach, kt, jnp.int64((1 << 63) - 1))
     sdm = jnp.where(reach, dmj, jnp.int32(n))    # sentinels sort last
     order = jnp.lexsort((sdm, skey))
@@ -333,11 +345,12 @@ def j_hash_fetch_add_batch(st, keys, deltas, ok):
 
 
 def j_hash_delete(st, key, pred):
-    # tombstone-free delete: mark unused (probe chains may break for keys
-    # inserted past this slot — same limitation in the numpy twin, tested).
+    # tombstone delete: the slot becomes insertable (used=2) but keeps
+    # probe chains intact, so deleting one key never unreaches another —
+    # content is layout-independent (merge plane contract, DESIGN.md §10).
     slot, found, _, _ = _j_hash_find(st, key)
     ok = pred & found
-    used = st["used"].at[slot].set(jnp.where(ok, jnp.int64(0), st["used"][slot]))
+    used = st["used"].at[slot].set(jnp.where(ok, jnp.int64(2), st["used"][slot]))
     return {"keys": st["keys"], "used": used, "values": st["values"]}, found
 
 
@@ -392,15 +405,24 @@ def _to_i64(v: int):
 
 
 def _n_hash_find(st, key):
+    """numpy twin of _j_hash_find. `used` is tri-state (0 empty, 1 occupied,
+    2 tombstone): the match scan terminates at the first EMPTY slot only —
+    tombstones keep probe chains intact; the free slot is the first
+    tombstone-or-empty in probe order (tombstones are reused by inserts)."""
     n = st["keys"].shape[0]
     start = _np_hash_idx(key, n)
+    free = None
     for j in range(n):
         i = (start + j) % n
-        if not st["used"][i]:
-            return None, i          # (no match before first free), free slot
-        if int(st["keys"][i]) == _s64(key):
-            return i, None
-    return None, None
+        u = int(st["used"][i])
+        if u == 1:
+            if int(st["keys"][i]) == _s64(key):
+                return i, None
+        elif free is None:
+            free = i
+        if u == 0:
+            return None, free       # chain ends: no match past this point
+    return None, free
 
 
 def _s64(v: int) -> int:
@@ -438,10 +460,13 @@ def n_hash_fetch_add(st, key, delta):
 
 
 def n_hash_delete(st, key):
+    # tombstone delete (used=2), twin of j_hash_delete: the slot becomes
+    # insertable but keeps probe chains intact, so content stays
+    # layout-independent (merge plane contract, DESIGN.md §10)
     slot, _ = _n_hash_find(st, key)
     if slot is None:
         return False
-    st["used"][slot] = 0
+    st["used"][slot] = 2
     return True
 
 
@@ -467,3 +492,213 @@ def n_ringbuf_drain(st, last_read: int) -> tuple[list[list[int]], int]:
     lo = max(last_read, head - cap)
     out = [list(map(int, st["data"][i % cap])) for i in range(lo, head)]
     return out, head
+
+
+# --------------------------------------------------------------------------
+# interprocess merge plane (DESIGN.md §10): per-kind DELTA extraction and
+# COMMUTATIVE merge twins. Worker processes publish cumulative seqlocked
+# snapshots; the aggregation engine extracts per-cycle deltas against its
+# last-seen baseline and folds them into one global view. Merges commute
+# across workers for the ops the differential harness admits:
+#   * ARRAY / PERCPU_ARRAY / LOG2HIST — element-wise delta-sum (adds
+#     commute unconditionally);
+#   * HASH — content delta over probe-REACHABLE entries, merged by the same
+#     batched first-occurrence machinery as j_hash_fetch_add_batch
+#     (n_hash_fetch_add_batch is its numpy twin); per-key sums commute, and
+#     non-commutative ops (update/delete) commute across workers iff each
+#     key is owned by one worker — the sharded-aggregation contract;
+#   * RINGBUF — records are tagged (step, wid, seq) and interleaved by that
+#     key; the global order is a deterministic merge-sort of per-worker
+#     streams, with dropped counts derived from the global head.
+# The jnp side of the hash merge IS j_hash_fetch_add_batch; summary kinds
+# get explicit jnp twins below (j_summary_delta / j_summary_merge).
+# --------------------------------------------------------------------------
+
+SUMMARY_FIELDS = {
+    MapKind.ARRAY: ("values",),
+    MapKind.PERCPU_ARRAY: ("values",),
+    MapKind.LOG2HIST: ("bins",),
+}
+
+
+def is_summary_kind(kind: MapKind) -> bool:
+    return kind in SUMMARY_FIELDS
+
+
+def n_summary_delta(spec: MapSpec, cur: dict, base: dict) -> dict:
+    """Element-wise delta of two cumulative snapshots (wrapping i64)."""
+    return {f: np.asarray(cur[f], np.int64) - np.asarray(base[f], np.int64)
+            for f in SUMMARY_FIELDS[spec.kind]}
+
+
+def n_summary_merge(spec: MapSpec, acc: dict, delta: dict) -> None:
+    """In-place commutative fold of one delta into the accumulator."""
+    for f in SUMMARY_FIELDS[spec.kind]:
+        acc[f] += delta[f]
+
+
+def j_summary_delta(spec: MapSpec, cur: dict, base: dict) -> dict:
+    return {f: cur[f] - base[f] for f in SUMMARY_FIELDS[spec.kind]}
+
+
+def j_summary_merge(spec: MapSpec, acc: dict, delta: dict) -> dict:
+    return {f: acc[f] + delta[f] for f in SUMMARY_FIELDS[spec.kind]}
+
+
+# ---- hash: reachable-content extraction + batched first-occurrence merge
+
+def _np_hash_idx_vec(keys: np.ndarray, n: int) -> np.ndarray:
+    with np.errstate(over="ignore"):
+        h = keys.astype(np.uint64) * np.uint64(_HASH_MULT)
+    return ((h >> np.uint64(33)) % np.uint64(n)).astype(np.int64)
+
+
+def _np_next_free_dist(used: np.ndarray) -> np.ndarray:
+    """numpy twin of _next_free_dist: probe-order distance from every start
+    position to the first free slot (>= n when the table is full)."""
+    n = used.shape[0]
+    free2 = np.concatenate([~used, ~used])
+    pos = np.arange(2 * n)
+    cand = np.where(free2, pos, 2 * n)
+    suffix_min = np.minimum.accumulate(cand[::-1])[::-1]
+    return (suffix_min[:n] - np.arange(n)).astype(np.int64)
+
+
+def n_hash_slots(st) -> dict[int, int]:
+    """{key: slot} for every probe-REACHABLE entry — the numpy twin of
+    _j_hash_lookup_batch's table-side preprocessing. Entry j holding key k
+    is lookup-visible iff its probe distance (j - hash(k)) mod n is below
+    the first-free distance from hash(k); duplicate keys (broken chains)
+    resolve to the smallest probe distance, exactly as a sequential probe
+    would find them."""
+    kt = np.asarray(st["keys"], np.int64)
+    u = np.asarray(st["used"], np.int64)
+    occupied = u == 1
+    nonempty = u != 0                   # occupied or tombstone: chain lives on
+    n = kt.shape[0]
+    if not occupied.any():
+        return {}
+    j = np.arange(n)
+    start = _np_hash_idx_vec(kt, n)
+    dist = (j - start) % n
+    reach = occupied & (dist < _np_next_free_dist(nonempty)[start])
+    out: dict[int, int] = {}
+    for idx in np.lexsort((dist, kt)):
+        if reach[idx]:
+            k = int(kt[idx])
+            if k not in out:
+                out[k] = int(idx)
+    return out
+
+
+def n_hash_items(st) -> dict[int, int]:
+    """Lookup-visible content of a hash table: {key: value}."""
+    vals = np.asarray(st["values"], np.int64)
+    return {k: int(vals[s]) for k, s in n_hash_slots(st).items()}
+
+
+def n_hash_fetch_add_batch(st, keys, deltas, ok=None) -> None:
+    """numpy twin of j_hash_fetch_add_batch (in-place): end state is
+    bit-identical to applying n_hash_fetch_add sequentially over the valid
+    lanes in batch order. Same two phases: resident keys via one reachable
+    slot lookup + accumulate; missing keys inserted in first-occurrence
+    order with group-summed deltas, re-probing after each insert."""
+    keys = np.asarray(keys, np.int64)
+    deltas = np.asarray(deltas, np.int64)
+    B = keys.shape[0]
+    ok = np.ones(B, bool) if ok is None else np.asarray(ok, bool)
+    if not ok.any():
+        return
+    slot_of = n_hash_slots(st)
+    slots = np.array([slot_of.get(int(k), -1) for k in keys])
+    resident = ok & (slots >= 0)
+    with np.errstate(over="ignore"):
+        np.add.at(st["values"], slots[resident], deltas[resident])
+    pending = ok & ~resident
+    for i in range(B):
+        if not pending[i]:
+            continue
+        k = int(keys[i])
+        group = ok & (keys == keys[i])
+        with np.errstate(over="ignore"):
+            d = int(np.sum(deltas[group], dtype=np.int64))
+        slot, free = _n_hash_find(st, k)
+        tgt = slot if slot is not None else free
+        if tgt is not None:                        # table full -> drop
+            old = int(st["values"][tgt]) if slot is not None else 0
+            st["keys"][tgt] = _to_i64(k)
+            st["used"][tgt] = 1
+            st["values"][tgt] = _to_i64(old + d)
+        pending &= ~group
+
+
+def n_hash_delta(cur_items: dict, base_items: dict
+                 ) -> tuple[list[tuple[int, int]], list[int]]:
+    """Content delta between two cumulative snapshots of one worker's hash
+    map: (adds, dels). adds = (key, value-delta) for new or changed keys
+    (new keys are included even at delta 0 so inserts propagate); dels =
+    keys the worker deleted since the baseline. Sorted by key so a given
+    (cur, base) pair always yields the same batch."""
+    adds = []
+    for k in sorted(cur_items):
+        d = cur_items[k] - base_items.get(k, 0)
+        if d != 0 or k not in base_items:
+            adds.append((k, d))
+    dels = sorted(k for k in base_items if k not in cur_items)
+    return adds, dels
+
+
+def n_hash_canonical(spec: MapSpec, items: dict) -> dict:
+    """Deterministic table layout for a given content: rebuild by inserting
+    keys in sorted order. Published global hash maps use this form, so the
+    merged view is bit-stable regardless of worker poll order; the
+    differential harness compares it against the canonicalized oracle."""
+    st = init_state(spec, np)
+    for k in sorted(items):
+        n_hash_update(st, k, items[k])
+    return st
+
+
+# ---- ringbuf: tagged drain + deterministic global interleave
+
+def n_ringbuf_tagged(st, wid, lo: int = 0, step_lane: int | None = None
+                     ) -> tuple[list[tuple[tuple, np.ndarray]], int]:
+    """Drain retained records with monotonic position >= lo, each tagged
+    with its global interleave key (step, wid, seq): seq is the record's
+    position in this worker's stream; step comes from the record lane the
+    map spec designates (flags={'step_lane': k}), else 0 — reducing the
+    interleave to concatenation by wid."""
+    cap = st["data"].shape[0]
+    head = int(st["head"][0])
+    start = max(lo, head - cap)
+    out = []
+    for i in range(start, head):
+        rec = np.array(st["data"][i % cap])
+        step = int(rec[step_lane]) if step_lane is not None else 0
+        out.append(((step, wid, i), rec))
+    return out, head
+
+
+def ringbuf_merge_global(spec: MapSpec, tagged: list, total: int) -> dict:
+    """Build the global ringbuf state from every worker's retained tagged
+    records. The merged order sorts by (step, wid, seq); the global state is
+    exactly what one ring of the same capacity would hold after emitting the
+    merged sequence: data holds the last `cap` records at their global
+    rank mod cap, head counts every emit, dropped counts emits that
+    overwrote an unread record (total - cap, clamped at 0).
+
+    Window argument (DESIGN.md §10): each worker's sort key is monotone in
+    its emit order, so the global tail's restriction to worker w is a suffix
+    of w's stream of length <= cap — always within what w's own ring still
+    retains. The tail of the retained union therefore IS the global tail."""
+    st = init_state(spec, np)
+    cap = spec.max_entries
+    recs = sorted(tagged, key=lambda t: t[0])
+    tail = recs[-cap:]
+    k = len(tail)
+    for i, (_, rec) in enumerate(tail):
+        rank = total - k + i
+        st["data"][rank % cap, :] = rec
+    st["head"][0] = total
+    st["dropped"][0] = max(0, total - cap)
+    return st

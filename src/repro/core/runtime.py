@@ -400,9 +400,15 @@ class BpftimeRuntime:
         return map_states, aux
 
     # ---------------------------------------------------------------- shm
-    def setup_shm(self, root: str):
+    def setup_shm(self, root: str, worker_id: str | None = None):
+        """Join the shm control plane. worker_id=None keeps the seed
+        single-process layout; a worker id places this process's device
+        snapshots, host maps, and control queue under
+        `<root>/workers/<wid>/` so a fleet daemon can aggregate N such
+        processes into one global view (DESIGN.md §10)."""
         from .shm import ShmRegion
-        self.shm = ShmRegion.create(root, self.map_specs)
+        self.shm = ShmRegion.create(root, self.map_specs,
+                                    worker_id=worker_id)
         # host maps become shm-backed (live for the daemon)
         for spec in self.map_specs:
             self.host_maps[spec.name] = self.shm.host[spec.name]
@@ -455,7 +461,10 @@ class BpftimeRuntime:
         went live (or was rejected) without attaching a debugger."""
         if self.shm is None:
             return
+        import os
         self.shm.publish_status({
+            "worker_id": self.shm.worker_id,
+            "pid": os.getpid(),
             "attach_epoch": self.attach_epoch,
             "live_gen": int(self.live.host["gen"][0]) if self.live else 0,
             "live_slots": ({str(p): (self.progs[pid].name

@@ -1,26 +1,40 @@
 """mmap-backed shared-memory control plane — bpftime's shm maps + daemon
-handshake, adapted to the host side of a TPU trainer.
+handshake, adapted to the host side of a TPU trainer fleet.
 
 Layout under a shm directory (SP3 segregation: program text, device-map
 snapshots, and host-map data live in separate sections; the agent may write
 only map-data sections — enforced here by API shape, in production by file
 permissions, see DESIGN.md §5):
 
-    <dir>/meta.json                 map specs + layout (control plane writes once)
+    <dir>/meta.json                 map specs + layout (written once, shared)
     <dir>/progs/<name>.json         program objects (read-only to agents)
+
+Single-process layout (worker_id=None — the seed shape, unchanged):
+
     <dir>/host/<map>.<field>.npy    live host-side maps (memmapped, rw)
     <dir>/device/<map>.<field>.npy  per-step snapshots of device maps
     <dir>/device/.seq.npy           seqlock (odd while a publish is in flight)
     <dir>/control/requests.json     daemon -> trainer attach/detach requests
     <dir>/control/.reqseq.npy       request counter
     <dir>/control/status.json       trainer -> daemon control-plane status
-                                    (live-table generation, active links)
+
+Fleet layout (worker_id="w0", "w1", ... — DESIGN.md §10): every worker owns
+the SAME section tree under its own base, so one daemon can observe N
+train/serve processes as one system:
+
+    <dir>/workers/<wid>/worker.json  pid + boot id (liveness / restart detect)
+    <dir>/workers/<wid>/{host,device,control}/...   as above, per worker
+    <dir>/global/<map>.<field>.npy   daemon-merged view of the whole fleet
+    <dir>/global/.seq.npy            seqlock for the merged view
+    <dir>/global/status.json         aggregation status (alive/dead workers,
+                                     per-worker heads, merge stats)
 """
 from __future__ import annotations
 
 import json
 import os
 import time
+import uuid
 from dataclasses import dataclass
 
 import numpy as np
@@ -36,6 +50,103 @@ def _memmap(path, shape, mode):
     return np.lib.format.open_memmap(path, mode=mode)
 
 
+def _atomic_json(path: str, obj) -> None:
+    tmp = f"{path}.{os.getpid()}.tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+    os.replace(tmp, path)          # atomic for concurrent readers/writers
+
+
+def _specs_to_meta(specs: list[MapSpec]) -> dict:
+    return {"specs": [{"name": s.name, "kind": s.kind.value,
+                       "max_entries": s.max_entries,
+                       "rec_width": s.rec_width,
+                       "num_shards": s.num_shards,
+                       "flags": s.flags} for s in specs],
+            "version": 2}
+
+
+def _specs_from_meta(meta: dict) -> list[MapSpec]:
+    return [MapSpec(name=m["name"], kind=MapKind(m["kind"]),
+                    max_entries=m["max_entries"],
+                    rec_width=m["rec_width"],
+                    num_shards=m["num_shards"],
+                    flags=m.get("flags", {})) for m in meta["specs"]]
+
+
+def read_meta_specs(root: str) -> list[MapSpec]:
+    with open(os.path.join(root, "meta.json")) as f:
+        return _specs_from_meta(json.load(f))
+
+
+def _worker_base(root: str, worker_id: str | None) -> str:
+    if worker_id is None:
+        return root
+    return os.path.join(root, "workers", str(worker_id))
+
+
+# --------------------------------------------------------------------------
+# seqlocked field sections (shared by per-worker device dirs and global/)
+# --------------------------------------------------------------------------
+
+def _create_section(dirpath: str, specs: list[MapSpec]) -> dict:
+    """Create (or re-create, on worker restart) a section's field files.
+    Existing files are reused IN PLACE ('r+', zeroed) rather than
+    truncated: a live reader's mmap of the same inode keeps working and
+    simply observes the zeroed state — open_memmap('w+') would shrink the
+    inode to 0 bytes for a moment, turning a concurrent read into SIGBUS."""
+    os.makedirs(dirpath, exist_ok=True)
+    out = {}
+    for s in specs:
+        tmpl = M.init_state(s, np)
+        out[s.name] = {}
+        for field, arr in tmpl.items():
+            path = os.path.join(dirpath, f"{s.name}.{field}.npy")
+            if os.path.exists(path):
+                mm = _memmap(path, None, "r+")
+            else:
+                mm = _memmap(path, arr.shape, "w+")
+            mm[...] = 0
+            out[s.name][field] = mm
+    return out
+
+
+def _attach_section(dirpath: str, specs: list[MapSpec], mode: str) -> dict:
+    out = {}
+    for s in specs:
+        out[s.name] = {}
+        for field in M.init_state(s, np):
+            out[s.name][field] = _memmap(
+                os.path.join(dirpath, f"{s.name}.{field}.npy"), None, mode)
+    return out
+
+
+def _seq_publish(seq: np.memmap, section: dict, states: dict) -> None:
+    seq[0] += 1          # odd: write in flight
+    seq.flush()
+    for name, st in states.items():
+        if name not in section:
+            continue
+        for field, arr in st.items():
+            section[name][field][...] = np.asarray(arr)
+    seq[0] += 1          # even: consistent
+    seq.flush()
+
+
+def _seq_snapshot(seq: np.memmap, section: dict, name: str,
+                  retries: int) -> tuple[dict, int, int]:
+    """Returns (state, seq_observed, retries_used). A successful read always
+    observes an EVEN sequence number, unchanged across the copy."""
+    for attempt in range(retries):
+        s0 = int(seq[0])
+        if s0 % 2 == 0:
+            out = {f: np.array(a) for f, a in section[name].items()}
+            if int(seq[0]) == s0:
+                return out, s0, attempt
+        time.sleep(0.001)
+    raise TimeoutError("seqlock retry budget exceeded")
+
+
 @dataclass
 class ShmRegion:
     root: str
@@ -44,85 +155,120 @@ class ShmRegion:
     device: dict
     seq: np.memmap
     reqseq: np.memmap
+    worker_id: str | None = None
+    base: str = ""      # section base dir: root, or root/workers/<wid>
 
     # ---------------------------------------------------------------- create
     @staticmethod
-    def create(root: str, specs: list[MapSpec]) -> "ShmRegion":
-        for sub in ("progs", "host", "device", "control"):
-            os.makedirs(os.path.join(root, sub), exist_ok=True)
-        meta = {"specs": [{"name": s.name, "kind": s.kind.value,
-                           "max_entries": s.max_entries,
-                           "rec_width": s.rec_width,
-                           "num_shards": s.num_shards} for s in specs],
-                "version": 1}
-        with open(os.path.join(root, "meta.json"), "w") as f:
-            json.dump(meta, f)
-        host, device = {}, {}
-        for s in specs:
-            tmpl = M.init_state(s, np)
-            host[s.name], device[s.name] = {}, {}
-            for field, arr in tmpl.items():
-                for sec, d in (("host", host), ("device", device)):
-                    p = os.path.join(root, sec, f"{s.name}.{field}.npy")
-                    mm = _memmap(p, arr.shape, "w+")
-                    mm[...] = 0
-                    d[s.name][field] = mm
-        seq = _memmap(os.path.join(root, "device", ".seq.npy"), (1,), "w+")
+    def create(root: str, specs: list[MapSpec],
+               worker_id: str | None = None) -> "ShmRegion":
+        base = _worker_base(root, worker_id)
+        os.makedirs(os.path.join(root, "progs"), exist_ok=True)
+        os.makedirs(os.path.join(base, "control"), exist_ok=True)
+        # meta.json is shared and created atomically + EXCLUSIVELY
+        # (os.link fails on an existing target), so concurrently launching
+        # workers race safely: exactly one spec set lands, every other
+        # worker must agree with it
+        meta_path = os.path.join(root, "meta.json")
+        tmp = f"{meta_path}.{os.getpid()}.link.tmp"   # distinct from
+        with open(tmp, "w") as f:                     # _atomic_json's tmp
+            json.dump(_specs_to_meta(specs), f)
+        try:
+            os.link(tmp, meta_path)
+        except FileExistsError:
+            prior = read_meta_specs(root)
+            # dataclass equality covers every field, flags included —
+            # flags are load-bearing (step_lane drives the global ringbuf
+            # interleave), so a silent mismatch would change merge
+            # semantics
+            if prior != list(specs):
+                if worker_id is not None:
+                    raise ValueError(
+                        f"shm region {root} already holds incompatible "
+                        f"specs")
+                # single-process layout: one creator by construction, so a
+                # re-run with evolved specs rebuilds the region (the seed
+                # behavior) instead of demanding a manual delete; stale
+                # section files go first — their shapes may not match
+                _atomic_json(meta_path, _specs_to_meta(specs))
+                for sub in ("host", "device"):
+                    d = os.path.join(base, sub)
+                    if os.path.isdir(d):
+                        for fn in os.listdir(d):
+                            if fn.endswith(".npy") and \
+                                    not fn.startswith("."):
+                                os.unlink(os.path.join(d, fn))
+        finally:
+            os.unlink(tmp)
+        host = _create_section(os.path.join(base, "host"), specs)
+        # the device section is (re-)zeroed UNDER its seqlock: on a worker
+        # restart a live reader (the aggregator) must never observe a torn
+        # mix, and the counter restarting at 0 is exactly the aggregator's
+        # SeqRegression signal
+        os.makedirs(os.path.join(base, "device"), exist_ok=True)
+        seq_path = os.path.join(base, "device", ".seq.npy")
+        if os.path.exists(seq_path):
+            seq = _memmap(seq_path, None, "r+")
+            if int(seq[0]) % 2 == 0:
+                seq[0] += 1            # mark in-flight before zeroing
+                seq.flush()
+        else:
+            seq = _memmap(seq_path, (1,), "w+")
+            seq[0] = 1
+            seq.flush()
+        device = _create_section(os.path.join(base, "device"), specs)
         seq[0] = 0
-        reqseq = _memmap(os.path.join(root, "control", ".reqseq.npy"),
-                         (1,), "w+")
-        reqseq[0] = 0
-        with open(os.path.join(root, "control", "requests.json"), "w") as f:
-            json.dump([], f)
-        return ShmRegion(root, specs, host, device, seq, reqseq)
+        seq.flush()
+        # control-queue reset under the same flock _queue_request takes,
+        # so a restart doesn't race a concurrent request writer
+        import fcntl
+        with open(os.path.join(base, "control", ".requests.lock"),
+                  "w") as lk:
+            fcntl.flock(lk, fcntl.LOCK_EX)
+            reqseq_path = os.path.join(base, "control", ".reqseq.npy")
+            reqseq = (_memmap(reqseq_path, None, "r+")
+                      if os.path.exists(reqseq_path)
+                      else _memmap(reqseq_path, (1,), "w+"))
+            reqseq[0] = 0
+            reqseq.flush()
+            _atomic_json(os.path.join(base, "control", "requests.json"), [])
+        if worker_id is not None:
+            # liveness + restart detection for the aggregation engine
+            _atomic_json(os.path.join(base, "worker.json"),
+                         {"worker_id": str(worker_id), "pid": os.getpid(),
+                          "boot": uuid.uuid4().hex,
+                          "started_at": time.time()})
+        return ShmRegion(root, specs, host, device, seq, reqseq,
+                         worker_id=worker_id, base=base)
 
     # ---------------------------------------------------------------- attach
     @staticmethod
-    def attach(root: str, mode: str = "r+") -> "ShmRegion":
-        with open(os.path.join(root, "meta.json")) as f:
-            meta = json.load(f)
-        specs = [MapSpec(name=m["name"], kind=MapKind(m["kind"]),
-                         max_entries=m["max_entries"],
-                         rec_width=m["rec_width"],
-                         num_shards=m["num_shards"]) for m in meta["specs"]]
-        host, device = {}, {}
-        for s in specs:
-            host[s.name], device[s.name] = {}, {}
-            tmpl = M.init_state(s, np)
-            for field in tmpl:
-                host[s.name][field] = _memmap(
-                    os.path.join(root, "host", f"{s.name}.{field}.npy"),
-                    None, mode)
-                device[s.name][field] = _memmap(
-                    os.path.join(root, "device", f"{s.name}.{field}.npy"),
-                    None, "r")
-        seq = _memmap(os.path.join(root, "device", ".seq.npy"), None, "r+")
-        reqseq = _memmap(os.path.join(root, "control", ".reqseq.npy"),
+    def attach(root: str, mode: str = "r+",
+               worker_id: str | None = None) -> "ShmRegion":
+        specs = read_meta_specs(root)
+        base = _worker_base(root, worker_id)
+        host = _attach_section(os.path.join(base, "host"), specs, mode)
+        device = _attach_section(os.path.join(base, "device"), specs, "r")
+        seq = _memmap(os.path.join(base, "device", ".seq.npy"), None, "r+")
+        reqseq = _memmap(os.path.join(base, "control", ".reqseq.npy"),
                          None, "r+")
-        return ShmRegion(root, specs, host, device, seq, reqseq)
+        return ShmRegion(root, specs, host, device, seq, reqseq,
+                         worker_id=worker_id, base=base)
 
     # ---------------------------------------------------------------- publish
     def publish_device(self, states: dict) -> None:
         """Seqlocked snapshot of (host-fetched) device map states."""
-        self.seq[0] += 1          # odd: write in flight
-        self.seq.flush()
-        for name, st in states.items():
-            if name not in self.device:
-                continue
-            for field, arr in st.items():
-                self.device[name][field][...] = np.asarray(arr)
-        self.seq[0] += 1          # even: consistent
-        self.seq.flush()
+        _seq_publish(self.seq, self.device, states)
 
     def snapshot_device(self, name: str, retries: int = 100) -> dict:
-        for _ in range(retries):
-            s0 = int(self.seq[0])
-            if s0 % 2 == 0:
-                out = {f: np.array(a) for f, a in self.device[name].items()}
-                if int(self.seq[0]) == s0:
-                    return out
-            time.sleep(0.001)
-        raise TimeoutError("seqlock retry budget exceeded")
+        out, _, _ = _seq_snapshot(self.seq, self.device, name, retries)
+        return out
+
+    def snapshot_device_meta(self, name: str,
+                             retries: int = 100) -> tuple[dict, int, int]:
+        """(state, seq_observed, retries_used) — the torn-read test surface:
+        seq_observed is always even on a successful read."""
+        return _seq_snapshot(self.seq, self.device, name, retries)
 
     # ---------------------------------------------------------------- progs
     def publish_program(self, obj_json: str, name: str) -> None:
@@ -130,26 +276,17 @@ class ShmRegion:
             f.write(obj_json)
 
     def read_programs(self) -> dict[str, str]:
-        d = os.path.join(self.root, "progs")
-        out = {}
-        for fn in sorted(os.listdir(d)):
-            if fn.endswith(".json"):
-                with open(os.path.join(d, fn)) as f:
-                    out[fn[:-5]] = f.read()
-        return out
+        return read_programs(self.root)
 
     # ---------------------------------------------------------------- status
     def publish_status(self, status: dict) -> None:
         """trainer side: publish the control plane's state (live-table
         generation, active links) for daemons to poll."""
-        p = os.path.join(self.root, "control", "status.json")
-        tmp = p + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(status, f)
-        os.replace(tmp, p)              # atomic for concurrent readers
+        _atomic_json(os.path.join(self.base, "control", "status.json"),
+                     status)
 
     def read_status(self) -> dict:
-        p = os.path.join(self.root, "control", "status.json")
+        p = os.path.join(self.base, "control", "status.json")
         if not os.path.exists(p):
             return {}
         with open(p) as f:
@@ -158,21 +295,172 @@ class ShmRegion:
     # ---------------------------------------------------------------- control
     def request(self, req: dict) -> None:
         """daemon side: queue an attach/detach/load request."""
-        p = os.path.join(self.root, "control", "requests.json")
-        with open(p) as f:
-            reqs = json.load(f)
-        reqs.append(req)
-        with open(p, "w") as f:
-            json.dump(reqs, f)
-        self.reqseq[0] += 1
-        self.reqseq.flush()
+        _queue_request(self.base, req, reqseq=self.reqseq)
 
     def poll_requests(self, last_seen: int) -> tuple[list[dict], int]:
         """trainer side: fetch requests newer than last_seen."""
         cur = int(self.reqseq[0])
         if cur == last_seen:
             return [], last_seen
-        p = os.path.join(self.root, "control", "requests.json")
+        p = os.path.join(self.base, "control", "requests.json")
         with open(p) as f:
             reqs = json.load(f)
         return reqs[last_seen:cur], cur
+
+
+# --------------------------------------------------------------------------
+# fleet helpers (worker discovery, liveness, request fan-out)
+# --------------------------------------------------------------------------
+
+def read_programs(root: str) -> dict[str, str]:
+    """Program objects published to the shared progs/ section — layout-
+    independent (works for both single-process and fleet trees)."""
+    d = os.path.join(root, "progs")
+    out = {}
+    if not os.path.isdir(d):
+        return out
+    for fn in sorted(os.listdir(d)):
+        if fn.endswith(".json"):
+            with open(os.path.join(d, fn)) as f:
+                out[fn[:-5]] = f.read()
+    return out
+
+
+def list_workers(root: str) -> list[str]:
+    d = os.path.join(root, "workers")
+    if not os.path.isdir(d):
+        return []
+    return sorted(w for w in os.listdir(d)
+                  if os.path.exists(os.path.join(d, w, "worker.json")))
+
+
+def worker_info(root: str, worker_id: str) -> dict:
+    p = os.path.join(_worker_base(root, worker_id), "worker.json")
+    with open(p) as f:
+        return json.load(f)
+
+
+def worker_alive(root: str, worker_id: str) -> bool:
+    """A worker is alive iff the pid it registered still exists. (Pid reuse
+    is acceptable noise for a monitoring plane; a stale seqlock additionally
+    demotes a worker to 'stale' in the aggregator, see daemon.Aggregator.)"""
+    try:
+        pid = int(worker_info(root, worker_id)["pid"])
+    except (OSError, ValueError, KeyError):
+        return False
+    try:
+        os.kill(pid, 0)
+        return True
+    except ProcessLookupError:
+        return False
+    except PermissionError:      # exists, owned by someone else
+        return True
+
+
+def _queue_request(base: str, req: dict, reqseq=None) -> None:
+    """Append one request to a control queue and bump its counter — the
+    only files the request path touches (no map sections opened). The
+    rewrite is atomic (workers poll requests.json every step: a truncate
+    window would crash them on a half-written file) and the append is
+    serialized with an flock so two concurrent requesters can't lose an
+    entry while bumping reqseq twice."""
+    import fcntl
+    with open(os.path.join(base, "control", ".requests.lock"), "w") as lk:
+        fcntl.flock(lk, fcntl.LOCK_EX)
+        p = os.path.join(base, "control", "requests.json")
+        with open(p) as f:
+            reqs = json.load(f)
+        reqs.append(req)
+        _atomic_json(p, reqs)
+        if reqseq is None:
+            reqseq = _memmap(os.path.join(base, "control", ".reqseq.npy"),
+                             None, "r+")
+        reqseq[0] += 1
+        reqseq.flush()
+
+
+def fanout_request(root: str, req: dict,
+                   worker_ids: list[str] | None = None) -> list[str]:
+    """Queue one request into EVERY worker's control queue (live attach
+    fan-out: the whole fleet picks the program up without recompiling).
+    Returns the worker ids reached."""
+    wids = list_workers(root) if worker_ids is None else list(worker_ids)
+    for wid in wids:
+        _queue_request(_worker_base(root, wid), req)
+    return wids
+
+
+# --------------------------------------------------------------------------
+# global (daemon-merged) view
+# --------------------------------------------------------------------------
+
+@dataclass
+class GlobalView:
+    """The aggregation engine's output: one seqlocked section holding the
+    merged state of every worker's maps, readable by any observer exactly
+    like a per-worker device section."""
+    root: str
+    specs: list[MapSpec]
+    section: dict
+    seq: np.memmap
+
+    @staticmethod
+    def _dir(root: str) -> str:
+        return os.path.join(root, "global")
+
+    @staticmethod
+    def create(root: str, specs: list[MapSpec] | None = None) -> "GlobalView":
+        specs = read_meta_specs(root) if specs is None else specs
+        d = GlobalView._dir(root)
+        seq_path = os.path.join(d, ".seq.npy")
+        if os.path.exists(seq_path):
+            # an aggregator restart over a published section: readers may
+            # hold these very mmaps, so the reset must happen UNDER the
+            # seqlock — never truncate/zero the files in place
+            section = _attach_section(d, specs, "r+")
+            seq = _memmap(seq_path, None, "r+")
+            if int(seq[0]) % 2 == 0:       # else: prior writer died odd —
+                seq[0] += 1                # stay in its in-flight cycle
+                seq.flush()
+            for name in section:
+                for arr in section[name].values():
+                    arr[...] = 0
+            seq[0] += 1                    # even: consistent zero state
+            seq.flush()
+            return GlobalView(root, specs, section, seq)
+        section = _create_section(d, specs)
+        seq = _memmap(seq_path, (1,), "w+")
+        seq[0] = 0
+        return GlobalView(root, specs, section, seq)
+
+    @staticmethod
+    def attach(root: str, mode: str = "r") -> "GlobalView":
+        specs = read_meta_specs(root)
+        d = GlobalView._dir(root)
+        section = _attach_section(d, specs, mode)
+        seq = _memmap(os.path.join(d, ".seq.npy"), None,
+                      "r+" if mode != "r" else "r")
+        return GlobalView(root, specs, section, seq)
+
+    @staticmethod
+    def exists(root: str) -> bool:
+        return os.path.exists(os.path.join(GlobalView._dir(root),
+                                           ".seq.npy"))
+
+    def publish(self, states: dict) -> None:
+        _seq_publish(self.seq, self.section, states)
+
+    def snapshot(self, name: str, retries: int = 100) -> dict:
+        out, _, _ = _seq_snapshot(self.seq, self.section, name, retries)
+        return out
+
+    def publish_status(self, status: dict) -> None:
+        _atomic_json(os.path.join(self._dir(self.root), "status.json"),
+                     status)
+
+    def read_status(self) -> dict:
+        p = os.path.join(self._dir(self.root), "status.json")
+        if not os.path.exists(p):
+            return {}
+        with open(p) as f:
+            return json.load(f)

@@ -47,6 +47,32 @@ _EFFECT = {"map_fetch_add", "percpu_fetch_add", "hist_add", "ringbuf_output",
            "override_return", "trace_printk"}
 
 
+def _ringbuf_emit_batch_fallback(data, head, rows, valid):
+    """Self-contained lax.scan twin of kernels.ref.ringbuf_emit_batch —
+    the EXPLICIT fallback when the optional kernels package is absent
+    (pinned by tests/test_kernels_fallback.py)."""
+    cap = data.shape[0]
+
+    def one(carry, ev):
+        d, h = carry
+        row, ok = ev
+        slot = (h[0] % cap).astype(jnp.int32)
+        d = d.at[slot].set(jnp.where(ok, row, d[slot]))
+        h = h.at[0].add(jnp.where(ok, jnp.int64(1), jnp.int64(0)))
+        return (d, h), jnp.int64(0)
+
+    (d, h), _ = jax.lax.scan(one, (data, head), (rows, valid))
+    return d, h
+
+
+def _ringbuf_emit_batch(data, head, rows, valid):
+    try:
+        from repro.kernels import ref as KREF
+    except ImportError:
+        return _ringbuf_emit_batch_fallback(data, head, rows, valid)
+    return KREF.ringbuf_emit_batch(data, head, rows, valid)
+
+
 def _r0_dead_after(vprog: VerifiedProgram, call_pc: int) -> bool:
     """Conservative: r0 (the fetch-add result) must be overwritten before any
     read, scanning forward in instruction order (over-approximates across
@@ -203,9 +229,8 @@ def _apply_site(vp, name, statics, rec, maps_state, aux):
         fd = statics[0]
         sp = vp.map_specs[fd]
         st = maps_state[sp.name]
-        from repro.kernels import ref as KREF
         head0 = st["head"][0]
-        d, h = KREF.ringbuf_emit_batch(st["data"], st["head"], rec[1], ok)
+        d, h = _ringbuf_emit_batch(st["data"], st["head"], rec[1], ok)
         # dropped accounting, batch form: the i-th valid record lands at
         # monotonic position head0 + rank(i); it laps (overwrites an unread
         # record) when that position >= capacity.

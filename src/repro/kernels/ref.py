@@ -77,13 +77,16 @@ def hash_fetch_add_batch(keys_tbl, used_tbl, vals_tbl, keys, deltas, valid):
         key, delta, ok = ev
         start = _hash_idx(key, n)
         order = (start + ar) % n
-        used_o = ut[order] != 0
-        match = used_o & (kt[order] == key)
-        free = ~used_o
+        u_o = ut[order]
+        occupied = u_o == 1           # tri-state used: 2 = tombstone
+        match = occupied & (kt[order] == key)
+        free = ~occupied              # tombstone or empty: insertable
+        empty = u_o == 0              # chain terminator
         big = jnp.int32(n)
         fm = jnp.min(jnp.where(match, ar, big))
         ff = jnp.min(jnp.where(free, ar, big))
-        found = (fm < big) & (fm < jnp.where(ff < big, ff, big))
+        fe = jnp.min(jnp.where(empty, ar, big))
+        found = (fm < big) & (fm < fe)
         has_free = ff < big
         slot = order[jnp.clip(fm, 0, n - 1)]
         fslot = order[jnp.clip(ff, 0, n - 1)]

@@ -23,6 +23,7 @@ import numpy as np
 
 def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
                  runtime=None, shm_dir: str | None = None,
+                 worker_id: str | None = None,
                  ckpt_dir: str | None = None, save_every: int = 0,
                  probe_mode: str = "scan", seq_len: int = 64,
                  batch: int = 8, microbatch: int = 0, log_every: int = 10,
@@ -38,7 +39,10 @@ def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
                        total_steps=steps)
     shape = ShapeConfig("driver", seq_len, batch, "train")
     if runtime is not None and shm_dir:
-        runtime.setup_shm(shm_dir)
+        # worker_id=None keeps the single-process layout; with an id, this
+        # trainer joins <shm_dir>/workers/<wid>/ so a fleet daemon can
+        # aggregate several trainers into one global map view
+        runtime.setup_shm(shm_dir, worker_id=worker_id)
 
     data = SyntheticDataset(cfg, shape, tcfg, runtime=runtime)
     state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg, runtime)
@@ -93,6 +97,9 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--shm")
+    ap.add_argument("--worker-id",
+                    help="join the fleet layout as <shm>/workers/<id>/ "
+                         "(multi-trainer aggregation, DESIGN.md §10)")
     ap.add_argument("--ckpt")
     ap.add_argument("--save-every", type=int, default=0)
     args = ap.parse_args(argv)
@@ -101,8 +108,8 @@ def main(argv=None):
     rt = BpftimeRuntime() if args.shm else None
     state, hist = run_training(
         args.arch, steps=args.steps, smoke=args.smoke, runtime=rt,
-        shm_dir=args.shm, ckpt_dir=args.ckpt, save_every=args.save_every,
-        batch=args.batch, seq_len=args.seq)
+        shm_dir=args.shm, worker_id=args.worker_id, ckpt_dir=args.ckpt,
+        save_every=args.save_every, batch=args.batch, seq_len=args.seq)
     print(f"final loss {hist[-1]['loss']:.4f} after {len(hist)} steps")
 
 

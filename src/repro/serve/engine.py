@@ -31,13 +31,20 @@ class Request:
 
 class ServeEngine:
     def __init__(self, params, cfg: ModelConfig, *, slots: int = 4,
-                 max_seq: int = 128, runtime=None, eos: int = -1):
+                 max_seq: int = 128, runtime=None, eos: int = -1,
+                 shm_dir: str | None = None,
+                 worker_id: str | None = None):
         self.params = params
         self.cfg = cfg
         self.slots = slots
         self.max_seq = max_seq
         self.runtime = runtime
         self.eos = eos
+        if runtime is not None and shm_dir:
+            # serve workers join the same fleet plane as trainers: per-step
+            # map snapshots publish under workers/<wid>/ and live attach
+            # requests fan in through this worker's control queue
+            runtime.setup_shm(shm_dir, worker_id=worker_id)
         self.cache = MR.make_cache(cfg, slots, max_seq, jnp.float32)
         self.active: list[Request | None] = [None] * slots
         self.maps = runtime.init_device_maps() if runtime else {}
@@ -83,6 +90,11 @@ class ServeEngine:
         pending = list(queue)
 
         while pending or any(self.active):
+            if self.runtime is not None and self.runtime.shm is not None:
+                # daemon injection point: live attach requests land on the
+                # running decode step without recompiling it
+                self.runtime.poll_control()
+                self.maps = self.runtime.sync_live_table(self.maps)
             # refill slots
             for s in range(self.slots):
                 if self.active[s] is None and pending:
@@ -98,6 +110,8 @@ class ServeEngine:
                 self.params, jnp.asarray(toks), self.cache, self.maps,
                 jnp.int32(self.step_count))
             self.step_count += 1
+            if self.runtime is not None:
+                self.runtime.publish(self.maps)   # no-op without shm
             nxt = np.asarray(nxt)
             for s, r in enumerate(self.active):
                 if r is None:

@@ -185,6 +185,84 @@ def test_live_reject_leaves_generation_untouched(tmp_path):
     assert np.asarray(maps["hits"]["values"]).sum() == 0
 
 
+def _live_fleet_worker(root, wid):
+    """One fleet worker: live lane enabled, joined as workers/<wid>/, step
+    already compiled."""
+    rt = BpftimeRuntime()
+    spec = M.MapSpec("hits", M.MapKind.ARRAY, max_entries=8)
+    rt.create_map(spec)
+    rt.enable_live_attach(max_programs=2, max_insns=32,
+                          arm=("uprobe:block",))
+    rt.setup_shm(root, worker_id=wid)
+
+    rows = np.zeros((4, E.EVENT_WIDTH), np.int64)
+    rows[:, 0] = E.SITES.get_or_create("block")
+    rows[:, 1] = E.KIND_ENTRY
+    rows = jnp.asarray(rows)
+
+    @jax.jit
+    def stage(r, m):
+        m, _ = rt.probe_stage(r, m, J.make_aux())
+        return m
+
+    maps = stage(rows, rt.init_device_maps())
+    assert stage._cache_size() == 1
+    return rt, stage, rows, maps
+
+
+def test_cli_live_attach_fans_out_to_whole_fleet(tmp_path, capsys):
+    """A live attach issued once through the bpftool-style CLI reaches
+    EVERY worker's program table; no worker retraces (jit cache stays 1
+    per worker) — the fleet-wide injection-without-restart story."""
+    root = str(tmp_path / "shm")
+    wids = ["w0", "w1", "w2"]
+    fleet = {wid: _live_fleet_worker(root, wid) for wid in wids}
+
+    spec = M.MapSpec("hits", M.MapKind.ARRAY, max_entries=8)
+    obj = loader.build_object("fleet_live", HITS_PROG, [spec], "uprobe",
+                              attach_to="uprobe:block")
+    objpath = tmp_path / "prog.json"
+    objpath.write_text(obj.to_json())
+
+    rc = daemon.main([root, "attach", str(objpath), "--live"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "w0" in out and "w1" in out and "w2" in out
+
+    for wid in wids:
+        rt, stage, rows, maps = fleet[wid]
+        applied = rt.poll_control()
+        assert len(applied) == 1 and "error" not in applied[0], (wid, applied)
+        maps = rt.sync_live_table(maps)
+        maps = stage(rows, maps)
+        assert stage._cache_size() == 1, f"{wid} retraced on live attach"
+        assert np.asarray(maps["hits"]["values"])[0] == rows.shape[0]
+        assert rt.shm.read_status()["live_gen"] == 1
+        fleet[wid] = (rt, stage, rows, maps)
+
+    # prog list sees every worker's link
+    rc = daemon.main([root, "prog", "list"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert "fleet_live" in out
+    for wid in wids:
+        assert f"(worker {wid})" in out
+
+    # detach fans out the same way
+    lid = int(next(iter(fleet["w0"][0].links)))
+    rc = daemon.main([root, "detach", str(lid)])
+    assert rc == 0
+    capsys.readouterr()
+    for wid in wids:
+        rt, stage, rows, maps = fleet[wid]
+        assert rt.poll_control() == [{"op": "detach", "link_id": lid}]
+        maps = rt.sync_live_table(maps)
+        before = int(np.asarray(maps["hits"]["values"])[0])
+        maps = stage(rows, maps)
+        assert stage._cache_size() == 1
+        assert int(np.asarray(maps["hits"]["values"])[0]) == before
+
+
 def test_daemon_cli_live_inject(tmp_path):
     """The daemon CLI --attach --live queues a live-table injection."""
     rt, stage, rows, maps = _live_trainer(tmp_path)

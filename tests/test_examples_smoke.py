@@ -38,3 +38,11 @@ def test_opensnoop_syscalls(tmp_path):
     out = _run_example("opensnoop_syscalls.py", tmp_path)
     assert "latest committed checkpoint: step 8" in out
     assert "OK" in out
+
+
+def test_fleet_agg_multiprocess(tmp_path):
+    """3 worker processes, one daemon-merged global histogram (the
+    interprocess map plane, DESIGN.md §10)."""
+    out = _run_example("fleet_agg.py", tmp_path)
+    assert "global total=768 (= 3 workers x 256 events)" in out
+    assert "OK: global histogram is the exact bin-wise sum" in out

@@ -1,0 +1,137 @@
+"""The Pallas kernels package (repro.kernels) is an OPTIONAL accelerator
+layer: events.py and vectorized.py import it lazily inside functions and
+carry self-contained jnp fallback twins. This tier-1 suite pins that
+contract — the core probe pipeline must keep working, bit-identically,
+when the package is unimportable (hosts without the accelerator toolchain).
+
+The block is simulated the stdlib way: sys.modules["repro.kernels"] = None
+makes any `import repro.kernels...` raise ImportError.
+"""
+import sys
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import events as E, jit as J, maps as M, vectorized as V
+from repro.core.runtime import BpftimeRuntime
+
+COUNT_BY_LAYER = """
+    ldxdw r6, [r1+ctx:layer]
+    stxdw [r10-8], r6
+    lddw r1, map:fb_counts
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+RB_PROG = """
+    ldxdw r6, [r1+ctx:layer]
+    stxdw [r10-32], r6
+    ldxdw r6, [r1+ctx:numel]
+    stxdw [r10-24], r6
+    lddw r1, map:fb_rb
+    mov r2, r10
+    add r2, -32
+    mov r3, 16
+    mov r4, 0
+    call ringbuf_output
+    mov r0, 0
+    exit
+"""
+
+ARR = M.MapSpec("fb_counts", M.MapKind.ARRAY, max_entries=16)
+RB = M.MapSpec("fb_rb", M.MapKind.RINGBUF, max_entries=8, rec_width=4)
+
+
+def _block_kernels(monkeypatch):
+    """Make every `import repro.kernels[...]` raise ImportError."""
+    for mod in list(sys.modules):
+        if mod == "repro.kernels" or mod.startswith("repro.kernels."):
+            monkeypatch.delitem(sys.modules, mod, raising=False)
+    monkeypatch.setitem(sys.modules, "repro.kernels", None)
+
+
+def _run_pipeline(mode):
+    """Collector -> probe_stage round trip: stats path (events) + batched
+    ringbuf apply (vectorized) both cross the lazy-import boundary."""
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("fb_count", COUNT_BY_LAYER, [ARR], "uprobe")
+    rt.attach(pid, "uprobe:fb_block")
+    pid2 = rt.load_asm("fb_rb", RB_PROG, [RB], "uprobe")
+    rt.attach(pid2, "uprobe:fb_block")
+    with rt.collector() as col:
+        def body(c, x):
+            h = E.probe_site("fb_block", x * c, kind=E.KIND_ENTRY)
+            return c + 1.0, h.sum()
+
+        xs = jnp.ones((4, 8), jnp.float32)
+        _, _ = E.probed_scan(body, jnp.float32(1.0), xs)
+        rows = col.take_all_rows()
+    ms, aux = rt.probe_stage(rows, rt.init_device_maps(), J.make_aux(),
+                             mode=mode)
+    return {name: {f: np.asarray(a) for f, a in st.items()}
+            for name, st in ms.items()}
+
+
+@pytest.mark.parametrize("mode", ["fused", "vectorized", "scan"])
+def test_probe_pipeline_works_without_kernels(monkeypatch, mode):
+    want = _run_pipeline(mode)                  # kernels importable
+    _block_kernels(monkeypatch)
+    with pytest.raises(ImportError):
+        import repro.kernels                    # noqa: F401 — block is live
+    got = _run_pipeline(mode)                   # fallback twins
+    assert got.keys() == want.keys()
+    for name in want:
+        for f in want[name]:
+            np.testing.assert_array_equal(got[name][f], want[name][f],
+                                          err_msg=f"{name}.{f} [{mode}]")
+
+
+def test_default_tensor_stats_fallback_matches_kernel(monkeypatch):
+    from repro.kernels import ref as KREF
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(np.concatenate([
+        rng.normal(size=37).astype(np.float32),
+        [np.nan, np.inf, -np.inf, 0.0]]).astype(np.float32))
+    want = {k: np.asarray(v) for k, v in KREF.tensor_stats(x).items()}
+    _block_kernels(monkeypatch)
+    got = E.default_tensor_stats(x)
+    assert set(got) == set(want)
+    for k in want:
+        np.testing.assert_array_equal(np.asarray(got[k]), want[k],
+                                      err_msg=k)
+
+
+def test_ringbuf_fallback_twin_matches_kernel():
+    from repro.kernels import ref as KREF
+    rng = np.random.default_rng(1)
+    data = jnp.asarray(rng.integers(-5, 5, (8, 4)), jnp.int64)
+    head = jnp.asarray([3], jnp.int64)
+    rows = jnp.asarray(rng.integers(-99, 99, (16, 4)), jnp.int64)
+    valid = jnp.asarray(rng.random(16) < 0.7)
+    dk, hk = KREF.ringbuf_emit_batch(data, head, rows, valid)
+    df, hf = V._ringbuf_emit_batch_fallback(data, head, rows, valid)
+    np.testing.assert_array_equal(np.asarray(df), np.asarray(dk))
+    np.testing.assert_array_equal(np.asarray(hf), np.asarray(hk))
+
+
+def test_collector_stats_path_without_kernels(monkeypatch):
+    """events.Collector._stats is the per-site trace-time path — it must
+    produce identical event rows through the fallback."""
+    def rows_once():
+        rt = BpftimeRuntime()
+        pid = rt.load_asm("fb_count", COUNT_BY_LAYER, [ARR], "uprobe")
+        rt.attach(pid, "uprobe:fb_block")
+        with rt.collector() as col:
+            E.probe_site("fb_block", jnp.arange(12, dtype=jnp.float32),
+                         kind=E.KIND_ENTRY)
+            return np.asarray(col.take_all_rows())
+
+    want = rows_once()
+    _block_kernels(monkeypatch)
+    got = rows_once()
+    np.testing.assert_array_equal(got, want)

@@ -1,0 +1,662 @@
+"""Differential/property harness for the interprocess map plane
+(DESIGN.md §10): for random interleaved event tapes split across N worker
+processes, the daemon-merged global maps must be bit-identical to the
+single-process oracle that scans the whole tape in (step, wid, seq) order.
+
+Covers all 5 map kinds, N in {1, 2, 3}, including hash collisions (tiny
+table), tombstone deletes (broken probe chains), and ringbuf
+overwrite/dropped propagation. The merge contract the generator enforces
+(and DESIGN.md documents): cross-worker ops on SHARED state are
+commutative (fetch-add / hist / ringbuf-emit); non-commutative hash ops
+(update/delete) only ever run on the key's OWNER worker.
+
+Deterministic corpus runs without hypothesis; the property test adds
+randomized tapes when hypothesis is installed (importorskip, as elsewhere).
+"""
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+
+from repro.core import daemon as D, maps as M, shm as SH
+
+SPECS = [
+    M.MapSpec("arr", M.MapKind.ARRAY, max_entries=16),
+    M.MapSpec("pc", M.MapKind.PERCPU_ARRAY, max_entries=8, num_shards=2),
+    M.MapSpec("hist", M.MapKind.LOG2HIST),
+    # capacity 8 with a 7-key universe: collisions guaranteed, no overflow
+    M.MapSpec("hsh", M.MapKind.HASH, max_entries=8),
+    M.MapSpec("rb", M.MapKind.RINGBUF, max_entries=6, rec_width=3,
+              flags={"step_lane": 0}),
+]
+
+OWNED_KEYS = [3, 11, 19, 27]        # 3, 11, 19 collide in an 8-slot table
+SHARED_KEYS = [5, 42, 99]           # fetch-add only, any worker
+
+
+# --------------------------------------------------------------------------
+# tape model: (step, wid, wseq, ev) — ev = (op, *args)
+# --------------------------------------------------------------------------
+
+def apply_event(states: dict, ev: tuple, step: int) -> None:
+    op = ev[0]
+    if op == "arr_add":
+        M.n_array_fetch_add(states["arr"], ev[1], ev[2])
+    elif op == "pc_add":
+        shard, idx, delta = ev[1:]
+        if 0 <= idx < states["pc"]["values"].shape[1]:
+            states["pc"]["values"][shard, idx] += delta
+    elif op == "hist":
+        M.n_hist_add(states["hist"], ev[1])
+    elif op == "hash_add":
+        M.n_hash_fetch_add(states["hsh"], ev[1], ev[2])
+    elif op == "hash_set":
+        M.n_hash_update(states["hsh"], ev[1], ev[2])
+    elif op == "hash_del":
+        M.n_hash_delete(states["hsh"], ev[1])
+    elif op == "rb":
+        M.n_ringbuf_emit(states["rb"], [step, ev[1], ev[2]])
+    else:  # pragma: no cover
+        raise AssertionError(op)
+
+
+def gen_tape(rng: np.random.Generator, n_workers: int, n_events: int,
+             p_step: float = 0.3, ops=None) -> list[tuple]:
+    ops = ops or ("arr_add", "pc_add", "hist", "hash_add", "hash_set",
+                  "hash_del", "rb")
+    step = 0
+    wseq = [0] * n_workers
+    tape = []
+    for i in range(n_events):
+        if rng.random() < p_step:
+            step += 1
+        op = ops[rng.integers(len(ops))]
+        if op in ("hash_set", "hash_del"):
+            k = OWNED_KEYS[rng.integers(len(OWNED_KEYS))]
+            wid = k % n_workers                     # owner-only
+            ev = (op, k, int(rng.integers(-50, 50))) if op == "hash_set" \
+                else (op, k)
+        elif op == "hash_add":
+            if rng.random() < 0.5:
+                k = OWNED_KEYS[rng.integers(len(OWNED_KEYS))]
+                wid = k % n_workers                 # ordered vs set/del
+            else:
+                k = SHARED_KEYS[rng.integers(len(SHARED_KEYS))]
+                wid = int(rng.integers(n_workers))
+            ev = (op, k, int(rng.integers(-20, 20)))
+        else:
+            wid = int(rng.integers(n_workers))
+            if op == "arr_add":
+                ev = (op, int(rng.integers(-2, 18)),  # incl. out-of-bounds
+                      int(rng.integers(-9, 10)))
+            elif op == "pc_add":
+                ev = (op, int(rng.integers(2)), int(rng.integers(8)),
+                      int(rng.integers(1, 7)))
+            elif op == "hist":
+                ev = (op, int(rng.integers(-4, 1 << 20)))
+            else:
+                ev = ("rb", int(rng.integers(1000)), i)
+        tape.append((step, wid, wseq[wid], ev))
+        wseq[wid] += 1
+    return tape
+
+
+def oracle_states(tape: list[tuple]) -> dict:
+    """The single-process scan oracle: the whole tape in the canonical
+    interleave order (step, wid, seq) on the numpy twins."""
+    st = M.init_states(SPECS, np)
+    for step, wid, wseq, ev in sorted(tape, key=lambda t: t[:3]):
+        apply_event(st, ev, step)
+    return st
+
+
+def run_fleet(root: str, tape: list[tuple], n_workers: int,
+              rounds: int = 3) -> dict:
+    """Worker processes' side, in-process: each worker applies its subtape
+    in `rounds` publish chunks with the aggregator polling between chunks
+    (exercising incremental delta extraction), then a final poll."""
+    regions = {w: SH.ShmRegion.create(root, SPECS, worker_id=f"w{w}")
+               for w in range(n_workers)}
+    states = {w: M.init_states(SPECS, np) for w in range(n_workers)}
+    per_worker = {w: [t for t in tape if t[1] == w]
+                  for w in range(n_workers)}
+    chunks = {w: np.array_split(np.arange(len(per_worker[w])), rounds)
+              for w in range(n_workers)}
+    agg = D.Aggregator(root)
+    for r in range(rounds):
+        for w in range(n_workers):
+            for i in chunks[w][r]:
+                step, _, _, ev = per_worker[w][i]
+                apply_event(states[w], ev, step)
+            regions[w].publish_device(states[w])
+        agg.poll_once()
+    return agg.poll_once()
+
+
+def assert_global_matches_oracle(root: str, oracle: dict) -> None:
+    g = SH.GlobalView.attach(root)
+    for spec in SPECS:
+        got = g.snapshot(spec.name)
+        if spec.kind == M.MapKind.HASH:
+            # the published global table is canonical (sorted-key rebuild);
+            # compare against the canonicalized oracle CONTENT — probe-
+            # reachable keys and values, bit-identical table layout
+            want = M.n_hash_canonical(spec, M.n_hash_items(oracle[spec.name]))
+        else:
+            want = oracle[spec.name]
+        for f in got:
+            np.testing.assert_array_equal(
+                got[f], np.asarray(want[f]),
+                err_msg=f"{spec.name}.{f}")
+
+
+def _roundtrip(tape, n_workers, rounds=3):
+    root = tempfile.mkdtemp(prefix="mergediff_")
+    try:
+        run_fleet(root, tape, n_workers, rounds=rounds)
+        assert_global_matches_oracle(root, oracle_states(tape))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+# --------------------------------------------------------------------------
+# deterministic corpus
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_workers", [1, 2, 3])
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_random_tape_all_kinds(n_workers, seed):
+    rng = np.random.default_rng(seed)
+    tape = gen_tape(rng, n_workers, n_events=80)
+    _roundtrip(tape, n_workers)
+
+
+@pytest.mark.parametrize("n_workers", [2, 3])
+def test_hash_collisions_and_tombstones(n_workers):
+    """set/del/re-add churn on colliding owned keys: broken probe chains on
+    the worker side must still merge to the oracle's visible content."""
+    rng = np.random.default_rng(7)
+    tape = gen_tape(rng, n_workers, n_events=120,
+                    ops=("hash_add", "hash_set", "hash_del"))
+    # guarantee the tombstone scenario explicitly: insert colliding chain,
+    # delete the middle, re-add past it — all on each key's owner
+    step = max(t[0] for t in tape) + 1
+    wseq = {w: 1 + max((t[2] for t in tape if t[1] == w), default=0)
+            for w in range(n_workers)}
+    for k in (3, 11, 19):
+        w = k % n_workers
+        tape.append((step, w, wseq[w], ("hash_set", k, k * 10)))
+        wseq[w] += 1
+    w = 11 % n_workers
+    tape.append((step, w, wseq[w], ("hash_del", 11)))
+    wseq[w] += 1
+    w = 19 % n_workers
+    tape.append((step, w, wseq[w], ("hash_add", 19, 5)))
+    _roundtrip(tape, n_workers)
+
+
+@pytest.mark.parametrize("n_workers", [1, 2, 3])
+def test_ringbuf_overwrite_and_dropped(n_workers):
+    """More emits than global capacity: the merged ring holds exactly the
+    oracle's surviving window, head counts every emit, dropped propagates
+    from the global head (not the per-worker counters)."""
+    rng = np.random.default_rng(11)
+    tape = gen_tape(rng, n_workers, n_events=64, ops=("rb",))
+    _roundtrip(tape, n_workers)
+    # cross-check the dropped accounting directly
+    oracle = oracle_states(tape)
+    assert int(oracle["rb"]["head"][0]) == 64
+    assert int(oracle["rb"]["dropped"][0]) == 64 - 6
+
+
+def test_single_publish_no_chunking():
+    """rounds=1 (one cumulative publish per worker) must equal the fully
+    incremental path — delta extraction against a zero baseline."""
+    rng = np.random.default_rng(13)
+    tape = gen_tape(rng, 3, n_events=60)
+    _roundtrip(tape, 3, rounds=1)
+
+
+def test_empty_and_skewed_workers():
+    """One worker gets the whole tape, the others none."""
+    rng = np.random.default_rng(17)
+    tape = gen_tape(rng, 1, n_events=40)
+    # re-label as a 3-worker fleet where w1/w2 stay silent
+    _roundtrip(tape, 3)
+
+
+def test_worker_restart_resets_baseline(tmp_path):
+    """A worker that reboots (new boot id, zeroed maps) must not subtract
+    its old counts: the aggregator resets that worker's baseline and keeps
+    the old incarnation's contribution."""
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    st["arr"]["values"][1] = 5
+    region.publish_device(st)
+    agg = D.Aggregator(root)
+    agg.poll_once()
+    # reboot: create() rewrites worker.json with a fresh boot id + zero maps
+    region2 = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st2 = M.init_states(SPECS, np)
+    st2["arr"]["values"][1] = 2
+    region2.publish_device(st2)
+    agg.poll_once()
+    merged = SH.GlobalView.attach(root).snapshot("arr")["values"]
+    assert int(merged[1]) == 7          # 5 (old incarnation) + 2 (new)
+
+
+def _mark_worker_dead(root: str, wid: str) -> dict:
+    """Simulate a crashed worker: point worker.json at a nonexistent pid
+    (keeping boot id), as if the process died without cleanup."""
+    import json
+    import os
+    p = os.path.join(root, "workers", wid, "worker.json")
+    with open(p) as f:
+        info = json.load(f)
+    old = dict(info)
+    info["pid"] = 2 ** 22 + 11  # above default pid_max: never a live pid
+    with open(p, "w") as f:
+        json.dump(info, f)
+    return old
+
+
+def test_dead_worker_readmitted_on_new_boot(tmp_path):
+    """A worker that dies and is later restarted under the SAME id must be
+    re-admitted (fresh baseline) once its boot id changes — death is not a
+    permanent exclusion of the id, only of the incarnation."""
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    st["arr"]["values"][1] = 5
+    region.publish_device(st)
+    agg = D.Aggregator(root)
+    agg.poll_once()
+
+    _mark_worker_dead(root, "w0")
+    status = agg.poll_once()
+    assert status["dead"] == ["w0"]
+    assert int(SH.GlobalView.attach(root).snapshot("arr")["values"][1]) == 5
+
+    # supervisor restarts the worker: same id, new boot, fresh maps
+    region2 = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st2 = M.init_states(SPECS, np)
+    st2["arr"]["values"][1] = 2
+    region2.publish_device(st2)
+    status = agg.poll_once()
+    assert status["alive"] == ["w0"] and status["dead"] == []
+    assert int(SH.GlobalView.attach(root).snapshot("arr")["values"][1]) == 7
+
+
+def test_seq_regression_never_folds_negative_delta(tmp_path):
+    """The restart race: a new incarnation zeroes the shm section BEFORE
+    rewriting worker.json, so the aggregator (still seeing the dead old
+    pid and old boot) would harvest an all-zero snapshot and fold it as a
+    -everything delta. The seqlock regression guard forfeits that harvest
+    instead; the merged contribution stays."""
+    import json
+    import os
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    st["arr"]["values"][0] = 100
+    M.n_hash_update(st["hsh"], 3, 7)
+    region.publish_device(st)
+    agg = D.Aggregator(root)
+    agg.poll_once()
+    g = SH.GlobalView.attach(root)
+    assert int(g.snapshot("arr")["values"][0]) == 100
+
+    old_info = _mark_worker_dead(root, "w0")
+    # restart under way: section re-created (zeroed, seq back to 0) while
+    # worker.json still names the dead old incarnation
+    region2 = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    p = os.path.join(root, "workers", "w0", "worker.json")
+    with open(p) as f:
+        new_info = json.load(f)
+    old_info["pid"] = 2 ** 22 + 11
+    with open(p, "w") as f:
+        json.dump(old_info, f)
+
+    status = agg.poll_once()            # harvest forfeited, not -100'd
+    assert status["dead"] == ["w0"]
+    assert int(g.snapshot("arr")["values"][0]) == 100
+    assert M.n_hash_items(agg.hash_tbl["hsh"]) == {3: 7}
+
+    # the restart completes: worker.json now names the live new boot
+    with open(p, "w") as f:
+        json.dump(new_info, f)
+    st2 = M.init_states(SPECS, np)
+    st2["arr"]["values"][0] = 1
+    region2.publish_device(st2)
+    status = agg.poll_once()
+    assert status["alive"] == ["w0"] and status["dead"] == []
+    assert int(g.snapshot("arr")["values"][0]) == 101
+
+
+def test_restart_then_die_within_one_poll_not_double_counted(tmp_path):
+    """A worker that restarts AND dies between two polls: the harvest must
+    diff against the NEW incarnation's zero baseline (restart detection
+    runs before the dead path) and record death under the new boot id, so
+    re-admission can't double-count the final contribution."""
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    st["arr"]["values"][1] = 5
+    region.publish_device(st)
+    agg = D.Aggregator(root)
+    agg.poll_once()
+    g = SH.GlobalView.attach(root)
+    assert int(g.snapshot("arr")["values"][1]) == 5
+
+    # restart: new boot, publish TWICE (seq 4 >= tracked 2, so the
+    # SeqRegression guard alone cannot catch this), then die
+    region2 = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st2 = M.init_states(SPECS, np)
+    st2["arr"]["values"][1] = 3
+    region2.publish_device(st2)
+    region2.publish_device(st2)
+    _mark_worker_dead(root, "w0")
+
+    status = agg.poll_once()
+    assert status["dead"] == ["w0"]
+    assert int(g.snapshot("arr")["values"][1]) == 8   # 5 + 3, not 5-5+3
+    status = agg.poll_once()                          # no re-admission
+    assert status["dead"] == ["w0"] and status["alive"] == []
+    assert int(g.snapshot("arr")["values"][1]) == 8   # not double-counted
+
+
+def test_worker_restart_ringbuf_step_regression_stays_monotone(tmp_path):
+    """A restarted worker whose step counter restarts at 0 must still
+    produce monotone interleave keys (step tags clamped to the worker's
+    floor): new records sort AFTER the old incarnation's, never before."""
+    root = str(tmp_path / "shm")
+    spec = next(s for s in SPECS if s.kind == M.MapKind.RINGBUF)
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    for i in range(5):
+        M.n_ringbuf_emit(st["rb"], [5 + i, 100 + i, i])   # steps 5..9
+    region.publish_device(st)
+    agg = D.Aggregator(root)
+    agg.poll_once()
+
+    region2 = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st2 = M.init_states(SPECS, np)
+    for i in range(3):
+        M.n_ringbuf_emit(st2["rb"], [i, 200 + i, i])      # steps regress
+    region2.publish_device(st2)
+    agg.poll_once()
+
+    oracle = M.init_state(spec, np)
+    for i in range(5):
+        M.n_ringbuf_emit(oracle, [5 + i, 100 + i, i])
+    for i in range(3):
+        M.n_ringbuf_emit(oracle, [i, 200 + i, i])
+    merged = SH.GlobalView.attach(root).snapshot("rb")
+    for f in ("data", "head", "dropped"):
+        np.testing.assert_array_equal(merged[f], np.asarray(oracle[f]),
+                                      err_msg=f"rb.{f}")
+
+
+def test_recreate_region_reuses_inodes_and_seq_discipline(tmp_path):
+    """A worker restart must NOT truncate section files in place (a live
+    aggregator's mmap of that inode would SIGBUS mid-read): re-creation
+    reuses the inodes and zeroes them under the seqlock, landing on seq=0
+    (the aggregator's SeqRegression signal)."""
+    import os
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    st["arr"]["values"][0] = 9
+    region.publish_device(st)
+    assert int(region.seq[0]) == 2
+
+    base = os.path.join(root, "workers", "w0")
+    paths = [os.path.join(base, "device", "arr.values.npy"),
+             os.path.join(base, "device", ".seq.npy"),
+             os.path.join(base, "control", ".reqseq.npy")]
+    inodes = [os.stat(p).st_ino for p in paths]
+
+    region2 = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    assert [os.stat(p).st_ino for p in paths] == inodes
+    # the OLD handle's mmaps track the same inode: zeroed, seq back to 0
+    assert int(region.seq[0]) == 0
+    assert int(region.device["arr"]["values"][0]) == 0
+    out, seq, _ = region2.snapshot_device_meta("arr")
+    assert seq == 0 and int(out["values"][0]) == 0
+
+
+def test_cli_attach_unknown_worker_rejected(tmp_path, capsys):
+    root = str(tmp_path / "shm")
+    SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    objpath = tmp_path / "prog.json"
+    objpath.write_text("{}")            # never read: validation fails first
+    rc = D.main([root, "attach", str(objpath), "--worker", "w9"])
+    assert rc == 1
+    assert "unknown worker" in capsys.readouterr().err
+    rc = D.main([root, "detach", "1", "--worker", "w9"])
+    assert rc == 1
+    assert "unknown worker" in capsys.readouterr().err
+
+
+def test_single_process_region_rebuilds_on_spec_change(tmp_path):
+    """worker_id=None has exactly one creator, so a re-run with evolved
+    specs rebuilds the region (seed behavior); fleet workers must still
+    agree with the first writer."""
+    root = str(tmp_path / "shm")
+    SH.ShmRegion.create(root, SPECS)
+    new_specs = [M.MapSpec("other", M.MapKind.ARRAY, max_entries=4)]
+    region = SH.ShmRegion.create(root, new_specs)
+    assert [s.name for s in SH.read_meta_specs(root)] == ["other"]
+    region.publish_device({"other": {"values": np.arange(4)}})
+    np.testing.assert_array_equal(
+        region.snapshot_device("other")["values"], np.arange(4))
+
+
+def test_cli_map_unknown_worker_and_legacy_watcher_on_fleet(tmp_path,
+                                                            capsys):
+    root = str(tmp_path / "shm")
+    SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    rc = D.main([root, "map", "dump", "--section", "device",
+                 "--worker", "w9"])
+    assert rc == 1
+    assert "unknown worker" in capsys.readouterr().err
+    # the legacy single-process watcher points at the subcommands instead
+    # of dying on the missing top-level section
+    rc = D.main([root, "--once"])
+    assert rc == 1
+    assert "fleet-layout" in capsys.readouterr().err
+
+
+def test_global_hash_overflow_counted_not_silent(tmp_path):
+    """When the UNION of worker keys overflows the spec-sized global
+    table, the lost adds are counted and surfaced in the status — never
+    silently dropped."""
+    root = str(tmp_path / "shm")
+    regions = {w: SH.ShmRegion.create(root, SPECS, worker_id=f"w{w}")
+               for w in range(2)}
+    for w, base in ((0, 0), (1, 100)):
+        st = M.init_states(SPECS, np)
+        for k in range(6):                       # 6 + 6 keys, capacity 8
+            M.n_hash_fetch_add(st["hsh"], base + k, 1)
+        regions[w].publish_device(st)
+    agg = D.Aggregator(root)
+    status = agg.poll_once()
+    assert status["hash_dropped"]["hsh"] == 4
+    assert len(M.n_hash_items(agg.hash_tbl["hsh"])) == 8
+
+
+def test_worker_restart_ringbuf_stream_monotone(tmp_path):
+    """A restarted worker's ringbuf positions continue AFTER the old
+    incarnation's final head (rb_offset): the global head never regresses
+    and the merged ring equals one ring that saw the concatenated stream."""
+    root = str(tmp_path / "shm")
+    spec = next(s for s in SPECS if s.kind == M.MapKind.RINGBUF)
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    for i in range(5):
+        M.n_ringbuf_emit(st["rb"], [0, 100 + i, i])
+    region.publish_device(st)
+    agg = D.Aggregator(root)
+    agg.poll_once()
+
+    # reboot: fresh boot id, zeroed maps, local positions restart at 0
+    region2 = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st2 = M.init_states(SPECS, np)
+    for i in range(5, 8):
+        M.n_ringbuf_emit(st2["rb"], [0, 100 + i, i])
+    region2.publish_device(st2)
+    agg.poll_once()
+
+    oracle = M.init_state(spec, np)
+    for i in range(8):
+        M.n_ringbuf_emit(oracle, [0, 100 + i, i])
+    merged = SH.GlobalView.attach(root).snapshot("rb")
+    for f in ("data", "head", "dropped"):
+        np.testing.assert_array_equal(merged[f], np.asarray(oracle[f]),
+                                      err_msg=f"rb.{f}")
+
+
+def test_incompatible_flags_rejected(tmp_path):
+    """flags are load-bearing (step_lane drives the ringbuf interleave):
+    a worker joining with different flags must be rejected, not silently
+    merged under the first writer's semantics."""
+    root = str(tmp_path / "shm")
+    SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    bad = [s if s.name != "rb" else
+           M.MapSpec("rb", M.MapKind.RINGBUF, max_entries=6, rec_width=3)
+           for s in SPECS]
+    with pytest.raises(ValueError, match="incompatible"):
+        SH.ShmRegion.create(root, bad, worker_id="w1")
+
+
+def test_aggregator_restart_preserves_reader_mmaps(tmp_path):
+    """Restarting the aggregator over an already-published global section
+    must reset it UNDER the seqlock, in the same files: a reader holding
+    the old mmaps keeps seeing consistent (never torn) state and picks up
+    the fresh merge without reattaching."""
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    st["arr"]["values"][2] = 5
+    region.publish_device(st)
+    D.Aggregator(root).poll_once()
+
+    reader = SH.GlobalView.attach(root)
+    held = reader.section["arr"]["values"]        # mmap of the old files
+    assert int(held[2]) == 5
+
+    agg2 = D.Aggregator(root)                     # restart over live section
+    assert int(reader.seq[0]) % 2 == 0            # parity preserved
+    agg2.poll_once()
+    # same inodes: the held mapping tracks the fresh merge
+    assert int(held[2]) == 5
+    np.testing.assert_array_equal(reader.snapshot("arr")["values"][2], 5)
+
+
+# --------------------------------------------------------------------------
+# maps-level twins (the machinery the aggregator reuses)
+# --------------------------------------------------------------------------
+
+def test_n_hash_fetch_add_batch_matches_twins():
+    """numpy batch twin vs sequential numpy twin vs jnp batch twin — all
+    bit-identical, including a broken probe chain."""
+    import jax
+    import jax.numpy as jnp
+    spec = M.MapSpec("h", M.MapKind.HASH, max_entries=8)
+    st_seq, st_bat = M.init_state(spec, np), M.init_state(spec, np)
+    st_j = M.init_state(spec, jnp)
+    for s in (st_seq, st_bat):
+        for k, v in ((3, 10), (11, 20), (19, 30)):
+            M.n_hash_fetch_add(s, k, v)
+        M.n_hash_delete(s, 11)
+    for k, v in ((3, 10), (11, 20), (19, 30)):
+        st_j, _ = M.j_hash_fetch_add(st_j, jnp.int64(k), jnp.int64(v),
+                                     jnp.asarray(True))
+    st_j, _ = M.j_hash_delete(st_j, jnp.int64(11), jnp.asarray(True))
+
+    keys = np.array([19, 42, 3, 19, 42, 99, 3, 27, 11, 42], np.int64)
+    deltas = np.arange(1, 11, dtype=np.int64)
+    ok = np.array([1, 1, 1, 1, 0, 1, 1, 1, 1, 1], bool)
+    for k, d, o in zip(keys, deltas, ok):
+        if o:
+            M.n_hash_fetch_add(st_seq, int(k), int(d))
+    M.n_hash_fetch_add_batch(st_bat, keys, deltas, ok)
+    st_j = M.j_hash_fetch_add_batch(st_j, jnp.asarray(keys),
+                                    jnp.asarray(deltas), jnp.asarray(ok))
+    for f in ("keys", "used", "values"):
+        np.testing.assert_array_equal(st_bat[f], st_seq[f],
+                                      err_msg=f"np-batch {f}")
+        np.testing.assert_array_equal(np.asarray(st_j[f]), st_seq[f],
+                                      err_msg=f"jnp-batch {f}")
+
+
+def test_n_hash_items_reachability():
+    """Items are exactly the lookup-visible keys — a zombie entry behind a
+    tombstone is excluded, like a sequential probe would miss it."""
+    spec = M.MapSpec("h", M.MapKind.HASH, max_entries=8)
+    st = M.init_state(spec, np)
+    for k, v in ((3, 10), (11, 20), (19, 30)):
+        M.n_hash_fetch_add(st, k, v)
+    M.n_hash_delete(st, 11)
+    items = M.n_hash_items(st)
+    for k in (3, 11, 19, 27):
+        slot, _ = M._n_hash_find(st, k)
+        if slot is None:
+            assert k not in items
+        else:
+            assert items[k] == int(st["values"][slot])
+
+
+def test_summary_delta_merge_twins():
+    spec = M.MapSpec("a", M.MapKind.ARRAY, max_entries=4)
+    base = {"values": np.array([1, 2, 3, 4], np.int64)}
+    cur = {"values": np.array([1, 5, 3, 10], np.int64)}
+    delta = M.n_summary_delta(spec, cur, base)
+    np.testing.assert_array_equal(delta["values"], [0, 3, 0, 6])
+    acc = {"values": np.array([100, 0, 0, 1], np.int64)}
+    M.n_summary_merge(spec, acc, delta)
+    np.testing.assert_array_equal(acc["values"], [100, 3, 0, 7])
+    # jnp twins agree
+    import jax.numpy as jnp
+    jd = M.j_summary_delta(spec, {"values": jnp.asarray(cur["values"])},
+                           {"values": jnp.asarray(base["values"])})
+    np.testing.assert_array_equal(np.asarray(jd["values"]), delta["values"])
+
+
+def test_ringbuf_merge_single_worker_is_identity():
+    spec = M.MapSpec("rb", M.MapKind.RINGBUF, max_entries=4, rec_width=2,
+                     flags={"step_lane": 0})
+    st = M.init_state(spec, np)
+    for i in range(9):
+        M.n_ringbuf_emit(st, [i, 100 + i])
+    tagged, head = M.n_ringbuf_tagged(st, "w0", 0, step_lane=0)
+    merged = M.ringbuf_merge_global(spec, tagged, head)
+    for f in ("data", "head", "dropped"):
+        np.testing.assert_array_equal(merged[f], st[f], err_msg=f)
+
+
+# --------------------------------------------------------------------------
+# property-based (hypothesis, optional like the rest of the suite)
+# --------------------------------------------------------------------------
+
+try:        # hypothesis is optional: only the property test needs it
+    from hypothesis import given, settings, strategies as hst
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(n_workers=hst.integers(1, 3),
+           n_events=hst.integers(1, 120),
+           seed=hst.integers(0, 2**31 - 1),
+           p_step=hst.floats(0.0, 1.0),
+           rounds=hst.integers(1, 4))
+    def test_property_merge_equals_oracle(n_workers, n_events, seed, p_step,
+                                          rounds):
+        rng = np.random.default_rng(seed)
+        tape = gen_tape(rng, n_workers, n_events, p_step=p_step)
+        _roundtrip(tape, n_workers, rounds=rounds)

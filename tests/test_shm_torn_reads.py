@@ -1,0 +1,182 @@
+"""Seqlock stress tests for the shm map plane (DESIGN.md §10).
+
+A writer PROCESS republishes device snapshots in a tight loop while the
+reader polls concurrently: a successful snapshot must never surface a torn
+read (the all-equal invariant the writer maintains holds on every read, the
+observed sequence number is always even, and the retry budget is never
+exhausted). Also covers the aggregator's failure rules: a killed worker is
+detected via its registered pid and excluded from the merge while its
+already-merged contribution stays; a worker stuck mid-publish (odd seqlock)
+is demoted to stale for the cycle, not crashed on.
+
+The two multi-process tests are marked slow (deselected from tier-1, run by
+CI's bench job via `pytest -m slow`); the in-process seqlock tests stay
+tier-1.
+"""
+import multiprocessing as mp
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import daemon as D, maps as M, shm as SH
+
+SPECS = [
+    M.MapSpec("arr", M.MapKind.ARRAY, max_entries=64),
+    M.MapSpec("hist", M.MapKind.LOG2HIST),
+]
+
+N_READS = 200
+RETRY_BUDGET = 2000          # 1ms backoff per retry — 2s worst case per read
+
+
+def _writer_main(root: str, specs, stop_file: str) -> None:
+    """Republish as fast as possible; every publish keeps each map
+    internally all-equal to a monotonically increasing counter, so any torn
+    read is detectable as a mixed-value snapshot."""
+    region = SH.ShmRegion.create(root, specs, worker_id="w0")
+    st = M.init_states(specs, np)
+    i = 0
+    while not os.path.exists(stop_file):
+        i += 1
+        st["arr"]["values"][:] = i
+        st["hist"]["bins"][:] = 3 * i + 1
+        region.publish_device(st)
+
+
+def _victim_main(root: str, specs, ready_file: str) -> None:
+    region = SH.ShmRegion.create(root, specs, worker_id="victim")
+    st = M.init_states(specs, np)
+    st["arr"]["values"][7] = 123
+    region.publish_device(st)
+    with open(ready_file, "w") as f:
+        f.write("ok")
+    time.sleep(600)          # parent SIGKILLs us long before this
+
+
+def _wait_for(pred, timeout=60.0, msg="condition"):
+    t0 = time.monotonic()
+    while not pred():
+        if time.monotonic() - t0 > timeout:
+            raise TimeoutError(f"timed out waiting for {msg}")
+        time.sleep(0.02)
+
+
+@pytest.mark.slow
+def test_no_torn_reads_under_republish_storm(tmp_path):
+    root = str(tmp_path / "shm")
+    stop = str(tmp_path / "stop")
+    ctx = mp.get_context("spawn")
+    p = ctx.Process(target=_writer_main, args=(root, SPECS, stop))
+    p.start()
+    try:
+        _wait_for(lambda: "w0" in SH.list_workers(root), msg="worker dir")
+        region = SH.ShmRegion.attach(root, mode="r", worker_id="w0")
+        # wait until the writer is actually publishing
+        _wait_for(lambda: int(region.seq[0]) > 2, msg="first publishes")
+
+        max_retries = 0
+        last = {"arr": 0, "hist": 0}
+        for _ in range(N_READS):
+            for name, field, of in (("arr", "values", None),
+                                    ("hist", "bins", None)):
+                st, seq, retries = region.snapshot_device_meta(
+                    name, retries=RETRY_BUDGET)
+                assert seq % 2 == 0, f"torn read surfaced: odd seq {seq}"
+                vals = st[field]
+                assert (vals == vals.flat[0]).all(), \
+                    f"torn read surfaced: mixed {name} snapshot {vals}"
+                # counters only move forward
+                cur = int(vals.flat[0])
+                assert cur >= last[name], f"{name} went backwards"
+                last[name] = cur
+                max_retries = max(max_retries, retries)
+        assert last["arr"] > 0, "never observed a publish"
+        # bounded retries: the even window must be reachable well inside
+        # the budget even under a storm of publishes
+        assert max_retries < RETRY_BUDGET // 4, \
+            f"retry pressure too high: {max_retries}"
+    finally:
+        with open(stop, "w") as f:
+            f.write("stop")
+        p.join(timeout=60)
+        if p.is_alive():          # pragma: no cover - cleanup path
+            p.kill()
+            p.join()
+    assert p.exitcode == 0
+
+
+@pytest.mark.slow
+def test_killed_worker_detected_and_excluded(tmp_path):
+    root = str(tmp_path / "shm")
+    ready = str(tmp_path / "ready")
+    ctx = mp.get_context("spawn")
+    p = ctx.Process(target=_victim_main, args=(root, SPECS, ready))
+    p.start()
+    try:
+        _wait_for(lambda: os.path.exists(ready), msg="victim publish")
+        agg = D.Aggregator(root)
+        status = agg.poll_once()
+        assert status["alive"] == ["victim"] and status["dead"] == []
+        g = SH.GlobalView.attach(root)
+        assert int(g.snapshot("arr")["values"][7]) == 123
+
+        os.kill(p.pid, signal.SIGKILL)
+        p.join(timeout=60)
+        status = agg.poll_once()
+        # dead: harvested once, then excluded from polling forever
+        assert status["dead"] == ["victim"] and status["alive"] == []
+        # the already-merged contribution stays in the global view
+        assert int(g.snapshot("arr")["values"][7]) == 123
+        status = agg.poll_once()
+        assert status["dead"] == ["victim"] and status["alive"] == []
+    finally:
+        if p.is_alive():          # pragma: no cover - cleanup path
+            p.kill()
+            p.join()
+
+
+# ---------------------------------------------------------------- in-process
+
+def test_snapshot_meta_reports_even_seq_and_retries(tmp_path):
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    st["arr"]["values"][:] = 9
+    region.publish_device(st)
+    out, seq, retries = region.snapshot_device_meta("arr")
+    assert seq == 2 and seq % 2 == 0 and retries == 0
+    np.testing.assert_array_equal(out["values"], 9)
+
+
+def test_stale_seqlock_worker_skipped_not_crashed(tmp_path):
+    """A worker stuck mid-publish (odd seqlock) forfeits only that cycle:
+    the aggregator marks it stale, keeps its baseline, and never surfaces
+    the half-written data; once the seqlock settles the worker rejoins."""
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    st["arr"]["values"][0] = 5
+    region.publish_device(st)
+
+    agg = D.Aggregator(root, snapshot_retries=3)
+    status = agg.poll_once()
+    assert status["stale"] == []
+    g = SH.GlobalView.attach(root)
+    assert int(g.snapshot("arr")["values"][0]) == 5
+
+    # crash mid-publish: odd seqlock + half-written garbage in the section
+    region.seq[0] += 1
+    region.device["arr"]["values"][0] = 999
+    status = agg.poll_once()
+    assert status["stale"] == ["w0"]
+    assert int(g.snapshot("arr")["values"][0]) == 5   # garbage never merged
+
+    # publish completes: worker rejoins, the now-consistent data merges
+    region.device["arr"]["values"][0] = 6
+    region.seq[0] += 1
+    status = agg.poll_once()
+    assert status["stale"] == []
+    assert int(g.snapshot("arr")["values"][0]) == 6

@@ -1,0 +1,200 @@
+"""Direct tests for repro.core.syscalls — previously only exercised through
+the runtime integration suite.
+
+Covers the three contract surfaces:
+  * `override_return` filter semantics: overrides apply on sys_enter ONLY,
+    first-override-wins across hooks, the real impl is skipped, and exit
+    probes observe the overridden return code;
+  * tracepoint enter/exit pairing: enter hooks see ret=0, exit hooks see
+    the impl's real return code (via ret_code_of);
+  * shm-backed host maps: syscall-hook map updates land in the mmapped
+    host section live (no publish step), visible to an attached daemon and
+    to the bpftool-style CLI.
+"""
+import numpy as np
+import pytest
+
+from repro.core import daemon, loader, maps as M, syscalls as S
+from repro.core.runtime import BpftimeRuntime
+from repro.core.shm import ShmRegion
+
+ARR = M.MapSpec("ret_log", M.MapKind.ARRAY, max_entries=32)
+
+# override calls > 5 on arg0 with code 99
+FILTER_BIG = """
+    ldxdw r6, [r1+ctx:arg0]
+    jle r6, 5, out
+    mov r1, 99
+    call override_return
+    out:
+    mov r0, 0
+    exit
+"""
+
+FILTER_ALWAYS_77 = """
+    mov r1, 77
+    call override_return
+    mov r0, 0
+    exit
+"""
+
+# ret_log[sys_id] += ctx.ret  (enter sees ret=0, exit sees the real rc)
+SUM_RET_BY_SYSCALL = """
+    ldxdw r6, [r1+ctx:sys_id]
+    stxdw [r10-8], r6
+    ldxdw r3, [r1+ctx:ret]
+    lddw r1, map:ret_log
+    mov r2, r10
+    add r2, -8
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+# ret_log[arg1] += 1  (counts hook executions per tag)
+COUNT_BY_ARG1 = """
+    ldxdw r6, [r1+ctx:arg1]
+    stxdw [r10-8], r6
+    lddw r1, map:ret_log
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+
+def make_table(specs):
+    """A standalone SyscallTable on plain numpy host maps — no runtime."""
+    host = {s.name: M.init_state(s, np) for s in specs}
+    fd_of = {s.name: i for i, s in enumerate(specs)}
+    return S.SyscallTable(host, list(specs), pid=4242), host, fd_of
+
+
+def load_insns(name, text, specs, fd_of, prog_type="tracepoint"):
+    obj = loader.build_object(name, text, list(specs), prog_type)
+    return loader.relocate(obj, fd_of)
+
+
+# ---------------------------------------------------------------- override
+
+def test_override_filters_on_sys_enter():
+    tbl, _, fd_of = make_table([])
+    tbl.attach("sys_data_fetch", "enter", "flt",
+               load_insns("flt", FILTER_BIG, [], fd_of, "filter"), [])
+    calls = []
+
+    r = tbl.invoke("sys_data_fetch", [3], impl=lambda: calls.append(1) or "b")
+    assert not r.overridden and r.value == "b" and r.ret_code == 0
+    r = tbl.invoke("sys_data_fetch", [9], impl=lambda: calls.append(1) or "b")
+    assert r.overridden and r.override_val == 99 and r.ret_code == 99
+    assert r.value is None          # real impl skipped
+    assert calls == [1]             # only the non-overridden call ran impl
+
+
+def test_override_on_exit_phase_is_ignored():
+    """override_return is a sys_enter feature: an exit hook setting it must
+    not rewrite the already-returned code nor mark the call overridden."""
+    tbl, _, fd_of = make_table([])
+    tbl.attach("sys_log", "exit", "flt",
+               load_insns("flt", FILTER_ALWAYS_77, [], fd_of, "filter"), [])
+    r = tbl.invoke("sys_log", [1], impl=lambda: "x", ret_code_of=lambda v: 5)
+    assert not r.overridden and r.value == "x" and r.ret_code == 5
+
+
+def test_first_override_wins_but_all_enter_hooks_run():
+    specs = [ARR]
+    tbl, host, fd_of = make_table(specs)
+    tbl.attach("sys_log", "enter", "flt99",
+               load_insns("flt99", FILTER_BIG, [], fd_of, "filter"), [])
+    tbl.attach("sys_log", "enter", "flt77",
+               load_insns("flt77", FILTER_ALWAYS_77, [], fd_of, "filter"), [])
+    tbl.attach("sys_log", "enter", "cnt",
+               load_insns("cnt", COUNT_BY_ARG1, specs, fd_of), specs)
+    r = tbl.invoke("sys_log", [9, 2], impl=lambda: "x")
+    assert r.overridden and r.override_val == 99       # attach order wins
+    # the observer hook after both filters still executed
+    assert int(host["ret_log"]["values"][2]) == 1
+    # earlier filter passes -> the later one's override applies
+    r = tbl.invoke("sys_log", [3, 2], impl=lambda: "x")
+    assert r.overridden and r.override_val == 77
+    assert int(host["ret_log"]["values"][2]) == 2
+
+
+# ---------------------------------------------------------------- pairing
+
+def test_enter_exit_pairing_sees_ret_code():
+    specs = [ARR]
+    tbl, host, fd_of = make_table(specs)
+    insns = load_insns("sum_ret", SUM_RET_BY_SYSCALL, specs, fd_of)
+    tbl.attach("sys_data_fetch", "enter", "sum_ret", insns, specs)
+    tbl.attach("sys_data_fetch", "exit", "sum_ret", insns, specs)
+
+    tbl.invoke("sys_data_fetch", [1], impl=lambda: "v",
+               ret_code_of=lambda v: 7)
+    sid = S.SYSCALL_IDS["sys_data_fetch"]
+    # enter contributed ret=0, exit contributed ret=7
+    assert int(host["ret_log"]["values"][sid]) == 7
+
+    # an overridden call: enter hook ran BEFORE the filter decision is
+    # applied, exit hook observes the override value as the return code
+    tbl.attach("sys_data_fetch", "enter", "flt",
+               load_insns("flt", FILTER_BIG, [], fd_of, "filter"), [])
+    tbl.invoke("sys_data_fetch", [9], impl=lambda: "v",
+               ret_code_of=lambda v: 7)
+    assert int(host["ret_log"]["values"][sid]) == 7 + 99
+
+
+def test_counts_and_detach():
+    specs = [ARR]
+    tbl, host, fd_of = make_table(specs)
+    insns = load_insns("cnt", COUNT_BY_ARG1, specs, fd_of)
+    tbl.attach("sys_heartbeat", "enter", "cnt", insns, specs)
+    tbl.invoke("sys_heartbeat", [0, 4], impl=lambda: None)
+    tbl.invoke("sys_heartbeat", [0, 4], impl=lambda: None)
+    assert tbl.counts["sys_heartbeat"] == 2
+    assert int(host["ret_log"]["values"][4]) == 2
+    tbl.detach("sys_heartbeat", "enter", "cnt")
+    tbl.invoke("sys_heartbeat", [0, 4], impl=lambda: None)
+    assert tbl.counts["sys_heartbeat"] == 3      # dispatch still counts
+    assert int(host["ret_log"]["values"][4]) == 2  # hook no longer fires
+
+
+def test_unknown_syscall_and_phase_rejected():
+    tbl, _, fd_of = make_table([])
+    insns = load_insns("flt", FILTER_ALWAYS_77, [], fd_of, "filter")
+    with pytest.raises(KeyError):
+        tbl.attach("sys_nope", "enter", "flt", insns, [])
+    with pytest.raises(ValueError):
+        tbl.attach("sys_log", "during", "flt", insns, [])
+    with pytest.raises(KeyError):
+        tbl.invoke("sys_nope", [], impl=lambda: None)
+
+
+# ---------------------------------------------------------------- shm-backed
+
+def test_shm_backed_host_maps_visible_to_daemon(tmp_path, capsys):
+    """Syscall-hook map updates hit the mmapped host section directly:
+    a daemon attached to the region (read-only, fleet layout) sees them
+    WITHOUT any publish step, and the CLI can dump them."""
+    root = str(tmp_path / "shm")
+    rt = BpftimeRuntime()
+    pid = rt.load_asm("sum_ret", SUM_RET_BY_SYSCALL, [ARR], "tracepoint")
+    rt.setup_shm(root, worker_id="w0")
+    rt.attach(pid, "tracepoint:sys_serve_admit:exit")
+
+    rt.syscalls.invoke("sys_serve_admit", [5], impl=lambda: True,
+                       ret_code_of=lambda v: 3)
+    rt.syscalls.invoke("sys_serve_admit", [6], impl=lambda: True,
+                       ret_code_of=lambda v: 4)
+
+    sid = S.SYSCALL_IDS["sys_serve_admit"]
+    other = ShmRegion.attach(root, mode="r", worker_id="w0")
+    assert int(other.host["ret_log"]["values"][sid]) == 7
+
+    rc = daemon.main([root, "map", "dump", "ret_log",
+                      "--section", "host", "--worker", "w0"])
+    assert rc == 0
+    out = capsys.readouterr().out
+    assert f"{sid}: 7" in out
