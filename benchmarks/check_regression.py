@@ -9,7 +9,11 @@ Hard floors:
     point of the lane is that attach is milliseconds, not a retrace;
   * fleet merge throughput (events/s aggregated across 3 workers through
     the interprocess map plane, DESIGN.md §10) no worse than the recorded
-    budget divided by TOLERANCE.
+    budget divided by TOLERANCE;
+  * fleet recovery (DESIGN.md §11): a restarted daemon must restore the
+    fold journal and republish within TOLERANCE of the recorded latency,
+    and the recovered view must be ZERO-LOSS (bit-identical to the
+    pre-crash global view — a hard invariant, no tolerance).
 
     python benchmarks/check_regression.py BENCH_probe.json \
         [--baseline benchmarks/BENCH_baseline.json] [--tolerance 2.0]
@@ -64,6 +68,22 @@ def check(result: dict, baseline: dict, tolerance: float) -> list[str]:
             f"fleet merge throughput {fleet:.0f} events/s is below budget "
             f"{fleet_budget:.0f}/{tolerance}")
 
+    rec = result.get("fleet_recovery")
+    rec_budget = baseline.get("fleet_recovery", {}).get("recovery_ms")
+    if rec is None:
+        failures.append("result json has no fleet recovery measurement "
+                        "(fleet_recovery.recovery_ms)")
+    else:
+        if not rec.get("zero_loss", False):
+            failures.append(
+                "fleet recovery LOST DELTAS: recovered global view is not "
+                "bit-identical to the pre-crash view (DESIGN.md §11)")
+        if rec_budget and rec.get("recovery_ms", 0.0) > \
+                rec_budget * tolerance:
+            failures.append(
+                f"fleet recovery {rec['recovery_ms']:.1f}ms exceeds budget "
+                f"{rec_budget:.1f}ms x{tolerance}")
+
     return failures
 
 
@@ -97,6 +117,12 @@ def main(argv=None) -> int:
               f"{result['fleet']['events_per_s']:.0f} events/s "
               f"(budget {baseline.get('fleet', {}).get('events_per_s', 0):.0f}"
               f" /{args.tolerance})")
+    if "fleet_recovery" in result:
+        fr = result["fleet_recovery"]
+        print(f"fleet recovery: {fr.get('recovery_ms', 0):.1f}ms, "
+              f"zero_loss={fr.get('zero_loss')} (budget "
+              f"{baseline.get('fleet_recovery', {}).get('recovery_ms', 0):.1f}"
+              f"ms x{args.tolerance})")
     if failures:
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)

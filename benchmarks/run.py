@@ -68,6 +68,10 @@ def main(argv=None):
         if "fleet" in res:
             print(f"# fleet merge: {res['fleet']['events_per_s']:.0f} "
                   f"events/s across {res['fleet']['workers']} workers")
+        if "fleet_recovery" in res:
+            fr = res["fleet_recovery"]
+            print(f"# fleet recovery: {fr['recovery_ms']:.1f}ms daemon "
+                  f"restart (zero_loss={fr['zero_loss']})")
         print(f"\nwrote {args.json}\nOK")
         return
 

@@ -33,8 +33,15 @@ def _paths_of(tree):
 
 
 def save(ckpt_dir: str, step: int, state, *, runtime=None,
-         blocking: bool = True) -> threading.Thread | None:
-    """state: pytree of arrays. Returns the writer thread if async."""
+         blocking: bool = True,
+         fault_retries: int = 3) -> threading.Thread | None:
+    """state: pytree of arrays. Returns the writer thread if async.
+
+    Failure drill semantics (DESIGN.md §11): an eBPF filter overriding
+    sys_checkpoint_save with a NEGATIVE code (-errno) is a transient write
+    fault — the save is retried up to `fault_retries` times, then skipped
+    (training continues; the previous committed checkpoint stays latest).
+    A non-negative override is a policy veto: skipped immediately."""
     leaves, treedef = _flatten(state)
     host = [np.asarray(x) for x in leaves]
     names = _paths_of(state)
@@ -56,9 +63,14 @@ def save(ckpt_dir: str, step: int, state, *, runtime=None,
 
     def run():
         if runtime is not None:
-            res = runtime.syscalls.invoke("sys_checkpoint_save",
-                                          [step, len(host)], impl=impl)
-            return None if res.overridden else res.value
+            for _ in range(fault_retries + 1):
+                res = runtime.syscalls.invoke("sys_checkpoint_save",
+                                              [step, len(host)], impl=impl)
+                if not res.overridden:
+                    return res.value
+                if not res.fault:
+                    return None      # policy veto: no retry
+            return None              # fault persisted: degrade (skip save)
         return impl()
 
     if blocking:
@@ -81,7 +93,7 @@ def latest(ckpt_dir: str) -> int | None:
 
 
 def restore(ckpt_dir: str, step: int, like, *, mesh=None, shardings=None,
-            runtime=None):
+            runtime=None, fault_retries: int = 3):
     """Restore into the structure of `like`. With mesh+shardings, leaves are
     device_put with the TARGET sharding — elastic resharding: a checkpoint
     written on one mesh restores onto any other (bytes are mesh-agnostic
@@ -107,7 +119,12 @@ def restore(ckpt_dir: str, step: int, like, *, mesh=None, shardings=None,
         return jax.tree_util.tree_unflatten(treedef, out)
 
     if runtime is not None:
-        res = runtime.syscalls.invoke("sys_checkpoint_restore", [step],
-                                      impl=impl)
-        return res.value
+        # same drill convention as save(): negative override = transient
+        # read fault, bounded retry; non-negative = veto (returns None)
+        for _ in range(fault_retries + 1):
+            res = runtime.syscalls.invoke("sys_checkpoint_restore", [step],
+                                          impl=impl)
+            if not res.overridden or not res.fault:
+                return res.value
+        return None
     return impl()

@@ -20,6 +20,7 @@ Usable as a library (tests) or CLI. bpftool-style subcommands:
     python -m repro.core.daemon <shm_dir> attach OBJ.json [--live] [--target T]
     python -m repro.core.daemon <shm_dir> detach LINK_ID
     python -m repro.core.daemon <shm_dir> agg [--watch SECONDS] [--once]
+    python -m repro.core.daemon <shm_dir> fleet health [--json]
 
 plus the legacy single-process watcher flags:
 
@@ -33,12 +34,15 @@ import json
 import os
 import sys
 import time
+from dataclasses import dataclass
 
 import numpy as np
 
-from . import maps as M, shm as SH
+from . import faults, maps as M, shm as SH
 from .maps import MapKind, MapSpec
-from .shm import GlobalView, ShmRegion
+from .shm import GlobalView, ShmRegion, SnapshotCorruption
+
+from repro.ft import fault_tolerance as FT
 
 
 def render_log2_hist(bins: np.ndarray, label: str = "value") -> str:
@@ -117,6 +121,61 @@ class SeqRegression(Exception):
     incarnation's state and must be forfeited, never diffed."""
 
 
+# per-worker health states (DESIGN.md §11) — deterministic, cycle-counted
+# thresholds so the state machine is testable without wall-clock sleeps
+HEALTHY = "HEALTHY"
+DEGRADED = "DEGRADED"
+STALE = "STALE"
+DEAD = "DEAD"
+
+
+@dataclass
+class AggregatorConfig:
+    """Aggregation-engine tunables (satellite: no more hardcoded constants
+    in shm.py/daemon.py).
+
+    Seqlock reads back off exponentially: the first retry sleeps
+    `backoff_base` seconds, doubling per attempt up to `backoff_max` —
+    a one-publish collision resolves in ~50us (vs the old fixed 1ms),
+    while a stuck writer costs at most retries * backoff_max before the
+    worker is demoted to stale for the cycle."""
+    snapshot_retries: int = 50
+    backoff_base: float = SH.BACKOFF_BASE
+    backoff_max: float = SH.BACKOFF_MAX
+    poll_interval: float = 2.0          # loop() cadence, seconds
+    # health state machine (cycle-counted)
+    degraded_after: int = 3             # merges with no seq advance
+    quarantine_after: int = 2           # consecutive failed cycles
+    quarantine_probe_retries: int = 2   # reduced budget while quarantined
+    # back-pressure: skip the global rebuild+publish while a cycle folds
+    # more than coalesce_threshold updates (None = always publish), but
+    # never let more than publish_max_lag cycles go unpublished
+    coalesce_threshold: int | None = None
+    publish_max_lag: int = 4
+    # crash recovery
+    journal: bool = True
+    # ft wiring: heartbeats count aggregation cycles since the worker's
+    # seqlock last advanced; step_time_map names a host ARRAY map of
+    # per-step wall times the workers publish (sys_step_end probe)
+    heartbeat_timeout_cycles: float = 5.0
+    step_time_map: str | None = None
+    straggler_factor: float = 1.5
+    straggler_min_samples: int = 5
+
+
+def _fresh_health() -> dict:
+    return {"state": HEALTHY, "consec_fail": 0, "no_advance": 0,
+            "quarantined": False, "transitions": []}
+
+
+def _enc_state(st: dict) -> dict:
+    return {f: np.asarray(a).tolist() for f, a in st.items()}
+
+
+def _dec_state(d: dict) -> dict:
+    return {f: np.asarray(v, np.int64) for f, v in d.items()}
+
+
 class Aggregator:
     """Polls every worker's seqlocked device snapshots, extracts per-cycle
     deltas against a last-seen baseline, and folds them into one global
@@ -143,13 +202,31 @@ class Aggregator:
         worker.json caught up) forfeits that cycle's delta entirely: the
         zeroed snapshot must never fold as a negative delta. Merges are
         snapshot-all-then-fold, so a mid-cycle failure never lands a
-        partial merge.
+        partial merge;
+      * a worker whose section read back a CHECKSUM MISMATCH (consistent
+        seqlock, damaged payload) is skipped for the cycle exactly like a
+        stale one — corruption is detect-and-skip, never silent-merge —
+        and counted in `corrupt_skipped`.
+
+    Crash recovery (DESIGN.md §11): with config.journal on, the engine
+    persists a fold journal under global/ at the END of every cycle (after
+    the publish). A restarted aggregator resumes from the journaled
+    accumulators + per-worker baselines: folds the crash lost in memory
+    re-extract idempotently against the journaled baselines (worker
+    snapshots are cumulative), so no delta is double-folded or lost and
+    the recovered global view is bit-identical to an uninterrupted run
+    (hash tables republish canonicalized, so accumulator layout drift
+    after a restore is invisible).
     """
 
-    def __init__(self, root: str, snapshot_retries: int = 50):
+    def __init__(self, root: str, snapshot_retries: int | None = None,
+                 config: AggregatorConfig | None = None):
+        self.config = config or AggregatorConfig()
+        if snapshot_retries is not None:
+            self.config.snapshot_retries = snapshot_retries
+        self.snapshot_retries = self.config.snapshot_retries
         self.root = root
         self.specs = SH.read_meta_specs(root)
-        self.snapshot_retries = snapshot_retries
         self.view = GlobalView.create(root, self.specs)
         # global accumulators
         self.summary = {s.name: M.init_state(s, np) for s in self.specs
@@ -179,14 +256,131 @@ class Aggregator:
         # incarnation, not before it
         self.rb_step_floor: dict[str, dict[str, int]] = \
             {s.name: {} for s in self.specs if s.kind == MapKind.RINGBUF}
+        # ringbuf records overwritten in a worker's ring BEFORE the
+        # aggregator read them (back-pressure drop accounting, explicit
+        # in the status — never silent)
+        self.rb_lost: dict[str, dict[str, int]] = \
+            {s.name: {} for s in self.specs if s.kind == MapKind.RINGBUF}
         # per-worker poll state; dead maps worker id -> boot id at death,
         # so a NEW incarnation under the same id is re-admitted
         self.workers: dict[str, dict] = {}
         self.dead: dict[str, str | None] = {}
+        self.health: dict[str, dict] = {}
+        self.corrupt_skipped: dict[str, int] = {}
         self.cycles = 0
         self.merged_updates = 0
+        self.coalesced_cycles = 0
+        self._publish_lag = 0
         self.last_states: dict = {}
         self._published = False
+        self._stragglers: list[str] = []
+        self.hb = FT.HeartbeatMonitor(
+            num_hosts=0, timeout_s=self.config.heartbeat_timeout_cycles)
+        # crash recovery: resume accumulators + baselines from the fold
+        # journal the previous incarnation persisted at its last completed
+        # cycle (missing/invalid journal = cold start)
+        self._journal_workers: dict[str, dict] = {}
+        if self.config.journal:
+            self._restore_journal()
+
+    # ---------------------------------------------------------------- journal
+    def _journal_path(self) -> str:
+        return os.path.join(self.root, "global", "journal.json")
+
+    def _journal_dict(self) -> dict:
+        workers = {}
+        for wid, w in self.workers.items():
+            b = w["base"]
+            workers[wid] = {
+                "boot": w["boot"], "seq": int(w.get("seq", 0)),
+                "base": {
+                    "summary": {n: _enc_state(st)
+                                for n, st in b["summary"].items()},
+                    "hash_items": {n: sorted(d.items())
+                                   for n, d in b["hash_items"].items()},
+                    "rb_head": {n: int(v)
+                                for n, v in b["rb_head"].items()},
+                }}
+        return {
+            "version": 1,
+            "cycles": self.cycles,
+            "merged_updates": self.merged_updates,
+            "coalesced_cycles": self.coalesced_cycles,
+            "summary": {n: _enc_state(st) for n, st in self.summary.items()},
+            "hash_items": {n: sorted(M.n_hash_items(t).items())
+                           for n, t in self.hash_tbl.items()},
+            "hash_dropped": dict(self.hash_dropped),
+            "rb_tagged": {n: {wid: [[list(tag), [int(x) for x in rec]]
+                                    for tag, rec in buf]
+                              for wid, buf in d.items()}
+                          for n, d in self.rb_tagged.items()},
+            "rb_heads": {n: dict(d) for n, d in self.rb_heads.items()},
+            "rb_offset": {n: dict(d) for n, d in self.rb_offset.items()},
+            "rb_step_floor": {n: dict(d)
+                              for n, d in self.rb_step_floor.items()},
+            "rb_lost": {n: dict(d) for n, d in self.rb_lost.items()},
+            "corrupt_skipped": dict(self.corrupt_skipped),
+            "dead": dict(self.dead),
+            "workers": workers,
+            "health": self.health,
+            "hb_last": dict(self.hb.last),
+        }
+
+    def _restore_journal(self) -> None:
+        p = self._journal_path()
+        if not os.path.exists(p):
+            return
+        try:
+            with open(p) as f:
+                j = json.load(f)
+        except (OSError, ValueError):
+            return               # unreadable journal: cold start
+        if j.get("version") != 1:
+            return
+        spec_of = {s.name: s for s in self.specs}
+        self.cycles = int(j["cycles"])
+        self.merged_updates = int(j["merged_updates"])
+        self.coalesced_cycles = int(j.get("coalesced_cycles", 0))
+        for n, d in j["summary"].items():
+            if n in self.summary:
+                self.summary[n] = _dec_state(d)
+        for n, items in j["hash_items"].items():
+            if n in self.hash_tbl:
+                # canonical rebuild: content identical; layout drift is
+                # invisible because publishes canonicalize again
+                self.hash_tbl[n] = M.n_hash_canonical(
+                    spec_of[n], {int(k): int(v) for k, v in items})
+        self.hash_dropped.update(
+            {n: int(v) for n, v in j["hash_dropped"].items()
+             if n in self.hash_dropped})
+        for n, d in j["rb_tagged"].items():
+            if n in self.rb_tagged:
+                self.rb_tagged[n] = {
+                    wid: [(tuple(tag), np.asarray(rec, np.int64))
+                          for tag, rec in buf]
+                    for wid, buf in d.items()}
+        for attr in ("rb_heads", "rb_offset", "rb_step_floor", "rb_lost"):
+            mine = getattr(self, attr)
+            for n, d in j[attr].items():
+                if n in mine:
+                    mine[n] = {wid: int(v) for wid, v in d.items()}
+        self.corrupt_skipped = {w: int(v)
+                                for w, v in j["corrupt_skipped"].items()}
+        self.dead = dict(j["dead"])
+        self.health = j["health"]
+        self.hb.last = {w: float(t) for w, t in j.get("hb_last", {}).items()}
+        for wid, w in j["workers"].items():
+            b = w["base"]
+            self._journal_workers[wid] = {
+                "boot": w["boot"], "seq": int(w["seq"]),
+                "base": {
+                    "summary": {n: _dec_state(st)
+                                for n, st in b["summary"].items()},
+                    "hash_items": {n: {int(k): int(v) for k, v in items}
+                                   for n, items in b["hash_items"].items()},
+                    "rb_head": {n: int(v)
+                                for n, v in b["rb_head"].items()},
+                }}
 
     # ---------------------------------------------------------------- workers
     def _fresh_baseline(self) -> dict:
@@ -201,21 +395,34 @@ class Aggregator:
         for wid in SH.list_workers(self.root):
             if wid in self.workers:
                 continue
+            boot = SH.worker_info(self.root, wid).get("boot")
             if wid in self.dead:
-                boot = SH.worker_info(self.root, wid).get("boot")
                 if boot == self.dead[wid]:
                     continue            # same incarnation: stays retired
                 del self.dead[wid]      # new incarnation: re-admit
                 for name in self.rb_offset:
                     self.rb_offset[name][wid] = \
                         self.rb_heads[name].get(wid, 0)
+                self._set_state(wid, HEALTHY, "new_incarnation")
+            jw = self._journal_workers.pop(wid, None)
+            if jw is not None and jw["boot"] == boot:
+                # crash recovery: resume from the journaled baseline, so
+                # deltas the previous incarnation folded in memory (after
+                # its last journal write) re-extract — and already-journaled
+                # folds don't re-extract (idempotent re-fold)
+                base, seq = jw["base"], jw["seq"]
+            else:
+                base, seq = self._fresh_baseline(), 0
             self.workers[wid] = {
                 "region": ShmRegion.attach(self.root, mode="r",
                                            worker_id=wid),
-                "boot": SH.worker_info(self.root, wid).get("boot"),
-                "base": self._fresh_baseline(),
-                "seq": 0,
+                "boot": boot,
+                "base": base,
+                "seq": seq,
             }
+            if wid not in self.health:
+                self.health[wid] = _fresh_health()
+                self.hb.beat(wid, t=float(self.cycles))
 
     def _check_restart(self, wid: str, w: dict) -> None:
         boot = SH.worker_info(self.root, wid).get("boot")
@@ -231,19 +438,24 @@ class Aggregator:
                 self.rb_offset[name][wid] = self.rb_heads[name].get(wid, 0)
 
     # ---------------------------------------------------------------- merge
-    def _merge_worker(self, wid: str, w: dict) -> int:
+    def _merge_worker(self, wid: str, w: dict,
+                      retries: int | None = None) -> int:
         """Snapshot + delta + fold for one worker. Returns the number of
         updates merged. Raises TimeoutError if the seqlock never settles,
-        SeqRegression if the section was re-created under us (restart mid
-        detection: zeroed files must never fold as a negative delta).
-        Snapshots ALL maps before folding any, so a failure mid-cycle
-        never lands a partial merge."""
+        SnapshotCorruption on a checksum mismatch (damaged bytes behind a
+        consistent seqlock), SeqRegression if the section was re-created
+        under us (restart mid detection: zeroed files must never fold as a
+        negative delta). Snapshots ALL maps before folding any, so a
+        failure mid-cycle never lands a partial merge."""
+        cfg = self.config
+        retries = cfg.snapshot_retries if retries is None else retries
         region, base = w["region"], w["base"]
         snaps = {}
         seq_seen = w.get("seq", 0)
         for spec in self.specs:
             cur, seq, _ = region.snapshot_device_meta(
-                spec.name, retries=self.snapshot_retries)
+                spec.name, retries=retries,
+                backoff_base=cfg.backoff_base, backoff_max=cfg.backoff_max)
             if seq < w.get("seq", 0):
                 raise SeqRegression(wid)
             seq_seen = max(seq_seen, seq)
@@ -275,8 +487,15 @@ class Aggregator:
                 base["hash_items"][spec.name] = items
             elif spec.kind == MapKind.RINGBUF:
                 lane = spec.flags.get("step_lane")
+                lo = base["rb_head"][spec.name]
                 tagged, head = M.n_ringbuf_tagged(
-                    cur, wid, lo=base["rb_head"][spec.name], step_lane=lane)
+                    cur, wid, lo=lo, step_lane=lane)
+                # records the ring overwrote before we read them — the
+                # aggregator fell behind; accounted, never silent
+                lost = max(0, (head - spec.max_entries) - lo)
+                if lost:
+                    self.rb_lost[spec.name][wid] = \
+                        self.rb_lost[spec.name].get(wid, 0) + lost
                 # shift this incarnation's local positions onto the
                 # worker's permanent stream, and clamp step tags to the
                 # worker's floor: the interleave key stays monotone in
@@ -298,15 +517,74 @@ class Aggregator:
                 base["rb_head"][spec.name] = head
         return updates
 
+    # ---------------------------------------------------------------- health
+    def _set_state(self, wid: str, to: str, reason: str) -> None:
+        h = self.health.setdefault(wid, _fresh_health())
+        if h["state"] != to:
+            h["transitions"].append([self.cycles, h["state"], to, reason])
+            h["state"] = to
+
+    def _fail_event(self, wid: str, reason: str) -> None:
+        h = self.health.setdefault(wid, _fresh_health())
+        h["consec_fail"] += 1
+        self._set_state(wid, STALE, reason)
+        if not h["quarantined"] and \
+                h["consec_fail"] >= self.config.quarantine_after:
+            h["quarantined"] = True
+            h["transitions"].append([self.cycles, STALE, STALE,
+                                     "quarantined"])
+
+    def _ok_event(self, wid: str, advanced: bool) -> None:
+        h = self.health.setdefault(wid, _fresh_health())
+        h["consec_fail"] = 0
+        if h["quarantined"]:
+            h["quarantined"] = False
+            h["transitions"].append([self.cycles, h["state"], h["state"],
+                                     "readmitted"])
+        if advanced:
+            h["no_advance"] = 0
+            if h["state"] != HEALTHY:
+                self._set_state(wid, HEALTHY, "recovered")
+            self.hb.beat(wid, t=float(self.cycles))
+        else:
+            h["no_advance"] += 1
+            if h["state"] == HEALTHY and \
+                    h["no_advance"] >= self.config.degraded_after:
+                self._set_state(wid, DEGRADED, "no_seq_advance")
+
+    def _detect_stragglers(self) -> list[str]:
+        """ft wiring: per-step wall times the workers' sys_step_end probes
+        publish into a host ARRAY map become the daemon's straggler signal
+        (paper SP4 — no cooperation from the trainer needed)."""
+        name = self.config.step_time_map
+        if not name:
+            return []
+        wids, rows = [], []
+        for wid in sorted(self.workers):
+            host = self.workers[wid]["region"].host
+            if name in host:
+                wids.append(wid)
+                rows.append(np.asarray(host[name]["values"],
+                                       np.float64).reshape(-1))
+        if not rows:
+            return []
+        idx = FT.detect_stragglers(
+            np.stack(rows), factor=self.config.straggler_factor,
+            min_samples=self.config.straggler_min_samples)
+        return [wids[i] for i in idx]
+
     # ---------------------------------------------------------------- cycle
     def poll_once(self) -> dict:
-        """One aggregation cycle: discover, poll, merge, publish. Returns
-        the status dict also written to <dir>/global/status.json."""
+        """One aggregation cycle: discover, poll, merge, publish, journal.
+        Returns the status dict also written to <dir>/global/status.json."""
+        cfg = self.config
+        faults.fire("agg:cycle_begin", cycle=self.cycles)
         self._discover()
         stale = []
         cycle_updates = 0
         for wid in sorted(self.workers):
             w = self.workers[wid]
+            faults.fire("agg:pre_merge", wid=wid, cycle=self.cycles)
             # restart detection FIRST, even for a dead worker: a worker
             # that restarted AND died within one poll interval must be
             # harvested against the new incarnation's (zero) baseline and
@@ -316,26 +594,66 @@ class Aggregator:
             if not SH.worker_alive(self.root, wid):
                 try:        # harvest the final snapshot, then retire
                     cycle_updates += self._merge_worker(wid, w)
-                except (TimeoutError, SeqRegression):
+                except (TimeoutError, SeqRegression, SnapshotCorruption):
                     pass    # died mid-publish / restart under way:
                             # the last delta is forfeit
                 self.dead[wid] = w["boot"]
                 del self.workers[wid]
+                self._set_state(wid, DEAD, "pid_gone")
                 continue
+            h = self.health.setdefault(wid, _fresh_health())
+            retries = (cfg.quarantine_probe_retries if h["quarantined"]
+                       else cfg.snapshot_retries)
+            seq_before = w.get("seq", 0)
             try:
-                cycle_updates += self._merge_worker(wid, w)
-            except (TimeoutError, SeqRegression):
+                cycle_updates += self._merge_worker(wid, w, retries=retries)
+            except SnapshotCorruption:
+                self.corrupt_skipped[wid] = \
+                    self.corrupt_skipped.get(wid, 0) + 1
+                stale.append(wid)
+                self._fail_event(wid, "snapshot_corrupt")
+            except TimeoutError:
                 stale.append(wid)       # crashed mid-publish? retry next
+                self._fail_event(wid, "seqlock_timeout")
+            except SeqRegression:
+                stale.append(wid)
+                self._fail_event(wid, "seq_regression")
+            else:
+                faults.fire("agg:post_merge", wid=wid)
+                self._ok_event(wid, advanced=w.get("seq", 0) > seq_before)
+        self._stragglers = self._detect_stragglers()
+        for wid in self._stragglers:
+            if self.health.get(wid, {}).get("state") == HEALTHY:
+                self._set_state(wid, DEGRADED, "straggler")
         self.merged_updates += cycle_updates
         self.cycles += 1
         # rebuild + republish only when something merged: idle polling
-        # stays O(workers), not O(total map state). Cached for observers
-        # (loop's display) — recomputing repeats the hash canonicalization
-        # and the ringbuf merge-sort.
-        if cycle_updates or not self._published:
+        # stays O(workers), not O(total map state). Back-pressure: while a
+        # cycle folds more than coalesce_threshold updates the rebuild is
+        # skipped (deltas coalesce in the accumulators; ring overruns are
+        # counted in rb_lost), but never for more than publish_max_lag
+        # cycles.
+        publish_now = (bool(cycle_updates) or not self._published
+                       or self._publish_lag > 0)   # flush pending coalesce
+        if (publish_now and cfg.coalesce_threshold is not None
+                and self._published
+                and cycle_updates > cfg.coalesce_threshold
+                and self._publish_lag + 1 < cfg.publish_max_lag):
+            self._publish_lag += 1
+            self.coalesced_cycles += 1
+            publish_now = False
+        if publish_now:
+            self._publish_lag = 0
+            faults.fire("agg:pre_publish")
             self.last_states = self.global_states()
             self.view.publish(self.last_states)
             self._published = True
+            faults.fire("agg:post_publish")
+        faults.fire("agg:pre_journal")
+        if cfg.journal:
+            SH._atomic_json(self._journal_path(), self._journal_dict())
+        hb_dead = [w for w in self.hb.dead(now=float(self.cycles))
+                   if w in self.workers]
         status = {
             "alive": sorted(self.workers),
             "dead": sorted(self.dead),
@@ -344,9 +662,19 @@ class Aggregator:
             "merged_updates": self.merged_updates,
             "hash_dropped": dict(self.hash_dropped),
             "rb_heads": {n: dict(h) for n, h in self.rb_heads.items()},
+            "rb_lost": {n: dict(d) for n, d in self.rb_lost.items()},
+            "corrupt_skipped": dict(self.corrupt_skipped),
+            "coalesced_cycles": self.coalesced_cycles,
+            "stragglers": self._stragglers,
+            "hb_dead": hb_dead,
+            "health": {w: {"state": h["state"],
+                           "quarantined": h["quarantined"],
+                           "transitions": h["transitions"]}
+                       for w, h in self.health.items()},
             "time": time.time(),
         }
         self.view.publish_status(status)
+        faults.fire("agg:cycle_end", cycle=self.cycles)
         return status
 
     def global_states(self) -> dict:
@@ -369,8 +697,9 @@ class Aggregator:
                 out[spec.name] = M.ringbuf_merge_global(spec, tagged, total)
         return out
 
-    def loop(self, watch: float = 2.0, once: bool = False,
+    def loop(self, watch: float | None = None, once: bool = False,
              out=sys.stdout) -> None:
+        watch = self.config.poll_interval if watch is None else watch
         while True:
             status = self.poll_once()
             print(f"=== {time.strftime('%H:%M:%S')} agg cycle "
@@ -390,7 +719,7 @@ class Aggregator:
 # bpftool-style CLI
 # --------------------------------------------------------------------------
 
-_SUBCOMMANDS = ("map", "prog", "attach", "detach", "agg")
+_SUBCOMMANDS = ("map", "prog", "attach", "detach", "agg", "fleet")
 
 
 def _section_loader(root: str, section: str, worker: str | None):
@@ -557,6 +886,46 @@ def _cmd_detach(root: str, args) -> int:
     return 0
 
 
+def _cmd_fleet(root: str, args) -> int:
+    """`fleet health`: the per-worker state machine the aggregation engine
+    maintains (HEALTHY/DEGRADED/STALE/DEAD, quarantine, transitions) as
+    published in global/status.json."""
+    if not GlobalView.exists(root):
+        print("no aggregated fleet — run `agg` first", file=sys.stderr)
+        return 1
+    status = GlobalView.attach(root).read_status()
+    if not status:
+        print("no aggregation status published yet", file=sys.stderr)
+        return 1
+    if args.json:
+        print(json.dumps(status, indent=1))
+        return 0
+    print(f"fleet health @ cycle {status.get('cycles', 0)}: "
+          f"alive={status.get('alive', [])} dead={status.get('dead', [])} "
+          f"stale={status.get('stale', [])}")
+    extras = []
+    for key in ("stragglers", "hb_dead"):
+        if status.get(key):
+            extras.append(f"{key}={status[key]}")
+    if any(status.get("corrupt_skipped", {}).values()):
+        extras.append(f"corrupt_skipped={status['corrupt_skipped']}")
+    if any(v for d in status.get("rb_lost", {}).values()
+           for v in d.values()):
+        extras.append(f"rb_lost={status['rb_lost']}")
+    if status.get("coalesced_cycles"):
+        extras.append(f"coalesced_cycles={status['coalesced_cycles']}")
+    if extras:
+        print("  " + " ".join(extras))
+    print(f"{'WORKER':12s} {'STATE':10s} {'QUARANTINED':12s} TRANSITIONS")
+    for wid, h in sorted(status.get("health", {}).items()):
+        print(f"{wid:12s} {h['state']:10s} "
+              f"{('yes' if h.get('quarantined') else '-'):12s} "
+              f"{len(h.get('transitions', []))}")
+        for cyc, frm, to, reason in h.get("transitions", []):
+            print(f"    cycle {cyc}: {frm} -> {to} ({reason})")
+    return 0
+
+
 def _main_bpftool(argv: list[str]) -> int:
     ap = argparse.ArgumentParser(prog="python -m repro.core.daemon")
     ap.add_argument("shm_dir")
@@ -589,10 +958,18 @@ def _main_bpftool(argv: list[str]) -> int:
     dt.add_argument("--worker", action="append")
 
     ag = sub.add_parser("agg", help="run the fleet aggregation engine")
-    ag.add_argument("--watch", type=float, default=2.0)
+    ag.add_argument("--watch", type=float, default=None,
+                    help="poll cadence (default: AggregatorConfig."
+                         "poll_interval)")
     ag.add_argument("--once", action="store_true")
 
+    fl = sub.add_parser("fleet", help="fleet health / failure introspection")
+    fl.add_argument("action", choices=("health",))
+    fl.add_argument("--json", action="store_true")
+
     args = ap.parse_args(argv)
+    if args.cmd == "fleet":
+        return _cmd_fleet(args.shm_dir, args)
     if args.cmd == "map":
         return _cmd_map(args.shm_dir, args)
     if args.cmd == "prog":

@@ -35,12 +35,19 @@ import json
 import os
 import time
 import uuid
+import zlib
 from dataclasses import dataclass
 
 import numpy as np
 
-from . import maps as M
+from . import faults, maps as M
 from .maps import MapKind, MapSpec
+
+
+class SnapshotCorruption(Exception):
+    """A seqlocked section read consistently (even, stable seq) but its
+    payload does not match the checksum the publisher wrote: the bytes were
+    damaged AFTER the publish. Detect-and-skip, never silent-merge."""
 
 
 def _memmap(path, shape, mode):
@@ -121,29 +128,104 @@ def _attach_section(dirpath: str, specs: list[MapSpec], mode: str) -> dict:
     return out
 
 
-def _seq_publish(seq: np.memmap, section: dict, states: dict) -> None:
-    seq[0] += 1          # odd: write in flight
+def _crc_of(state: dict) -> int:
+    """CRC32 over a map state's field bytes, fields in sorted order — the
+    per-section corruption check written under the seqlock."""
+    c = 0
+    for f in sorted(state):
+        c = zlib.crc32(np.ascontiguousarray(state[f]).tobytes(), c)
+    return c
+
+
+def _crc_path(dirpath: str) -> str:
+    return os.path.join(dirpath, ".crc.npy")
+
+
+def _crc_create(dirpath: str, n: int) -> np.memmap:
+    p = _crc_path(dirpath)
+    crc = _memmap(p, None, "r+") if os.path.exists(p) \
+        else _memmap(p, (n,), "w+")
+    crc[...] = 0
+    crc.flush()
+    return crc
+
+
+def _crc_attach(dirpath: str, mode: str) -> np.memmap | None:
+    p = _crc_path(dirpath)
+    if not os.path.exists(p):
+        return None              # pre-checksum region: no validation
+    return _memmap(p, None, "r+" if mode != "r" else "r")
+
+
+# Seqlock backoff defaults (satellite: configurable via AggregatorConfig).
+# First retry sleeps BACKOFF_BASE, doubling up to BACKOFF_MAX per attempt:
+# the common one-publish-in-flight case resolves in ~50us instead of the
+# old fixed 1ms, while a genuinely stuck writer still costs at most
+# retries * BACKOFF_MAX before TimeoutError.
+BACKOFF_BASE = 5e-5
+BACKOFF_MAX = 0.01
+
+
+def _seq_publish(seq: np.memmap, section: dict, states: dict,
+                 crc: np.memmap | None = None,
+                 order: list[str] | None = None,
+                 role: str = "worker") -> None:
+    # parity self-heal: an odd seq here means a prior publisher died (or
+    # injected-crashed) mid-publish — we are already "in flight", so don't
+    # flip again; completing this publish returns the section to even with
+    # fully consistent contents
+    if int(seq[0]) % 2 == 0:
+        seq[0] += 1          # odd: write in flight
     seq.flush()
+    # role tags who is publishing: worker-side fault classes (torn/stuck/
+    # corrupt/kill/slow) only target "worker" publishes — daemon failures
+    # are modeled by the agg:* crash schedule, not by tearing the global
+    # view's own seqlocked publish
+    faults.fire("shm:publish_begin", role=role)
     for name, st in states.items():
         if name not in section:
             continue
         for field, arr in st.items():
+            faults.fire("shm:publish_field", map=name, field=field,
+                        role=role)
             section[name][field][...] = np.asarray(arr)
+    if crc is not None:
+        # recomputed from SECTION content (not `states`): maps skipped
+        # this publish keep a checksum matching what is actually on disk
+        for i, name in enumerate(order):
+            crc[i] = _crc_of(section[name])
+        crc.flush()
+    faults.fire("shm:publish_commit", section=section, role=role)
     seq[0] += 1          # even: consistent
     seq.flush()
 
 
-def _seq_snapshot(seq: np.memmap, section: dict, name: str,
-                  retries: int) -> tuple[dict, int, int]:
+def _seq_snapshot(seq: np.memmap, section: dict, name: str, retries: int,
+                  backoff_base: float = BACKOFF_BASE,
+                  backoff_max: float = BACKOFF_MAX,
+                  crc: np.memmap | None = None,
+                  crc_idx: int | None = None) -> tuple[dict, int, int]:
     """Returns (state, seq_observed, retries_used). A successful read always
-    observes an EVEN sequence number, unchanged across the copy."""
+    observes an EVEN sequence number, unchanged across the copy, and (when
+    the section carries checksums) a payload matching the publisher's CRC.
+    Retries back off exponentially from backoff_base to backoff_max."""
+    faults.fire("shm:snapshot_begin", name=name)
+    delay = backoff_base
     for attempt in range(retries):
         s0 = int(seq[0])
         if s0 % 2 == 0:
             out = {f: np.array(a) for f, a in section[name].items()}
+            want = int(crc[crc_idx]) if crc is not None else None
             if int(seq[0]) == s0:
+                # seq 0 = never published: the zeroed crc array is not the
+                # crc of the zeroed section, so validation starts at the
+                # first real publish
+                if want is not None and s0 > 0 and _crc_of(out) != want:
+                    raise SnapshotCorruption(
+                        f"{name}: checksum mismatch at seq {s0}")
                 return out, s0, attempt
-        time.sleep(0.001)
+        time.sleep(delay)
+        delay = min(delay * 2, backoff_max)
     raise TimeoutError("seqlock retry budget exceeded")
 
 
@@ -157,6 +239,11 @@ class ShmRegion:
     reqseq: np.memmap
     worker_id: str | None = None
     base: str = ""      # section base dir: root, or root/workers/<wid>
+    crc: np.memmap | None = None   # device-section checksums (sorted names)
+
+    @property
+    def _order(self) -> list[str]:
+        return sorted(s.name for s in self.specs)
 
     # ---------------------------------------------------------------- create
     @staticmethod
@@ -217,6 +304,9 @@ class ShmRegion:
             seq[0] = 1
             seq.flush()
         device = _create_section(os.path.join(base, "device"), specs)
+        # checksums (re-)zeroed inside the same odd window; seq restarting
+        # at 0 tells readers validation begins at the first publish
+        crc = _crc_create(os.path.join(base, "device"), len(specs))
         seq[0] = 0
         seq.flush()
         # control-queue reset under the same flock _queue_request takes,
@@ -233,13 +323,17 @@ class ShmRegion:
             reqseq.flush()
             _atomic_json(os.path.join(base, "control", "requests.json"), [])
         if worker_id is not None:
-            # liveness + restart detection for the aggregation engine
+            # liveness + restart detection for the aggregation engine.
+            # pid_start (the kernel's process start tick) distinguishes THIS
+            # process from a later one the OS handed the same pid — the
+            # pid-reuse hazard in dead-worker harvest
             _atomic_json(os.path.join(base, "worker.json"),
                          {"worker_id": str(worker_id), "pid": os.getpid(),
+                          "pid_start": _pid_start(os.getpid()),
                           "boot": uuid.uuid4().hex,
                           "started_at": time.time()})
         return ShmRegion(root, specs, host, device, seq, reqseq,
-                         worker_id=worker_id, base=base)
+                         worker_id=worker_id, base=base, crc=crc)
 
     # ---------------------------------------------------------------- attach
     @staticmethod
@@ -252,23 +346,36 @@ class ShmRegion:
         seq = _memmap(os.path.join(base, "device", ".seq.npy"), None, "r+")
         reqseq = _memmap(os.path.join(base, "control", ".reqseq.npy"),
                          None, "r+")
+        crc = _crc_attach(os.path.join(base, "device"), mode)
         return ShmRegion(root, specs, host, device, seq, reqseq,
-                         worker_id=worker_id, base=base)
+                         worker_id=worker_id, base=base, crc=crc)
 
     # ---------------------------------------------------------------- publish
     def publish_device(self, states: dict) -> None:
         """Seqlocked snapshot of (host-fetched) device map states."""
-        _seq_publish(self.seq, self.device, states)
+        _seq_publish(self.seq, self.device, states,
+                     crc=self.crc, order=self._order)
 
-    def snapshot_device(self, name: str, retries: int = 100) -> dict:
-        out, _, _ = _seq_snapshot(self.seq, self.device, name, retries)
+    def snapshot_device(self, name: str, retries: int = 100,
+                        backoff_base: float = BACKOFF_BASE,
+                        backoff_max: float = BACKOFF_MAX) -> dict:
+        out, _, _ = self.snapshot_device_meta(
+            name, retries=retries, backoff_base=backoff_base,
+            backoff_max=backoff_max)
         return out
 
-    def snapshot_device_meta(self, name: str,
-                             retries: int = 100) -> tuple[dict, int, int]:
+    def snapshot_device_meta(self, name: str, retries: int = 100,
+                             backoff_base: float = BACKOFF_BASE,
+                             backoff_max: float = BACKOFF_MAX,
+                             ) -> tuple[dict, int, int]:
         """(state, seq_observed, retries_used) — the torn-read test surface:
         seq_observed is always even on a successful read."""
-        return _seq_snapshot(self.seq, self.device, name, retries)
+        return _seq_snapshot(
+            self.seq, self.device, name, retries,
+            backoff_base=backoff_base, backoff_max=backoff_max,
+            crc=self.crc,
+            crc_idx=self._order.index(name) if self.crc is not None
+            else None)
 
     # ---------------------------------------------------------------- progs
     def publish_program(self, obj_json: str, name: str) -> None:
@@ -340,21 +447,45 @@ def worker_info(root: str, worker_id: str) -> dict:
         return json.load(f)
 
 
-def worker_alive(root: str, worker_id: str) -> bool:
-    """A worker is alive iff the pid it registered still exists. (Pid reuse
-    is acceptable noise for a monitoring plane; a stale seqlock additionally
-    demotes a worker to 'stale' in the aggregator, see daemon.Aggregator.)"""
+def _pid_start(pid: int) -> str | None:
+    """The kernel's start tick for `pid` (/proc/<pid>/stat field 22) — a
+    (pid, start) pair names one process incarnation uniquely, so pid reuse
+    after a worker's death is detectable. None where /proc is unreadable
+    (worker_alive falls back to the plain existence check)."""
     try:
-        pid = int(worker_info(root, worker_id)["pid"])
+        with open(f"/proc/{pid}/stat", "rb") as f:
+            stat = f.read().decode("latin-1")
+        # comm may contain spaces/parens: fields resume after the LAST ')'
+        rest = stat[stat.rindex(")") + 2:].split()
+        return rest[19]          # field 22, 1-indexed
+    except (OSError, ValueError, IndexError):
+        return None
+
+
+def worker_alive(root: str, worker_id: str) -> bool:
+    """A worker is alive iff the pid it registered still exists AND (where
+    /proc is readable) still names the same process incarnation: a recycled
+    pid has a different start tick, so a dead worker whose pid the OS
+    handed to an unrelated process is correctly reported dead. A stale
+    seqlock additionally demotes a worker to 'stale' in the aggregator,
+    see daemon.Aggregator."""
+    try:
+        info = worker_info(root, worker_id)
+        pid = int(info["pid"])
     except (OSError, ValueError, KeyError):
         return False
     try:
         os.kill(pid, 0)
-        return True
     except ProcessLookupError:
         return False
     except PermissionError:      # exists, owned by someone else
-        return True
+        pass
+    registered = info.get("pid_start")
+    if registered is not None:
+        current = _pid_start(pid)
+        if current is not None and current != registered:
+            return False         # pid reused by a different process
+    return True
 
 
 def _queue_request(base: str, req: dict, reqseq=None) -> None:
@@ -403,6 +534,11 @@ class GlobalView:
     specs: list[MapSpec]
     section: dict
     seq: np.memmap
+    crc: np.memmap | None = None
+
+    @property
+    def _order(self) -> list[str]:
+        return sorted(s.name for s in self.specs)
 
     @staticmethod
     def _dir(root: str) -> str:
@@ -413,6 +549,7 @@ class GlobalView:
         specs = read_meta_specs(root) if specs is None else specs
         d = GlobalView._dir(root)
         seq_path = os.path.join(d, ".seq.npy")
+        order = sorted(s.name for s in specs)
         if os.path.exists(seq_path):
             # an aggregator restart over a published section: readers may
             # hold these very mmaps, so the reset must happen UNDER the
@@ -425,13 +562,20 @@ class GlobalView:
             for name in section:
                 for arr in section[name].values():
                     arr[...] = 0
+            # seq continues > 0, so readers WILL validate: the checksums
+            # must match the zeroed payload, still inside the odd window
+            crc = _crc_create(d, len(specs))
+            for i, name in enumerate(order):
+                crc[i] = _crc_of(section[name])
+            crc.flush()
             seq[0] += 1                    # even: consistent zero state
             seq.flush()
-            return GlobalView(root, specs, section, seq)
+            return GlobalView(root, specs, section, seq, crc=crc)
         section = _create_section(d, specs)
+        crc = _crc_create(d, len(specs))
         seq = _memmap(seq_path, (1,), "w+")
         seq[0] = 0
-        return GlobalView(root, specs, section, seq)
+        return GlobalView(root, specs, section, seq, crc=crc)
 
     @staticmethod
     def attach(root: str, mode: str = "r") -> "GlobalView":
@@ -440,7 +584,8 @@ class GlobalView:
         section = _attach_section(d, specs, mode)
         seq = _memmap(os.path.join(d, ".seq.npy"), None,
                       "r+" if mode != "r" else "r")
-        return GlobalView(root, specs, section, seq)
+        return GlobalView(root, specs, section, seq,
+                          crc=_crc_attach(d, mode))
 
     @staticmethod
     def exists(root: str) -> bool:
@@ -448,10 +593,14 @@ class GlobalView:
                                            ".seq.npy"))
 
     def publish(self, states: dict) -> None:
-        _seq_publish(self.seq, self.section, states)
+        _seq_publish(self.seq, self.section, states,
+                     crc=self.crc, order=self._order, role="global")
 
     def snapshot(self, name: str, retries: int = 100) -> dict:
-        out, _, _ = _seq_snapshot(self.seq, self.section, name, retries)
+        out, _, _ = _seq_snapshot(
+            self.seq, self.section, name, retries, crc=self.crc,
+            crc_idx=self._order.index(name) if self.crc is not None
+            else None)
         return out
 
     def publish_status(self, status: dict) -> None:

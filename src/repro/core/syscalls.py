@@ -36,12 +36,28 @@ SYSCALL_IDS = {
 }
 
 
+def _signed64(v: int) -> int:
+    """The VM keeps registers as u64; override values round-trip through
+    that, so a filter injecting -EIO hands back 2^64-5. Interpret override
+    return codes as signed 64-bit, like the kernel does."""
+    v &= (1 << 64) - 1
+    return v - (1 << 64) if v >= (1 << 63) else v
+
+
 @dataclass
 class SyscallResult:
     value: object          # real impl return (None if overridden/skipped)
     ret_code: int          # integer code seen by exit probes
     overridden: bool
     override_val: int = 0
+
+    @property
+    def fault(self) -> bool:
+        """Convention for callers: a NEGATIVE override return code is an
+        injected transient fault (-errno) — retry with bounds, then
+        degrade. A non-negative override is a policy veto — skip
+        immediately, no retry."""
+        return self.overridden and self.ret_code < 0
 
 
 @dataclass
@@ -98,7 +114,7 @@ class SyscallTable:
 
         ov = self._run_hooks((sys_name, "enter"), ctx)
         if ov is not None:
-            rc = ov.override_val
+            rc = _signed64(ov.override_val)
             self._run_hooks((sys_name, "exit"), [sid, *a, rc])
             return SyscallResult(value=None, ret_code=rc, overridden=True,
                                  override_val=rc)

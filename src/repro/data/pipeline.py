@@ -47,10 +47,12 @@ def _lm_sequences(seed: int, step: int, rows: int, cols: int,
 
 class SyntheticDataset:
     def __init__(self, cfg: ModelConfig, shape: ShapeConfig,
-                 tcfg: TrainConfig, seed: int = 0, runtime=None):
+                 tcfg: TrainConfig, seed: int = 0, runtime=None,
+                 fault_retries: int = 3):
         self.cfg, self.shape, self.tcfg = cfg, shape, tcfg
         self.seed = seed
         self.runtime = runtime
+        self.fault_retries = fault_retries
         self.step = 0           # checkpointable cursor
 
     def state(self) -> dict:
@@ -94,14 +96,22 @@ class SyntheticDataset:
         return batch
 
     def next(self) -> dict | None:
-        """Returns the next batch, or None if an eBPF filter skipped it."""
+        """Returns the next batch, or None if an eBPF filter skipped it.
+
+        A NEGATIVE override code (-errno) is a transient read fault: the
+        same fetch is retried up to fault_retries times before degrading
+        to a skip. A non-negative override is a policy veto: the batch is
+        skipped immediately (no retry)."""
         step = self.step
         self.step += 1
         if self.runtime is None:
             return self._make(step)
-        res = self.runtime.syscalls.invoke(
-            "sys_data_fetch", [step, self.shape.global_batch],
-            impl=lambda: self._make(step))
-        if res.overridden:
-            return None
-        return res.value
+        for _ in range(self.fault_retries + 1):
+            res = self.runtime.syscalls.invoke(
+                "sys_data_fetch", [step, self.shape.global_batch],
+                impl=lambda: self._make(step))
+            if not res.overridden:
+                return res.value
+            if not res.fault:
+                return None          # veto: skip this batch
+        return None                  # persistent fault: degrade to skip

@@ -19,18 +19,22 @@ import numpy as np
 @dataclass
 class HeartbeatMonitor:
     """Tracks per-host liveness. beat() on every step; dead() lists hosts
-    whose last beat is older than `timeout_s`."""
+    whose last beat is older than `timeout_s`. Hosts are integer ranks
+    when num_hosts > 0; with num_hosts=0 the monitor tracks whatever ids
+    have ever beaten (the fleet daemon's string worker ids)."""
     num_hosts: int
     timeout_s: float = 60.0
-    last: dict[int, float] = field(default_factory=dict)
+    last: dict = field(default_factory=dict)
     clock: object = time.monotonic
 
-    def beat(self, host: int, t: float | None = None):
+    def beat(self, host, t: float | None = None):
         self.last[host] = self.clock() if t is None else t
 
-    def dead(self, now: float | None = None) -> list[int]:
+    def dead(self, now: float | None = None) -> list:
         now = self.clock() if now is None else now
-        return [h for h in range(self.num_hosts)
+        hosts = (range(self.num_hosts) if self.num_hosts
+                 else sorted(self.last))
+        return [h for h in hosts
                 if now - self.last.get(h, -1e30) > self.timeout_s]
 
 

@@ -27,7 +27,7 @@ def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
                  ckpt_dir: str | None = None, save_every: int = 0,
                  probe_mode: str = "scan", seq_len: int = 64,
                  batch: int = 8, microbatch: int = 0, log_every: int = 10,
-                 on_step=None):
+                 on_step=None, max_data_skips: int = 1000):
     from repro.configs import registry
     from repro.configs.base import ShapeConfig, TrainConfig
     from repro.data.pipeline import SyntheticDataset
@@ -58,6 +58,7 @@ def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
 
     history = []
     t0 = time.time()
+    skips = 0          # consecutive vetoed/faulted batches: bounded spin
     while int(state["step"]) < steps:
         if runtime is not None:
             runtime.poll_control()          # daemon injection point
@@ -67,8 +68,14 @@ def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
             runtime.syscalls.invoke("sys_step_begin", [int(state["step"])],
                                     impl=lambda: None)
         batch_np = data.next()
-        if batch_np is None:
-            continue                         # vetoed by eBPF filter
+        if batch_np is None:                 # vetoed/faulted batch
+            skips += 1
+            if max_data_skips and skips >= max_data_skips:
+                raise RuntimeError(
+                    f"data pipeline yielded no batch {skips} times in a "
+                    f"row — a filter is vetoing every fetch")
+            continue
+        skips = 0
         step_fn = get_step_fn()              # re-jits only on attach change
         state, metrics = step_fn(state, batch_np)
         history.append({k: float(np.asarray(v)) for k, v in metrics.items()})

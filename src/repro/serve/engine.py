@@ -52,17 +52,24 @@ class ServeEngine:
         self.step_count = 0
 
     # ------------------------------------------------------------- admission
-    def _admit(self, req: Request) -> bool:
+    def _admit(self, req: Request, fault_retries: int = 3) -> bool:
+        """Admission faults vs vetoes (DESIGN.md §11): a NEGATIVE override
+        code from the sys_serve_admit filter is a transient fault — retried
+        up to fault_retries times before the request degrades to rejected.
+        A non-negative override is a policy rejection: final immediately."""
         if self.runtime is None:
             return True
-        res = self.runtime.syscalls.invoke(
-            "sys_serve_admit", [req.rid, len(req.prompt), req.max_new],
-            impl=lambda: True)
-        if res.overridden:
-            req.rejected = True
-            req.done = True
-            return False
-        return True
+        for _ in range(fault_retries + 1):
+            res = self.runtime.syscalls.invoke(
+                "sys_serve_admit", [req.rid, len(req.prompt), req.max_new],
+                impl=lambda: True)
+            if not res.overridden:
+                return True
+            if not res.fault:
+                break                # policy veto: final
+        req.rejected = True
+        req.done = True
+        return False
 
     def _prefill_slot(self, slot: int, req: Request):
         """Single-request prefill into its slot (row-batched caches)."""

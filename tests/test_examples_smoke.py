@@ -46,3 +46,14 @@ def test_fleet_agg_multiprocess(tmp_path):
     out = _run_example("fleet_agg.py", tmp_path)
     assert "global total=768 (= 3 workers x 256 events)" in out
     assert "OK: global histogram is the exact bin-wise sum" in out
+
+
+def test_chaos_drill_multiprocess(tmp_path):
+    """3-worker fleet, one SIGKILLed mid-publish, daemon crashed at an
+    injected boundary and restarted from the fold journal; global view
+    converges to the oracle (DESIGN.md §11)."""
+    out = _run_example("chaos_drill.py", tmp_path)
+    assert "SIGKILLed mid-publish (seqlock left odd)" in out
+    assert "daemon restarted from the fold journal" in out
+    assert "OK: global view converged to the oracle" in out
+    assert "OK: chaos drill survived worker SIGKILL + daemon crash" in out

@@ -1,0 +1,625 @@
+"""Chaos matrix for the fleet plane (DESIGN.md §11).
+
+Every FaultPlan fault class gets a test where the injected fault actually
+FIRES (asserted via the plan's counters) and the final global view is still
+bit-identical to the no-fault oracle — reusing the differential harness
+from test_shm_merge_differential. The aggregator-crash tests kill the
+daemon at seeded points and assert the journal-recovered successor never
+double-folds or loses a delta; the health tests walk a worker through
+killed / stalled / recovered and check the `fleet health` CLI surfaces the
+transitions.
+
+Single-process tests carry the `chaos` marker (tier-1 + CI chaos job);
+the multi-process SIGKILL scenarios are `chaos + slow`.
+"""
+import json
+import multiprocessing as mp
+import os
+import signal
+import subprocess
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import daemon as D, faults as F, maps as M, shm as SH
+
+from test_shm_merge_differential import (
+    SPECS, apply_event, assert_global_matches_oracle, gen_tape,
+    oracle_states, _mark_worker_dead)
+
+pytestmark = pytest.mark.chaos
+
+
+# --------------------------------------------------------------------------
+# fleet scaffolding: the differential harness's run_fleet, but with a
+# FaultPlan installed — worker publishes may be abandoned (TornPublish),
+# the daemon may crash (InjectedCrash, restarted from the journal)
+# --------------------------------------------------------------------------
+
+def _make_fleet(root, n_workers):
+    regions = {w: SH.ShmRegion.create(root, SPECS, worker_id=f"w{w}")
+               for w in range(n_workers)}
+    states = {w: M.init_states(SPECS, np) for w in range(n_workers)}
+    return regions, states
+
+
+def _fast_cfg(**kw):
+    """Tight retry budget + microsecond backoff: a stuck-odd worker costs
+    the cycle ~1ms instead of the production half-second demotion window."""
+    kw.setdefault("snapshot_retries", 8)
+    kw.setdefault("backoff_base", 1e-5)
+    kw.setdefault("backoff_max", 1e-4)
+    return D.AggregatorConfig(**kw)
+
+
+def _chaos_fleet(root, tape, n_workers, plan, rounds=4, config=None):
+    """Run the fleet under an installed FaultPlan. Worker publishes hit by
+    torn_publish/stuck_odd are abandoned mid-flight (seqlock left odd) and
+    NOT retried within the round — the next round's publish self-heals.
+    A daemon crash replaces the Aggregator with a fresh instance (journal
+    recovery). Ends with a fault-free convergence round."""
+    config = config or _fast_cfg()
+    regions, states = _make_fleet(root, n_workers)
+    per_worker = {w: [t for t in tape if t[1] == w]
+                  for w in range(n_workers)}
+    chunks = {w: np.array_split(np.arange(len(per_worker[w])), rounds)
+              for w in range(n_workers)}
+    agg = D.Aggregator(root, config=config)
+    restarts = 0
+    with F.plan(plan):
+        for r in range(rounds):
+            for w in range(n_workers):
+                for i in chunks[w][r]:
+                    step, _, _, ev = per_worker[w][i]
+                    apply_event(states[w], ev, step)
+                try:
+                    regions[w].publish_device(states[w])
+                except F.TornPublish:
+                    pass              # abandoned publish: seqlock stays odd
+            try:
+                agg.poll_once()
+            except F.InjectedCrash:
+                agg = D.Aggregator(root, config=config)   # journal restart
+                restarts += 1
+    # convergence: clean republish (self-heals any stuck-odd seqlock and
+    # rewrites any corrupted section) + two clean polls
+    for w in range(n_workers):
+        regions[w].publish_device(states[w])
+    agg.poll_once()
+    status = agg.poll_once()
+    return agg, status, restarts
+
+
+# --------------------------------------------------------------------------
+# per-class: the fault fires AND the view converges to the oracle
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_torn_publish_fires_and_converges(tmp_path, seed):
+    root = str(tmp_path / "shm")
+    tape = gen_tape(np.random.default_rng(seed), 2, n_events=60)
+    plan = F.FaultPlan(seed=seed, rates={"torn_publish": 0.6})
+    _chaos_fleet(root, tape, 2, plan)
+    assert plan.counters["torn_publish"] >= 1
+    assert_global_matches_oracle(root, oracle_states(tape))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_stuck_odd_fires_and_converges(tmp_path, seed):
+    root = str(tmp_path / "shm")
+    tape = gen_tape(np.random.default_rng(10 + seed), 2, n_events=60)
+    plan = F.FaultPlan(seed=seed, rates={"stuck_odd": 0.5})
+    agg, status, _ = _chaos_fleet(root, tape, 2, plan)
+    assert plan.counters["stuck_odd"] >= 1
+    assert_global_matches_oracle(root, oracle_states(tape))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_corrupt_snapshot_detected_skipped_and_converges(tmp_path, seed):
+    """Scribbled bytes land AFTER the CRC write: the section has a
+    consistent (even, stable) seqlock but a checksum mismatch. The
+    aggregator must skip the worker for the cycle (corrupt_skipped), keep
+    its baseline, and fold the clean republish later — never the garbage."""
+    root = str(tmp_path / "shm")
+    tape = gen_tape(np.random.default_rng(20 + seed), 2, n_events=60)
+    plan = F.FaultPlan(seed=seed, rates={"corrupt_snapshot": 0.7})
+    agg, status, _ = _chaos_fleet(root, tape, 2, plan)
+    assert plan.counters["corrupt_snapshot"] >= 1
+    assert sum(agg.corrupt_skipped.values()) >= 1
+    assert status["corrupt_skipped"] == agg.corrupt_skipped
+    assert_global_matches_oracle(root, oracle_states(tape))
+
+
+def test_slow_worker_fires_and_converges(tmp_path):
+    root = str(tmp_path / "shm")
+    tape = gen_tape(np.random.default_rng(30), 2, n_events=40)
+    plan = F.FaultPlan(seed=3, rates={"slow_worker": 0.8}, slow_s=0.0005)
+    _chaos_fleet(root, tape, 2, plan)
+    assert plan.counters["slow_worker"] >= 1
+    assert_global_matches_oracle(root, oracle_states(tape))
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_mixed_fault_matrix_converges(tmp_path, seed):
+    """All in-process fault classes at once, daemon crashes included."""
+    root = str(tmp_path / "shm")
+    tape = gen_tape(np.random.default_rng(40 + seed), 3, n_events=90)
+    plan = F.FaultPlan(
+        seed=seed, crash_at=7 + 3 * seed,
+        rates={"torn_publish": 0.25, "stuck_odd": 0.15,
+               "corrupt_snapshot": 0.25, "slow_worker": 0.1},
+        slow_s=0.0003)
+    _, _, restarts = _chaos_fleet(root, tape, 3, plan, rounds=5)
+    assert restarts >= 1 and plan.counters["daemon_crash"] >= 1
+    assert sum(plan.counters.values()) >= 2
+    assert_global_matches_oracle(root, oracle_states(tape))
+
+
+# --------------------------------------------------------------------------
+# aggregator crash + journal recovery: never double-fold, never lose
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", list(range(8)))
+def test_aggregator_crash_restart_bit_identical(tmp_path, seed):
+    """Crash the daemon at a seeded agg:* boundary point (cycle begin,
+    pre/post merge, pre/post publish, pre/post journal) and restart it from
+    the fold journal: the recovered global view must stay bit-identical to
+    the oracle across all 5 map kinds — no lost delta, no double fold."""
+    rng = np.random.default_rng(100 + seed)
+    root = str(tmp_path / "shm")
+    tape = gen_tape(rng, 3, n_events=80)
+    # ~11 agg points per cycle x 5 rounds: [1, 30] always fires
+    crash_at = int(rng.integers(1, 30))
+    plan = F.FaultPlan(seed=seed, crash_at=crash_at)
+    _, _, restarts = _chaos_fleet(root, tape, 3, plan, rounds=5)
+    assert restarts == 1 and plan.counters["daemon_crash"] == 1
+    assert_global_matches_oracle(root, oracle_states(tape))
+
+
+def test_crash_between_publish_and_journal_no_double_fold(tmp_path):
+    """The classic double-fold hazard: the global view was published but
+    the journal write didn't happen (crash at agg:pre_journal). The
+    restarted daemon re-folds the same delta from the PREVIOUS journal's
+    baseline — cumulative snapshots make the re-fold idempotent, so the
+    published value never double-counts."""
+    root = str(tmp_path / "shm")
+    regions, states = _make_fleet(root, 1)
+    agg = D.Aggregator(root)
+    states[0]["arr"]["values"][2] = 10
+    regions[0].publish_device(states[0])
+    agg.poll_once()                       # journaled baseline: arr[2]=10
+
+    states[0]["arr"]["values"][2] = 17    # +7 delta
+    regions[0].publish_device(states[0])
+    # one-worker publishing cycle fires, in order: cycle_begin, pre_merge,
+    # post_merge, pre_publish, post_publish, pre_journal, cycle_end —
+    # the 6th agg point is exactly the publish/journal gap
+    plan = F.FaultPlan(seed=0, crash_at=6)
+    with F.plan(plan):
+        with pytest.raises(F.InjectedCrash):
+            agg.poll_once()
+    assert plan.points.get("agg:post_publish", 0) == 1
+    assert plan.points.get("agg:pre_journal", 0) == 1
+    # published view already holds 17; the journal still has baseline 10
+    g = SH.GlobalView.attach(root)
+    assert int(g.snapshot("arr")["values"][2]) == 17
+    agg2 = D.Aggregator(root)             # journal restart
+    agg2.poll_once()
+    agg2.poll_once()
+    assert int(g.snapshot("arr")["values"][2]) == 17   # NOT 24 (10+7+7)
+
+
+def test_journal_restart_without_new_publish_keeps_view(tmp_path):
+    """Restart with NO worker activity: the re-published global view must
+    reproduce the journaled accumulators exactly (summary/hist/hash/rb)."""
+    root = str(tmp_path / "shm")
+    tape = gen_tape(np.random.default_rng(55), 2, n_events=70)
+    regions, states = _make_fleet(root, 2)
+    per_worker = {w: [t for t in tape if t[1] == w] for w in range(2)}
+    agg = D.Aggregator(root)
+    for w in range(2):
+        for step, _, _, ev in per_worker[w]:
+            apply_event(states[w], ev, step)
+        regions[w].publish_device(states[w])
+    agg.poll_once()
+    agg2 = D.Aggregator(root)             # fresh process, journal only
+    agg2.poll_once()
+    assert_global_matches_oracle(root, oracle_states(tape))
+
+
+def test_journal_disabled_still_correct_fresh(tmp_path):
+    cfg = D.AggregatorConfig(journal=False)
+    root = str(tmp_path / "shm")
+    tape = gen_tape(np.random.default_rng(66), 2, n_events=50)
+    plan = F.FaultPlan(seed=0)            # no faults: plain pass-through
+    _chaos_fleet(root, tape, 2, plan, config=cfg)
+    assert not os.path.exists(os.path.join(root, "global", "journal.json"))
+    assert_global_matches_oracle(root, oracle_states(tape))
+
+
+# --------------------------------------------------------------------------
+# health state machine + fleet health CLI
+# --------------------------------------------------------------------------
+
+def _transitions(agg, wid):
+    return [(fr, to, why) for _, fr, to, why in
+            agg.health[wid]["transitions"]]
+
+
+def test_health_killed_stalled_recovered(tmp_path):
+    root = str(tmp_path / "shm")
+    regions, states = _make_fleet(root, 3)
+    cfg = D.AggregatorConfig(snapshot_retries=3, degraded_after=2,
+                             quarantine_after=2)
+    agg = D.Aggregator(root, config=cfg)
+    for w in range(3):
+        states[w]["arr"]["values"][w] = w + 1
+        regions[w].publish_device(states[w])
+    status = agg.poll_once()
+    assert all(status["health"][f"w{w}"]["state"] == D.HEALTHY
+               for w in range(3))
+
+    # w0: killed — pid gone at the next poll
+    _mark_worker_dead(root, "w0")
+    # w1: stalled mid-publish — seqlock stuck odd
+    regions[1].seq[0] += 1
+    status = agg.poll_once()
+    assert status["health"]["w0"]["state"] == D.DEAD
+    assert ("HEALTHY", "DEAD", "pid_gone") in _transitions(agg, "w0")
+    assert status["health"]["w1"]["state"] == D.STALE
+    assert ("HEALTHY", "STALE", "seqlock_timeout") in _transitions(agg, "w1")
+
+    # stalled long enough: quarantined (probed with a reduced budget)
+    status = agg.poll_once()
+    assert status["health"]["w1"]["quarantined"]
+    assert any(why == "quarantined" for _, _, why in _transitions(agg, "w1"))
+
+    # w1 recovers: publish completes (parity self-heal), seq advances
+    states[1]["arr"]["values"][1] = 20
+    regions[1].publish_device(states[1])
+    status = agg.poll_once()
+    assert status["health"]["w1"]["state"] == D.HEALTHY
+    assert not status["health"]["w1"]["quarantined"]
+    whys = [why for _, _, why in _transitions(agg, "w1")]
+    assert "readmitted" in whys and "recovered" in whys
+    g = SH.GlobalView.attach(root)
+    assert int(g.snapshot("arr")["values"][1]) == 20
+
+
+def test_health_degraded_on_no_seq_advance(tmp_path):
+    root = str(tmp_path / "shm")
+    regions, states = _make_fleet(root, 1)
+    cfg = D.AggregatorConfig(degraded_after=3)
+    agg = D.Aggregator(root, config=cfg)
+    regions[0].publish_device(states[0])
+    agg.poll_once()
+    for _ in range(3):                    # idle worker: no new publishes
+        status = agg.poll_once()
+    assert status["health"]["w0"]["state"] == D.DEGRADED
+    assert ("HEALTHY", "DEGRADED", "no_seq_advance") in \
+        _transitions(agg, "w0")
+    regions[0].publish_device(states[0])  # any publish advances seq
+    status = agg.poll_once()
+    assert status["health"]["w0"]["state"] == D.HEALTHY
+
+
+def test_health_new_incarnation_readmits_dead_worker(tmp_path):
+    root = str(tmp_path / "shm")
+    regions, states = _make_fleet(root, 1)
+    regions[0].publish_device(states[0])
+    agg = D.Aggregator(root)
+    agg.poll_once()
+    _mark_worker_dead(root, "w0")
+    agg.poll_once()
+    assert agg.health["w0"]["state"] == D.DEAD
+    # same wid, new boot id: restart of the trainer process
+    region2 = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    st["arr"]["values"][5] = 3
+    region2.publish_device(st)
+    status = agg.poll_once()
+    assert status["health"]["w0"]["state"] == D.HEALTHY
+    assert ("DEAD", "HEALTHY", "new_incarnation") in _transitions(agg, "w0")
+
+
+def test_fleet_health_cli(tmp_path, capsys):
+    root = str(tmp_path / "shm")
+    regions, states = _make_fleet(root, 2)
+    agg = D.Aggregator(root, config=D.AggregatorConfig(snapshot_retries=3))
+    for w in range(2):
+        regions[w].publish_device(states[w])
+    agg.poll_once()
+    _mark_worker_dead(root, "w1")
+    agg.poll_once()
+
+    rc = D.main([root, "fleet", "health"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "w0" in out and "HEALTHY" in out
+    assert "w1" in out and "DEAD" in out
+    assert "pid_gone" in out              # transition reason surfaced
+
+    rc = D.main([root, "fleet", "health", "--json"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    doc = json.loads(out)
+    assert doc["health"]["w0"]["state"] == D.HEALTHY
+    assert doc["health"]["w1"]["state"] == D.DEAD
+    assert doc["health"]["w1"]["transitions"][-1][3] == "pid_gone"
+
+
+def test_fleet_health_cli_no_daemon(tmp_path, capsys):
+    """fleet health before any aggregator ran: explicit error, rc != 0."""
+    root = str(tmp_path / "shm")
+    os.makedirs(root, exist_ok=True)
+    rc = D.main([root, "fleet", "health"])
+    assert rc != 0
+    assert "no aggregated fleet" in capsys.readouterr().err.lower()
+
+
+# --------------------------------------------------------------------------
+# pid reuse
+# --------------------------------------------------------------------------
+
+def test_pid_reuse_not_mistaken_for_live_worker(tmp_path):
+    """The OS recycled the dead worker's pid to an unrelated LIVE process
+    (here: this very test process). Identity = (pid, start tick), so the
+    kill-0 liveness probe alone would be fooled; the start-tick check must
+    harvest the worker as dead and keep its merged contribution."""
+    root = str(tmp_path / "shm")
+    regions, states = _make_fleet(root, 1)
+    states[0]["arr"]["values"][4] = 9
+    regions[0].publish_device(states[0])
+    agg = D.Aggregator(root)
+    status = agg.poll_once()
+    assert status["alive"] == ["w0"]
+
+    # the imposter must be a DIFFERENT live process: the in-process harness
+    # registered this test process as the worker, so its own pid would
+    # carry the matching start tick
+    imposter = subprocess.Popen(["sleep", "60"])
+    plan = F.FaultPlan(seed=0)
+    try:
+        F.simulate_pid_reuse(root, "w0", imposter.pid, plan)
+        assert plan.counters["pid_reuse"] == 1
+        status = agg.poll_once()
+    finally:
+        imposter.kill()
+        imposter.wait()
+    assert status["dead"] == ["w0"] and status["alive"] == []
+    g = SH.GlobalView.attach(root)
+    assert int(g.snapshot("arr")["values"][4]) == 9    # contribution stays
+
+
+@pytest.mark.slow
+def test_pid_reuse_with_respawned_process(tmp_path):
+    """Same hazard with a REAL recycled pid: a live subprocess whose pid
+    replaces the registered worker's. Its /proc start tick differs from the
+    recorded one, so worker_alive must say dead."""
+    root = str(tmp_path / "shm")
+    regions, states = _make_fleet(root, 1)
+    regions[0].publish_device(states[0])
+    agg = D.Aggregator(root)
+    agg.poll_once()
+    imposter = subprocess.Popen(["sleep", "60"])
+    try:
+        F.simulate_pid_reuse(root, "w0", imposter.pid)
+        assert not SH.worker_alive(root, "w0")
+        status = agg.poll_once()
+        assert status["dead"] == ["w0"]
+    finally:
+        imposter.kill()
+        imposter.wait()
+
+
+def test_worker_alive_falls_back_without_pid_start(tmp_path):
+    """Regions written by older code have no pid_start: liveness degrades
+    to the kill-0 probe instead of rejecting every worker."""
+    root = str(tmp_path / "shm")
+    _make_fleet(root, 1)
+    p = os.path.join(root, "workers", "w0", "worker.json")
+    with open(p) as f:
+        info = json.load(f)
+    assert "pid_start" in info
+    del info["pid_start"]
+    with open(p, "w") as f:
+        json.dump(info, f)
+    assert SH.worker_alive(root, "w0")    # this process is alive
+
+
+# --------------------------------------------------------------------------
+# config: retry budget, backoff, coalescing back-pressure, rb_lost
+# --------------------------------------------------------------------------
+
+def test_seqlock_budget_and_backoff_configurable(tmp_path):
+    root = str(tmp_path / "shm")
+    regions, states = _make_fleet(root, 1)
+    regions[0].publish_device(states[0])
+    regions[0].seq[0] += 1                # stuck odd forever
+    cfg = D.AggregatorConfig(snapshot_retries=4, backoff_base=1e-5,
+                             backoff_max=1e-4)
+    agg = D.Aggregator(root, config=cfg)
+    t0 = time.monotonic()
+    status = agg.poll_once()
+    dt = time.monotonic() - t0
+    assert status["stale"] == ["w0"]
+    # 4 retries x <=1e-4s backoff (+ map count) stays far under a second;
+    # the old hardcoded budget at 1ms/retry would not
+    assert dt < 0.5
+
+
+def test_snapshot_backoff_is_bounded_exponential(tmp_path):
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    region.publish_device(M.init_states(SPECS, np))
+    region.seq[0] += 1
+    with pytest.raises(TimeoutError):
+        region.snapshot_device_meta("arr", retries=3, backoff_base=1e-5,
+                                    backoff_max=1e-4)
+
+
+def test_ringbuf_overrun_counted_as_lost(tmp_path):
+    """Back-pressure accounting: a worker emits more records between polls
+    than the ring holds; the overwritten-before-fold records are counted in
+    rb_lost rather than silently vanishing."""
+    root = str(tmp_path / "shm")
+    regions, states = _make_fleet(root, 1)
+    regions[0].publish_device(states[0])
+    agg = D.Aggregator(root)
+    agg.poll_once()                       # baseline: head 0
+    cap = next(s for s in SPECS if s.name == "rb").max_entries
+    n = cap + 9                           # 9 records fall off the ring
+    for i in range(n):
+        M.n_ringbuf_emit(states[0]["rb"], [0, 0, i])
+    regions[0].publish_device(states[0])
+    status = agg.poll_once()
+    assert status["rb_lost"]["rb"]["w0"] == 9
+    assert agg.rb_lost["rb"]["w0"] == 9
+
+
+def test_coalescing_skips_then_flushes(tmp_path):
+    """With coalesce_threshold=0 every busy cycle defers publishing until
+    publish_max_lag is reached (or the fleet goes idle) — and the deferred
+    deltas are NEVER dropped: the final view matches the oracle."""
+    root = str(tmp_path / "shm")
+    regions, states = _make_fleet(root, 1)
+    cfg = D.AggregatorConfig(coalesce_threshold=0, publish_max_lag=3)
+    agg = D.Aggregator(root, config=cfg)
+    regions[0].publish_device(states[0])
+    agg.poll_once()                       # first publish always goes out
+    g = SH.GlobalView.attach(root)
+    for i in range(2):                    # two busy cycles: both coalesced
+        states[0]["arr"]["values"][0] += 5
+        regions[0].publish_device(states[0])
+        status = agg.poll_once()
+    assert agg.coalesced_cycles == 2
+    assert status["coalesced_cycles"] == 2
+    assert int(g.snapshot("arr")["values"][0]) == 0    # deferred
+    status = agg.poll_once()              # idle cycle: pending lag flushes
+    assert int(g.snapshot("arr")["values"][0]) == 10   # nothing lost
+
+
+def test_coalescing_respects_max_lag(tmp_path):
+    root = str(tmp_path / "shm")
+    regions, states = _make_fleet(root, 1)
+    cfg = D.AggregatorConfig(coalesce_threshold=0, publish_max_lag=2)
+    agg = D.Aggregator(root, config=cfg)
+    regions[0].publish_device(states[0])
+    agg.poll_once()
+    g = SH.GlobalView.attach(root)
+    vals = []
+    for i in range(4):                    # busy every cycle
+        states[0]["arr"]["values"][0] += 1
+        regions[0].publish_device(states[0])
+        agg.poll_once()
+        vals.append(int(g.snapshot("arr")["values"][0]))
+    # lag cap 2: at least every second busy cycle publishes
+    assert vals[-1] >= 3 and agg.coalesced_cycles >= 1
+
+
+def test_aggregator_config_defaults_match_legacy(tmp_path):
+    """snapshot_retries passed positionally (legacy API) still wins over
+    the config default."""
+    root = str(tmp_path / "shm")
+    _make_fleet(root, 1)
+    agg = D.Aggregator(root, snapshot_retries=7)
+    assert agg.snapshot_retries == 7 and agg.config.snapshot_retries == 7
+    agg = D.Aggregator(root, config=D.AggregatorConfig(snapshot_retries=9))
+    assert agg.snapshot_retries == 9
+    # backoff defaults documented in shm.py flow through unchanged
+    cfg = D.AggregatorConfig()
+    assert cfg.backoff_base == SH.BACKOFF_BASE
+    assert cfg.backoff_max == SH.BACKOFF_MAX
+
+
+# --------------------------------------------------------------------------
+# heartbeats + stragglers (repro.ft wired into the daemon)
+# --------------------------------------------------------------------------
+
+def test_heartbeat_dead_after_idle_cycles(tmp_path):
+    root = str(tmp_path / "shm")
+    regions, states = _make_fleet(root, 2)
+    cfg = D.AggregatorConfig(heartbeat_timeout_cycles=2.0)
+    agg = D.Aggregator(root, config=cfg)
+    for w in range(2):
+        regions[w].publish_device(states[w])
+    agg.poll_once()
+    # w1 keeps publishing; w0 goes silent
+    for _ in range(4):
+        states[1]["arr"]["values"][0] += 1
+        regions[1].publish_device(states[1])
+        status = agg.poll_once()
+    assert "w0" in status["hb_dead"] and "w1" not in status["hb_dead"]
+
+
+def test_straggler_detection_from_step_times(tmp_path):
+    """Workers publish per-step wall times into a shared ARRAY map; the
+    daemon feeds them to repro.ft.detect_stragglers and degrades the slow
+    worker."""
+    specs = SPECS + [M.MapSpec("step_ms", M.MapKind.ARRAY, max_entries=8)]
+    root = str(tmp_path / "shm")
+    regions = {w: SH.ShmRegion.create(root, specs, worker_id=f"w{w}")
+               for w in range(3)}
+    states = {w: M.init_states(specs, np) for w in range(3)}
+    cfg = D.AggregatorConfig(step_time_map="step_ms", straggler_factor=1.5,
+                             straggler_min_samples=4)
+    agg = D.Aggregator(root, config=cfg)
+    for w in range(3):
+        # 6 recent step times in the live HOST map (what the sys_step_end
+        # probe writes); w2 is 3x slower than its peers
+        base = 300 if w == 2 else 100
+        regions[w].host["step_ms"]["values"][:6] = base
+        regions[w].publish_device(states[w])
+    status = agg.poll_once()
+    assert status["stragglers"] == ["w2"]
+    assert agg.health["w2"]["state"] == D.DEGRADED
+    assert any(why == "straggler" for _, _, why in _transitions(agg, "w2"))
+    assert agg.health["w0"]["state"] == D.HEALTHY
+
+
+# --------------------------------------------------------------------------
+# multi-process SIGKILL scenarios (chaos + slow)
+# --------------------------------------------------------------------------
+
+def _killed_worker_main(root, specs, counter_file):
+    """Worker that SIGKILLs itself mid-publish (3rd publish_begin) via a
+    FaultPlan; counters are flushed to counter_file before the kill."""
+    plan = F.FaultPlan(seed=0, kill_at=3, counter_file=counter_file)
+    F.install(plan)
+    region = SH.ShmRegion.create(root, specs, worker_id="victim")
+    st = M.init_states(specs, np)
+    i = 0
+    while True:
+        i += 1
+        st["arr"]["values"][0] = i
+        region.publish_device(st)         # 3rd call never returns
+
+
+@pytest.mark.slow
+def test_sigkill_mid_publish_detected_and_healed(tmp_path):
+    """A worker process SIGKILLed inside publish_device leaves the seqlock
+    odd (kill fires at publish_begin). The daemon must mark it stale (never
+    crash or surface half-written data), then harvest it as dead, keeping
+    its last consistent contribution."""
+    root = str(tmp_path / "shm")
+    counter_file = str(tmp_path / "counters.json")
+    ctx = mp.get_context("spawn")
+    p = ctx.Process(target=_killed_worker_main,
+                    args=(root, SPECS, counter_file))
+    p.start()
+    p.join(timeout=120)
+    assert p.exitcode == -signal.SIGKILL
+    with open(counter_file) as f:
+        counters = json.load(f)["counters"]
+    assert counters["kill_worker"] == 1
+
+    region = SH.ShmRegion.attach(root, mode="r", worker_id="victim")
+    assert int(region.seq[0]) % 2 == 1    # died mid-publish: seqlock odd
+
+    agg = D.Aggregator(root, config=D.AggregatorConfig(snapshot_retries=3))
+    status = agg.poll_once()
+    # dead harvest snapshots with the stuck-odd seqlock: the worker lands
+    # in dead (pid gone) and the half-publish contributes nothing
+    assert status["dead"] == ["victim"]
+    assert agg.health["victim"]["state"] == D.DEAD

@@ -174,9 +174,12 @@ def test_stale_seqlock_worker_skipped_not_crashed(tmp_path):
     assert status["stale"] == ["w0"]
     assert int(g.snapshot("arr")["values"][0]) == 5   # garbage never merged
 
-    # publish completes: worker rejoins, the now-consistent data merges
-    region.device["arr"]["values"][0] = 6
-    region.seq[0] += 1
+    # publish completes: worker rejoins, the now-consistent data merges.
+    # publish_device self-heals the stuck-odd parity (no extra odd flip)
+    # and rewrites the section checksums over the recovered content
+    st["arr"]["values"][0] = 6
+    region.publish_device(st)
+    assert int(region.seq[0]) % 2 == 0
     status = agg.poll_once()
     assert status["stale"] == []
     assert int(g.snapshot("arr")["values"][0]) == 6

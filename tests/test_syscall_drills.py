@@ -1,0 +1,237 @@
+"""Syscall-override failure drills (DESIGN.md §11): the paper's syscall
+filtering turned into a self-test of our own fault tolerance. An eBPF
+filter armed by faults.arm_syscall_fault overrides a framework syscall with
+-EIO while a map-resident budget lasts; the consumers (checkpoint save /
+restore, data pipeline, serve admission, the training loop) must retry
+within bounds and then DEGRADE — never crash, never spin forever.
+
+Convention under test: a NEGATIVE override return code is a transient
+fault (bounded retry); a non-negative override is a policy veto (final,
+no retry).
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ckpt import checkpoint as CK
+from repro.configs import registry
+from repro.configs.base import ShapeConfig, TrainConfig
+from repro.core import faults as F
+from repro.core.runtime import BpftimeRuntime
+from repro.data.pipeline import SyntheticDataset
+
+pytestmark = pytest.mark.chaos
+
+CFG = registry.smoke("qwen2-0.5b")
+
+
+def _veto_filter(rt, sys_name, code=0):
+    """Filter that always overrides with a NON-NEGATIVE code: policy veto."""
+    pid = rt.load_asm(f"veto_{sys_name}", f"""
+        mov r1, {code}
+        call override_return
+        mov r0, 0
+        exit
+    """, [], "filter")
+    return rt.attach(pid, f"filter:{sys_name}")
+
+
+# --------------------------------------------------------------------------
+# the convention itself
+# --------------------------------------------------------------------------
+
+def test_negative_override_is_fault_positive_is_veto():
+    rt = BpftimeRuntime()
+    F.arm_syscall_fault(rt, "sys_log", budget=1)
+    res = rt.syscalls.invoke("sys_log", [0], impl=lambda: "x")
+    assert res.overridden and res.ret_code == -F.EIO and res.fault
+    res = rt.syscalls.invoke("sys_log", [0], impl=lambda: "x")
+    assert not res.overridden and res.value == "x"
+
+    rt2 = BpftimeRuntime()
+    _veto_filter(rt2, "sys_log", code=429)
+    res = rt2.syscalls.invoke("sys_log", [0], impl=lambda: "x")
+    assert res.overridden and res.ret_code == 429 and not res.fault
+
+
+def test_budget_drains_exactly_then_recovers():
+    """The map-backed budget makes exactly N consecutive calls fail — and
+    the drained budget is eBPF-visible (drill_remaining reads the map)."""
+    rt = BpftimeRuntime()
+    F.arm_syscall_fault(rt, "sys_log", budget=3)
+    faults = [rt.syscalls.invoke("sys_log", [i], impl=lambda: i).fault
+              for i in range(5)]
+    assert faults == [True, True, True, False, False]
+    assert F.drill_remaining(rt) <= 0
+
+
+def test_rearming_refills_budget():
+    rt = BpftimeRuntime()
+    F.arm_syscall_fault(rt, "sys_log", budget=1)
+    assert rt.syscalls.invoke("sys_log", [0], impl=lambda: 1).fault
+    assert not rt.syscalls.invoke("sys_log", [0], impl=lambda: 1).fault
+    F.arm_syscall_fault(rt, "sys_log", budget=1)   # refill, no re-attach
+    assert rt.syscalls.invoke("sys_log", [0], impl=lambda: 1).fault
+
+
+# --------------------------------------------------------------------------
+# checkpoint save / restore
+# --------------------------------------------------------------------------
+
+def _tiny_state(step=1):
+    return {"step": np.int64(step), "w": np.arange(6, dtype=np.float32)}
+
+
+def test_checkpoint_save_survives_transient_eio(tmp_path):
+    rt = BpftimeRuntime()
+    F.arm_syscall_fault(rt, "sys_checkpoint_save", budget=2)
+    d = str(tmp_path / "ckpt")
+    os.makedirs(d)
+    CK.save(d, 1, _tiny_state(1), runtime=rt, blocking=True)
+    assert CK.latest(d) == 1                       # committed despite 2 EIOs
+    assert rt.syscalls.counts["sys_checkpoint_save"] == 3   # 2 faults + 1 ok
+    assert F.drill_remaining(rt) <= 0
+
+
+def test_checkpoint_save_degrades_on_persistent_eio(tmp_path):
+    """Budget beyond the retry bound: the save is SKIPPED (training keeps
+    the previous committed checkpoint) after exactly retries+1 attempts."""
+    rt = BpftimeRuntime()
+    d = str(tmp_path / "ckpt")
+    os.makedirs(d)
+    CK.save(d, 1, _tiny_state(1), runtime=rt, blocking=True)
+    F.arm_syscall_fault(rt, "sys_checkpoint_save", budget=100)
+    n0 = rt.syscalls.counts["sys_checkpoint_save"]
+    CK.save(d, 2, _tiny_state(2), runtime=rt, blocking=True,
+            fault_retries=3)
+    assert rt.syscalls.counts["sys_checkpoint_save"] - n0 == 4   # bounded
+    assert CK.latest(d) == 1                       # previous commit stays
+
+
+def test_checkpoint_save_veto_skips_without_retry(tmp_path):
+    rt = BpftimeRuntime()
+    _veto_filter(rt, "sys_checkpoint_save")
+    d = str(tmp_path / "ckpt")
+    os.makedirs(d)
+    CK.save(d, 1, _tiny_state(1), runtime=rt, blocking=True)
+    assert rt.syscalls.counts["sys_checkpoint_save"] == 1    # no retry
+    assert CK.latest(d) is None
+
+
+def test_checkpoint_restore_survives_transient_eio(tmp_path):
+    rt = BpftimeRuntime()
+    d = str(tmp_path / "ckpt")
+    os.makedirs(d)
+    st = _tiny_state(3)
+    CK.save(d, 3, st, runtime=rt, blocking=True)
+    F.arm_syscall_fault(rt, "sys_checkpoint_restore", budget=2)
+    out = CK.restore(d, 3, st, runtime=rt)
+    assert out is not None
+    np.testing.assert_array_equal(np.asarray(out["w"]), st["w"])
+    F.arm_syscall_fault(rt, "sys_checkpoint_restore", budget=100)
+    assert CK.restore(d, 3, st, runtime=rt) is None          # degrade
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+def _dataset(rt):
+    tcfg = TrainConfig(total_steps=8)
+    shape = ShapeConfig("drill", 16, 2, "train")
+    return SyntheticDataset(CFG, shape, tcfg, runtime=rt)
+
+
+def test_data_fetch_survives_transient_eio():
+    rt = BpftimeRuntime()
+    ds = _dataset(rt)
+    ref = _dataset(None)
+    F.arm_syscall_fault(rt, "sys_data_fetch", budget=2)
+    batch = ds.next()                              # retried through 2 EIOs
+    assert batch is not None
+    np.testing.assert_array_equal(batch["tokens"], ref.next()["tokens"])
+    assert rt.syscalls.counts["sys_data_fetch"] == 3
+
+
+def test_data_fetch_degrades_to_skip_on_persistent_eio():
+    rt = BpftimeRuntime()
+    ds = _dataset(rt)
+    F.arm_syscall_fault(rt, "sys_data_fetch", budget=100)
+    assert ds.next() is None                       # bounded retry, then skip
+    assert rt.syscalls.counts["sys_data_fetch"] == ds.fault_retries + 1
+    assert ds.step == 1                            # cursor still advanced
+
+
+def test_data_fetch_veto_no_retry():
+    rt = BpftimeRuntime()
+    ds = _dataset(rt)
+    _veto_filter(rt, "sys_data_fetch")
+    assert ds.next() is None
+    assert rt.syscalls.counts["sys_data_fetch"] == 1
+
+
+# --------------------------------------------------------------------------
+# serve admission
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def params():
+    from repro.models import registry as MR
+    return MR.init_params(jax.random.PRNGKey(0), CFG)
+
+
+def test_serve_admit_survives_transient_eio(params):
+    from repro.serve.engine import Request, ServeEngine
+    rt = BpftimeRuntime()
+    eng = ServeEngine(params, CFG, slots=2, max_seq=32, runtime=rt)
+    F.arm_syscall_fault(rt, "sys_serve_admit", budget=2)
+    reqs = [Request(rid=i, prompt=[1 + i, 2], max_new=3) for i in range(3)]
+    eng.submit_all(reqs)
+    assert all(r.done for r in reqs)
+    assert not any(r.rejected for r in reqs)       # EIOs retried through
+    assert all(len(r.out) >= 3 for r in reqs)
+
+
+def test_serve_admit_degrades_to_reject_on_persistent_eio(params):
+    from repro.serve.engine import Request, ServeEngine
+    rt = BpftimeRuntime()
+    eng = ServeEngine(params, CFG, slots=2, max_seq=32, runtime=rt)
+    F.arm_syscall_fault(rt, "sys_serve_admit", budget=1000)
+    reqs = [Request(rid=i, prompt=[1, 2], max_new=3) for i in range(2)]
+    eng.submit_all(reqs)                           # completes, no crash
+    assert all(r.rejected and r.done for r in reqs)
+    assert all(r.out == [] for r in reqs)
+
+
+# --------------------------------------------------------------------------
+# the training loop end to end
+# --------------------------------------------------------------------------
+
+def test_train_loop_survives_ckpt_and_data_eio(tmp_path):
+    """run_training with BOTH drills armed: transient data-read faults and
+    checkpoint-write faults are absorbed by bounded retries — every step
+    runs, the checkpoint still commits."""
+    from repro.launch.train import run_training
+    rt = BpftimeRuntime()
+    F.arm_syscall_fault(rt, "sys_data_fetch", budget=2)
+    ckpt = str(tmp_path / "ckpt")
+    os.makedirs(ckpt)
+    state, hist = run_training(
+        "qwen2-0.5b", steps=3, smoke=True, runtime=rt, ckpt_dir=ckpt,
+        save_every=2, seq_len=16, batch=2, log_every=0)
+    assert len(hist) == 3                          # no step lost to EIO
+    assert CK.latest(ckpt) == 2
+    assert F.drill_remaining(rt) <= 0
+
+
+def test_train_loop_bounded_spin_on_total_veto():
+    """A filter vetoing EVERY data fetch must not hang the loop: the
+    max_data_skips guard turns the spin into an explicit error."""
+    from repro.launch.train import run_training
+    rt = BpftimeRuntime()
+    _veto_filter(rt, "sys_data_fetch")
+    with pytest.raises(RuntimeError, match="vetoing every fetch"):
+        run_training("qwen2-0.5b", steps=2, smoke=True, runtime=rt,
+                     seq_len=16, batch=2, log_every=0, max_data_skips=5)
