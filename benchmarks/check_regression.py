@@ -13,7 +13,15 @@ Hard floors:
   * fleet recovery (DESIGN.md §11): a restarted daemon must restore the
     fold journal and republish within TOLERANCE of the recorded latency,
     and the recovered view must be ZERO-LOSS (bit-identical to the
-    pre-crash global view — a hard invariant, no tolerance).
+    pre-crash global view — a hard invariant, no tolerance);
+  * interpreter lane <= 5x scan ns/event — the vectorized lockstep
+    machine's contract (DESIGN.md §12; a hard ratio, no tolerance, since
+    both sides run on the same machine in the same process);
+  * promotion (DESIGN.md §12): a live-attached program must auto-promote
+    to the fused lane within ONE generation boundary and the swapped lane
+    must be BIT-IDENTICAL to the scan oracle (both hard invariants);
+    time-to-fused (compile hidden behind interp steps) within TOLERANCE
+    of the recorded budget.
 
     python benchmarks/check_regression.py BENCH_probe.json \
         [--baseline benchmarks/BENCH_baseline.json] [--tolerance 2.0]
@@ -28,6 +36,7 @@ import json
 import sys
 
 FUSED_FLOOR = 5.0
+INTERP_SCAN_CEIL = 5.0
 
 
 def check(result: dict, baseline: dict, tolerance: float) -> list[str]:
@@ -48,6 +57,34 @@ def check(result: dict, baseline: dict, tolerance: float) -> list[str]:
         failures.append(
             f"interpreter lane {interp:.0f}ns/event exceeds budget "
             f"{budget:.0f}ns/event x{tolerance}")
+
+    ratio = result.get("interp_overhead_vs_scan")
+    if ratio is None:
+        failures.append("result json has no interp_overhead_vs_scan ratio")
+    elif ratio > INTERP_SCAN_CEIL:
+        failures.append(
+            f"interpreter lane is {ratio:.1f}x scan, above the "
+            f"{INTERP_SCAN_CEIL}x ceiling (DESIGN.md §12)")
+
+    promo = result.get("promotion")
+    promo_budget = baseline.get("promotion", {}).get("time_to_fused_ms")
+    if promo is None:
+        failures.append("result json has no promotion measurement "
+                        "(promotion.time_to_fused_ms)")
+    else:
+        if not promo.get("bit_identical", False):
+            failures.append(
+                "promotion BROKE BIT-IDENTITY: interp-phase + fused-phase "
+                "counters diverge from the scan oracle (DESIGN.md §12)")
+        if not promo.get("promoted_within_one_boundary", False):
+            failures.append(
+                "promotion did not apply within one generation boundary "
+                "after the compile was ready (DESIGN.md §12)")
+        if promo_budget and promo.get("time_to_fused_ms", 0.0) > \
+                promo_budget * tolerance:
+            failures.append(
+                f"promotion time-to-fused {promo['time_to_fused_ms']:.0f}ms "
+                f"exceeds budget {promo_budget:.0f}ms x{tolerance}")
 
     attach = result.get("attach_latency_ms")
     attach_budget = baseline.get("attach_latency_ms")
@@ -108,6 +145,18 @@ def main(argv=None) -> int:
               f"{result['modes']['interp']['ns_per_event']:.0f}ns/event "
               f"(budget {baseline['modes']['interp']['ns_per_event']:.0f} "
               f"x{args.tolerance})")
+    if "interp_overhead_vs_scan" in result:
+        print(f"interp/scan:   "
+              f"{result['interp_overhead_vs_scan']:.2f}x "
+              f"(ceiling {INTERP_SCAN_CEIL}x)")
+    if "promotion" in result:
+        pr = result["promotion"]
+        print(f"promotion:     {pr.get('time_to_fused_ms', 0):.0f}ms "
+              f"to fused, one_boundary="
+              f"{pr.get('promoted_within_one_boundary')}, "
+              f"bit_identical={pr.get('bit_identical')} (budget "
+              f"{baseline.get('promotion', {}).get('time_to_fused_ms', 0):.0f}"
+              f"ms x{args.tolerance})")
     if "attach_latency_ms" in result:
         print(f"attach:        {result['attach_latency_ms']:.2f}ms "
               f"(budget {baseline.get('attach_latency_ms', 0):.2f} "

@@ -10,7 +10,11 @@ benchmarks/check_regression.py):
     programs hot-attached instead of compiled in) pays a bounded ns/event
     premium for dispatch-as-data, and its attach latency (encode + verify +
     table sync onto the running compiled step) is milliseconds — vs the
-    seconds-scale retrace it replaces.
+    seconds-scale retrace it replaces;
+  * auto-promotion closes the residual interp premium: a live-attached
+    program is retraced into the fused lane off the critical path and
+    swapped at a generation boundary, bit-identical to the scan oracle
+    (time_to_fused is the compile hidden behind ongoing interp steps).
 
     PYTHONPATH=src python -m benchmarks.run --json BENCH_probe.json
 """
@@ -90,7 +94,7 @@ def build_live_runtime() -> tuple[BpftimeRuntime, list[int]]:
     lids = []
     for name, text, spec, target in PROGS:
         pid = rt.load_asm(name, text, [spec], "uprobe")
-        lids.append(rt.attach_live(pid, target))
+        lids.append(rt.attach(pid, target, mode="table", promote=False))
     return rt, lids
 
 
@@ -158,19 +162,109 @@ def measure_attach_latency(repeats: int = 5) -> float:
 
     maps = jax.block_until_ready(stage(rows, rt.init_device_maps()))
     pid = next(iter(rt.progs))          # re-attach the first program
-    rt.detach_live(lids[0])
+    rt.detach(lids[0])
     maps = rt.sync_live_table(maps)
     best = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
-        lid = rt.attach_live(pid, "uprobe:bp_block")
+        lid = rt.attach(pid, "uprobe:bp_block", mode="table", promote=False)
         maps = rt.sync_live_table(maps)
         jax.block_until_ready(maps["__live_table__"])
         best = min(best, time.perf_counter() - t0)
-        rt.detach_live(lid)
+        rt.detach(lid)
         maps = rt.sync_live_table(maps)
     assert stage._cache_size() == 1, "attach latency bench retraced"
     return best
+
+
+def measure_promotion(n_events: int = 512, repeats: int = 3,
+                      timeout_s: float = 120.0) -> dict:
+    """Time-to-fused after a live attach (DESIGN.md §12): the link lands on
+    the table lane in ~ms, a background thread retraces the fused lane
+    while the (still-compiled) step keeps absorbing events through the
+    interpreter, and the swap applies at a generation boundary.  Reports
+    the cold path (includes the background compile), the cached path
+    (same attach signature re-promoted: pure dictionary hit), and a
+    deterministic bit-identity check of interp-phase + fused-phase vs the
+    scan oracle over the same tape."""
+    rt = BpftimeRuntime()
+    for spec in MAPS:
+        rt.create_map(spec)
+    rt.enable_live_attach(max_programs=4, max_insns=64,
+                          arm=("uprobe:bp_block", "uretprobe:bp_block"))
+    rows = make_tape(n_events)
+
+    def builder():
+        return jax.jit(lambda r, m: rt.probe_stage(r, m, J.make_aux()))
+
+    step = builder()
+    maps, _ = jax.tree.map(jax.block_until_ready,
+                           step(rows, rt.init_device_maps()))
+    sds = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)),
+        (rows, maps))
+    rt.enable_promotion(builder, sds, background=True)
+    pid = rt.load_asm("bp_count", COUNT_BY_LAYER, [MAPS[0]], "uprobe")
+
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        lk = rt.attach(pid, "uprobe:bp_block", mode="table", promote=True)
+        maps = rt.sync_live_table(maps)
+        while lk.lane != "fused":      # the loop keeps training on interp
+            if lk.promotion_state == "failed":
+                raise RuntimeError(lk.promotion_error)
+            if time.perf_counter() - t0 > timeout_s:
+                raise RuntimeError("promotion never applied")
+            maps, _ = step(rows, maps)
+            maps = rt.sync_live_table(maps)
+        fused = rt.take_promoted_step()
+        times.append(time.perf_counter() - t0)
+        maps, _ = fused(rows, maps)
+        rt.detach(lk)
+        maps = rt.sync_live_table(maps)
+    assert step._cache_size() == 1, "promotion retraced the live step"
+
+    # deterministic bit-identity across the swap boundary (hard gate)
+    rt2 = BpftimeRuntime()
+    for spec in MAPS:
+        rt2.create_map(spec)
+    rt2.enable_live_attach(max_programs=4, max_insns=64,
+                           arm=("uprobe:bp_block", "uretprobe:bp_block"))
+    step2 = jax.jit(lambda r, m: rt2.probe_stage(r, m, J.make_aux()))
+    maps2 = rt2.init_device_maps()
+    pid2 = rt2.load_asm("bp_count", COUNT_BY_LAYER, [MAPS[0]], "uprobe")
+    lk2 = rt2.attach(pid2, "uprobe:bp_block", mode="table")
+    maps2 = rt2.sync_live_table(maps2)
+    maps2, _ = step2(rows, maps2)                 # interp phase
+    sds2 = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)),
+        (rows, maps2))
+    rt2.enable_promotion(
+        lambda: jax.jit(lambda r, m: rt2.probe_stage(r, m, J.make_aux())),
+        sds2, background=False)
+    maps2 = rt2.sync_live_table(maps2)            # one generation boundary
+    fused2 = rt2.take_promoted_step()
+    maps2, _ = fused2(rows, maps2)                # fused phase
+
+    rt3 = BpftimeRuntime()
+    rt3.create_map(MAPS[0])
+    pid3 = rt3.load_asm("bp_count", COUNT_BY_LAYER, [MAPS[0]], "uprobe")
+    rt3.attach(pid3, "uprobe:bp_block", mode="fused")
+    stage3 = jax.jit(
+        lambda r, m: rt3.probe_stage(r, m, J.make_aux(), mode="scan"))
+    maps3 = rt3.init_device_maps()
+    for _ in range(2):
+        maps3, _ = stage3(rows, maps3)
+    bit_identical = bool(np.array_equal(
+        np.asarray(maps2["bp_layer_counts"]["values"]),
+        np.asarray(maps3["bp_layer_counts"]["values"])))
+
+    return {"time_to_fused_ms": times[0] * 1e3,
+            "cached_swap_ms": min(times[1:]) * 1e3 if len(times) > 1
+            else None,
+            "promoted_within_one_boundary": lk2.lane == "fused",
+            "bit_identical": bit_identical}
 
 
 def measure_fleet_merge(n_workers: int = 3, rounds: int = 8,
@@ -309,6 +403,8 @@ def run(n_events: int = 4096, iters: int = 20,
             / max(out["modes"]["scan"]["ns_per_event"], 1e-12))
     if "interp" in modes:
         out["attach_latency_ms"] = measure_attach_latency() * 1e3
+        # unified-attach promotion: interp -> compiling -> fused swap
+        out["promotion"] = measure_promotion()
     # interprocess map plane: merge throughput across a 3-worker fleet
     out["fleet"] = measure_fleet_merge(
         events_per_round=max(384, n_events // 2))
@@ -328,6 +424,13 @@ def main():
     if "attach_latency_ms" in res:
         print(f"# live attach latency: {res['attach_latency_ms']:.2f}ms "
               f"(vs retrace: {res['modes']['fused']['compile_s']}s)")
+    if "promotion" in res:
+        pr = res["promotion"]
+        cached = (f", cached swap {pr['cached_swap_ms']:.2f}ms"
+                  if pr.get("cached_swap_ms") is not None else "")
+        print(f"# promotion: interp->fused in {pr['time_to_fused_ms']:.0f}ms"
+              f"{cached} (one boundary={pr['promoted_within_one_boundary']},"
+              f" bit_identical={pr['bit_identical']})")
     if "fleet" in res:
         fl = res["fleet"]
         print(f"# fleet merge: {fl['events_per_s']:.0f} events/s "

@@ -65,6 +65,12 @@ def main(argv=None):
             print(f"# live attach latency: "
                   f"{res['attach_latency_ms']:.2f}ms (retrace avoided: "
                   f"~{res['modes']['fused']['compile_s']}s)")
+        if "promotion" in res:
+            pr = res["promotion"]
+            print(f"# promotion: interp->fused in "
+                  f"{pr['time_to_fused_ms'] / 1e3:.1f}s (background), "
+                  f"cached swap {pr['cached_swap_ms']:.1f}ms, "
+                  f"bit_identical={pr['bit_identical']}")
         if "fleet" in res:
             print(f"# fleet merge: {res['fleet']['events_per_s']:.0f} "
                   f"events/s across {res['fleet']['workers']} workers")

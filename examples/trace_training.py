@@ -1,9 +1,10 @@
 """The paper's flagship scenario on a trainer: attach to a RUNNING training
-loop without restarting it — and, since PR 2, without even RECOMPILING the
-step. The step is jitted once with the live program-table lane enabled; a
-daemon-side handle then injects a grad-norm watcher through shared memory
-and the already-compiled step starts executing it on its next call (watch
-the jit cache size stay at 1).
+loop without restarting it — without RECOMPILING the step (PR 2) — and,
+since PR 7, without paying the interpreter forever: the live-injected
+program lands on the table lane in ~ms, a background thread retraces the
+fused lane off the critical path, and the runtime swaps the compiled step
+in at the next generation boundary.  The injected probe's life is the full
+promotion state machine: interp -> compiling -> ready -> fused.
 
     PYTHONPATH=src python examples/trace_training.py
     # in another shell, while it runs:
@@ -13,6 +14,7 @@ import os
 import sys
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import registry
@@ -50,7 +52,11 @@ def main() -> int:
     state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg, rt)
     data = SyntheticDataset(cfg, ShapeConfig("t", 64, 8, "train"), tcfg,
                             runtime=rt)
-    step = jax.jit(make_train_step(cfg, tcfg, rt))
+
+    def build_step():
+        return jax.jit(make_train_step(cfg, tcfg, rt))
+
+    step = build_step()
 
     # --- steps 0-4: UNinstrumented (armed site emits, table is empty)
     for _ in range(5):
@@ -61,45 +67,77 @@ def main() -> int:
     assert hist0 == 0, "empty table must execute nothing"
     assert step._cache_size() == 1
 
+    # --- arm background promotion: hand the engine the loop's step builder
+    # and call signature, so a live-injected link converges to fused cost
+    batch0 = data.next()
+    sig = jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)),
+        (state, batch0))
+    rt.enable_promotion(build_step, sig)
+
     # --- a 'daemon' injects a grad-norm watcher into the RUNNING loop
     obj = loader.build_object(
         "grad_watch", GRAD_WATCH,
         [M.MapSpec("grad_hist", M.MapKind.LOG2HIST)],
         prog_type="uprobe", attach_to="probe:grad.norm")
     other = ShmRegion.attach(SHM)
-    request_load_attach(other, obj.to_json(), live=True)
+    request_load_attach(other, obj.to_json(), mode="table", promote=True)
 
     applied = rt.poll_control()             # picked up between steps
     assert applied and "error" not in applied[0], applied
+    link = rt.links[applied[0]["link_id"]]
     state["maps"] = rt.sync_live_table(state["maps"])
-    print(f"live-injected: {applied[0]['op']} as link "
-          f"{applied[0]['link_id']} (table gen "
-          f"{int(rt.live.host['gen'][0])}) — training did NOT restart")
+    print(f"live-injected: link {int(link)} on lane {link.lane!r} "
+          f"(table gen {int(rt.live.host['gen'][0])}, promotion "
+          f"{link.promotion_state!r}) — training did NOT restart")
+    assert link.lane == "table"
 
-    # --- steps 5-14: instrumented, SAME compiled step; publish for daemons
-    for _ in range(10):
-        state, m = step(state, data.next())
-        rt.publish(state["maps"])
+    # --- steps 5-9: interpreted on the SAME compiled step while the
+    # promotion thread retraces the fused lane in the background
+    for i in range(5):
+        state, m = step(state, batch0 if i == 0 else data.next())
     hist1 = int(np.asarray(state["maps"]["grad_hist"]["bins"]).sum())
-    print(f"steps 5-14 instrumented: loss={float(m['loss']):.4f}, "
-          f"hist events={hist1}")
-    assert hist1 == 10, f"one grad.norm event per step, got {hist1}"
+    print(f"steps 5-9 on the table lane: hist events={hist1}")
+    assert hist1 == 5, f"one grad.norm event per step, got {hist1}"
     assert step._cache_size() == 1, \
         "live attach must not retrace/recompile the step"
 
-    # --- detach, still no recompile; events stop
-    rt.detach(applied[0]["link_id"])
+    # --- the swap: wait for the background compile (a real loop would just
+    # keep stepping), apply at the generation boundary, pick up the step
+    rt._promoter.wait()
+    state["maps"] = rt.sync_live_table(state["maps"])
+    fused_step = rt.take_promoted_step()
+    assert fused_step is not None, link.promotion_error
+    assert link.lane == "fused" and link.promotion_state == "fused"
+    print(f"promoted: link {int(link)} now on lane {link.lane!r} "
+          f"(background compiles: {rt._promoter.compiles})")
+
+    # --- steps 10-14: fused steady state; the event stream never skipped
+    # or double-counted a step across the swap
+    for _ in range(5):
+        state, m = fused_step(state, data.next())
+        rt.publish(state["maps"])
+    hist2 = int(np.asarray(state["maps"]["grad_hist"]["bins"]).sum())
+    print(f"steps 10-14 on the fused lane: hist events={hist2}")
+    assert hist2 == 10, f"exactly one event per instrumented step, {hist2}"
+    assert step._cache_size() == 1, "the live step itself never retraced"
+    assert rt._promoter.compiles == 1, "promotion compiled exactly once"
+
+    # --- detach via the unified handle; the PRE-promotion step (no static
+    # attachment, empty table) shows the probe is really gone
+    link.detach()
     state["maps"] = rt.sync_live_table(state["maps"])
     for _ in range(3):
         state, m = step(state, data.next())
-    hist2 = int(np.asarray(state["maps"]["grad_hist"]["bins"]).sum())
-    assert hist2 == hist1, "detached program kept running"
+    hist3 = int(np.asarray(state["maps"]["grad_hist"]["bins"]).sum())
+    assert hist3 == hist2, "detached program kept running"
     assert step._cache_size() == 1
 
     print("\ngradient-norm histogram (live in shm for the daemon):")
     print(render_log2_hist(np.asarray(state["maps"]["grad_hist"]["bins"]),
                            label="grad_norm"))
-    print("OK: attach+detach on the running step, jit cache size stayed 1")
+    print("OK: table attach -> background promotion -> fused steady state, "
+          "jit cache of the running step stayed 1")
     return 0
 
 

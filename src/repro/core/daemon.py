@@ -17,7 +17,8 @@ Usable as a library (tests) or CLI. bpftool-style subcommands:
     python -m repro.core.daemon <shm_dir> map dump [MAP] [--section S]
     python -m repro.core.daemon <shm_dir> map top MAP [-n K]
     python -m repro.core.daemon <shm_dir> prog list
-    python -m repro.core.daemon <shm_dir> attach OBJ.json [--live] [--target T]
+    python -m repro.core.daemon <shm_dir> attach OBJ.json [--target T]
+                                [--mode auto|fused|table] [--no-promote]
     python -m repro.core.daemon <shm_dir> detach LINK_ID
     python -m repro.core.daemon <shm_dir> agg [--watch SECONDS] [--once]
     python -m repro.core.daemon <shm_dir> fleet health [--json]
@@ -99,12 +100,22 @@ def summarize(shm: ShmRegion, section: str = "device") -> str:
 
 def request_load_attach(shm: ShmRegion, obj_json: str,
                         target: str | None = None,
-                        live: bool = False) -> None:
-    """live=True routes into the trainer's program-table interpreter lane:
-    the program goes live on the ALREADY-COMPILED step (no retrace) — watch
-    `live_gen` in read_status() bump to confirm application."""
-    shm.request({"op": "load_attach", "object": obj_json, "target": target,
-                 "live": live})
+                        live: bool = False, mode: str | None = None,
+                        promote: bool = True) -> None:
+    """Queue a load+attach through the trainer's unified attach API.
+
+    mode: "auto" | "fused" | "table" (None keeps the legacy mapping —
+    live=True means mode="table", otherwise mode="fused").  mode="table"
+    (or live=True) goes live on the ALREADY-COMPILED step (no retrace) —
+    watch `live_gen` in read_status() bump to confirm application; with
+    promote=True the trainer's promotion engine then retrains the link
+    onto the fused lane in the background (`promotions` in the status
+    doc walks interp -> compiling -> fused)."""
+    req = {"op": "load_attach", "object": obj_json, "target": target,
+           "live": live or mode == "table", "promote": promote}
+    if mode is not None:
+        req["mode"] = mode
+    shm.request(req)
 
 
 def request_detach(shm: ShmRegion, link_id: int) -> None:
@@ -819,8 +830,11 @@ def _cmd_prog(root: str, args) -> int:
                                       worker_id=wid).read_status()
         except OSError:
             continue
+        promos = status.get("promotions", {})
         for lid, target in status.get("links", {}).items():
-            links.setdefault(wid or "-", []).append((lid, target))
+            pr = promos.get(lid, {})
+            links.setdefault(wid or "-", []).append(
+                (lid, target, pr.get("lane", "?"), pr.get("state", "?")))
     rows = []
     for name, obj_json in progs.items():
         obj = ProgramObject.from_json(obj_json)
@@ -837,8 +851,9 @@ def _cmd_prog(root: str, args) -> int:
         print(f"{r['name']:20s} {r['type']:12s} "
               f"{str(r['attach_to']):24s} {','.join(r['maps'])}")
     for w, ls in sorted(links.items()):
-        for lid, target in ls:
-            print(f"link {lid} -> {target} (worker {w})")
+        for lid, target, lane, state in ls:
+            print(f"link {lid} -> {target} (worker {w}) "
+                  f"lane={lane} promotion={state}")
     return 0
 
 
@@ -858,8 +873,12 @@ def _cmd_attach(root: str, args) -> int:
         return 1
     with open(args.object) as f:
         obj_json = f.read()
+    mode = args.mode or ("table" if args.live else None)
     req = {"op": "load_attach", "object": obj_json,
-           "target": args.target, "live": args.live}
+           "target": args.target, "live": args.live or mode == "table",
+           "promote": not args.no_promote}
+    if mode is not None:
+        req["mode"] = mode
     wids = args.worker or SH.list_workers(root)
     if wids:
         reached = SH.fanout_request(root, req, wids)
@@ -947,8 +966,16 @@ def _main_bpftool(argv: list[str]) -> int:
     at = sub.add_parser("attach", help="queue load+attach (fleet fan-out)")
     at.add_argument("object", help="path to a ProgramObject json")
     at.add_argument("--target")
+    at.add_argument("--mode", choices=("auto", "fused", "table"),
+                    help="attach lane: auto picks the live table when it "
+                         "is instantly available, fused forces the "
+                         "epoch-bump (retrace) path, table forces the "
+                         "live program table")
+    at.add_argument("--no-promote", action="store_true",
+                    help="pin a table-lane link to the interpreter "
+                         "(skip background promotion to the fused lane)")
     at.add_argument("--live", action="store_true",
-                    help="route into the live program table (no retrace "
+                    help="alias for --mode table (no retrace "
                          "in any worker)")
     at.add_argument("--worker", action="append",
                     help="restrict to worker id(s); default: all workers")
@@ -996,8 +1023,10 @@ def main(argv=None):
     ap.add_argument("--attach", help="path to a ProgramObject json to inject")
     ap.add_argument("--target", help="attach target for --attach")
     ap.add_argument("--live", action="store_true",
-                    help="inject via the live program table (no retrace in "
-                         "the target process)")
+                    help="alias for --mode table (no retrace in the "
+                         "target process)")
+    ap.add_argument("--mode", choices=("auto", "fused", "table"))
+    ap.add_argument("--no-promote", action="store_true")
     ap.add_argument("--detach", type=int, metavar="LINK_ID",
                     help="queue a detach of a previously applied link")
     args = ap.parse_args(argv)
@@ -1010,7 +1039,9 @@ def main(argv=None):
     shm = ShmRegion.attach(args.shm_dir)
     if args.attach:
         with open(args.attach) as f:
-            request_load_attach(shm, f.read(), args.target, live=args.live)
+            request_load_attach(shm, f.read(), args.target, live=args.live,
+                                mode=args.mode,
+                                promote=not args.no_promote)
         print(f"queued {'live ' if args.live else ''}load+attach "
               f"of {args.attach}")
         return

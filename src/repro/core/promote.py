@@ -1,0 +1,151 @@
+"""Background promotion: table-lane links converge to the fused lane.
+
+The live program-table lane (DESIGN.md §9) buys ~1.4ms attach latency by
+interpreting bytecode that rides in device *data* — but even vectorized,
+interpretation costs a small multiple of the scan lane forever.  bpftime's
+steady-state claim is that probes become near-free once the dust settles,
+so the runtime closes the gap the way a JIT tier does: every table-lane
+link with ``promote=True`` is handed to this engine, which retraces the
+fused lane OFF the critical path (a daemon thread) and atomically swaps
+the compiled artifact in at the next generation boundary
+(``Runtime.sync_live_table``).  The training loop never blocks on a
+compile and never observes a half-promoted world:
+
+    interp ──schedule──▶ compiling ──▶ ready ──apply_ready──▶ fused
+        │                    │
+        └──── detach ────────┴──────▶ cancelled        (compile error
+                                                        ──▶ failed)
+
+Correctness rules (tested in tests/test_promotion.py):
+
+  * the background trace sees the FUTURE attach state through a
+    thread-local overlay (``runtime._effective_attach``) — the foreground
+    step keeps tracing the present, so the jit cache of the live step
+    never grows;
+  * the compiled artifact is keyed on the full post-promotion attach
+    signature; if the world moved between compile and apply (another
+    attach/detach bumped the epoch), ``apply_ready`` discards the stale
+    artifact and re-schedules instead of swapping in a wrong trace;
+  * the swap itself happens entirely between steps: clear the table slot
+    (generation bump) + append the static attachment (epoch bump) in one
+    host-side critical section, then pre-populate the loop's step cache
+    via ``runtime.take_promoted_step()`` — each event is executed by
+    exactly one lane on every step, so the map state stays bit-identical
+    across the boundary.
+"""
+from __future__ import annotations
+
+import threading
+import traceback
+
+
+def attach_signature(attach_map: dict) -> tuple:
+    """Hashable invariant the fused lane's trace depends on: the exact
+    multiset of (site, kind) -> program ids (SNIPPETS.md §1 — cache on
+    what the trace reads, nothing else)."""
+    return tuple(sorted((sk, tuple(pids)) for sk, pids in attach_map.items()
+                        if pids))
+
+
+class PromotionEngine:
+    """Owns the background compiles and the ready queue for one runtime.
+
+    ``step_builder()`` must return a *fresh* jit-wrapped step function
+    traced against the runtime's current (overlaid) attach state;
+    ``example_args`` are the concrete-or-ShapeDtypeStruct arguments the
+    loop will keep calling the step with (AOT: lower + compile up front,
+    so the foreground swap is a dictionary insert, not a trace)."""
+
+    def __init__(self, runtime, step_builder, example_args,
+                 background: bool = True):
+        self.runtime = runtime
+        self.step_builder = step_builder
+        self.example_args = tuple(example_args)
+        self.background = background
+        self.compiles = 0                 # background traces actually run
+        self._cache: dict[tuple, object] = {}   # signature -> compiled step
+        self._ready: list = []            # links compiled + waiting to swap
+        self._threads: list[threading.Thread] = []
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------ schedule
+    def schedule(self, link) -> None:
+        """Kick off (or reuse) a compile for one table-lane link."""
+        if link.lane != "table" or link.promotion_state not in ("interp",
+                                                                "failed"):
+            return
+        link.promotion_state = "compiling"
+        if not self.background:
+            self._compile(link)
+            return
+        t = threading.Thread(target=self._compile, args=(link,),
+                             name=f"promote-{link.link_id}", daemon=True)
+        with self._lock:
+            self._threads.append(t)
+        t.start()
+
+    def _target_signature(self, link) -> tuple:
+        """Attach signature of the world AFTER this link is promoted."""
+        merged = {k: list(v) for k, v in self.runtime.device_attach.items()}
+        merged.setdefault(link._parsed, []).append(link.pid)
+        return attach_signature(merged)
+
+    def _compile(self, link) -> None:
+        try:
+            sig = self._target_signature(link)
+            with self._lock:
+                compiled = self._cache.get(sig)
+            if compiled is None:
+                # trace against the future: the overlay makes
+                # _static_lanes/_effective_attach on THIS thread see the
+                # link as a static attachment; the foreground trace (and
+                # its jit cache) is untouched.
+                with self.runtime._attach_overlay({link._parsed: [link.pid]}):
+                    fn = self.step_builder()
+                    compiled = fn.lower(*self.example_args).compile()
+                with self._lock:
+                    self._cache[sig] = compiled
+                    self.compiles += 1
+            if link.promotion_state != "compiling":    # detached mid-compile
+                return
+            link.promotion_state = "ready"
+            with self._lock:
+                self._ready.append((link, sig, compiled))
+        except Exception:
+            link.promotion_state = "failed"
+            link.promotion_error = traceback.format_exc(limit=4)
+
+    # ------------------------------------------------------------ apply
+    def apply_ready(self) -> bool:
+        """Called by the runtime at every generation boundary
+        (sync_live_table).  Swap in every compiled link whose signature
+        still matches the current world; re-schedule the ones the world
+        moved out from under.  Returns True iff any link was promoted."""
+        with self._lock:
+            ready, self._ready = self._ready, []
+        promoted = False
+        for link, sig, compiled in ready:
+            if link.promotion_state != "ready":        # detach won the race
+                continue
+            if self._target_signature(link) != sig:
+                # another attach/detach changed the fused trace since this
+                # artifact was built — it would execute the wrong program
+                # set.  Recompile against the new world.
+                link.promotion_state = "interp"
+                self.schedule(link)
+                continue
+            self.runtime._promote_table_link(link, compiled)
+            promoted = True
+        return promoted
+
+    # ------------------------------------------------------------ waiting
+    def wait(self, timeout: float = 30.0) -> None:
+        """Join outstanding compile threads (tests / shutdown)."""
+        with self._lock:
+            threads, self._threads = self._threads, []
+        for t in threads:
+            t.join(timeout)
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._ready)

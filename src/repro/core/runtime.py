@@ -12,15 +12,25 @@ Responsibilities:
     the training loop re-jits its step on epoch change and carries state
     over — the ptrace-pause analogue;
   * attach/detach WITHOUT RECOMPILATION: the live program-table lane
-    (`enable_live_attach` + `attach_live`/`detach_live`) encodes verified
+    (`enable_live_attach` + `attach(mode="table")`) encodes verified
     bytecode into a device-resident table read by a generic in-graph
     interpreter — dispatch is data, so a hot attach is a buffer write, not
-    a retrace (DESIGN.md §9);
+    a retrace (DESIGN.md §9, §12; `attach_live`/`detach_live` remain as
+    deprecated shims);
+  * ONE attach API over all of it: `attach(pid, target, *, mode, promote)`
+    returns a `Link` (lane + slot + promotion state); `mode="auto"` routes
+    to the table lane when the program can land on the running step, and
+    `promote=True` arms background promotion — `core/promote.py` retraces
+    the fused lane off the critical path and `sync_live_table` swaps it in
+    at the next generation boundary, bit-identical (DESIGN.md §12);
   * shm control plane: publish device maps, poll daemon attach requests.
 """
 from __future__ import annotations
 
+import contextlib
 import itertools
+import threading
+import warnings
 from dataclasses import dataclass, field
 
 import jax
@@ -82,11 +92,37 @@ class LoadedProg:
     vprog: VerifiedProgram
 
 
-@dataclass
+@dataclass(eq=False)
 class Link:
+    """Handle for one attachment, whatever lane it executes on.
+
+    ``lane`` is where the program runs right now: ``"fused"`` (traced into
+    the step), ``"table"`` (live program-table interpreter) or ``"host"``
+    (syscall tracepoints/filters).  A table link carries its ``slot`` and a
+    ``promotion_state`` driven by core/promote.py:
+    ``interp -> compiling -> ready -> fused`` (or ``cancelled``/``failed``).
+    The handle coerces to its integer link id (``int(link)``), so it can be
+    stored, serialized, and passed back to ``Runtime.detach``.
+    """
     link_id: int
     pid: int
     target: str
+    lane: str = "fused"
+    slot: int | None = None
+    promotion_state: str = "none"
+    promote: bool = False
+    promotion_error: str | None = None
+    _parsed: tuple | None = field(default=None, repr=False)
+    _rt: object = field(default=None, repr=False)
+
+    def detach(self) -> None:
+        self._rt.detach(self)
+
+    def __int__(self) -> int:
+        return self.link_id
+
+    def __index__(self) -> int:
+        return self.link_id
 
 
 class BpftimeRuntime:
@@ -116,6 +152,10 @@ class BpftimeRuntime:
         self._live_slot_of: dict[int, int] = {}   # link_id -> table slot
         self._table_writer = None
         self._synced_gen = 0                      # last gen pushed to device
+        # background promotion (enable_promotion / core/promote.py)
+        self._promoter = None
+        self._promoted_step = None    # AOT-compiled step awaiting pickup
+        self._overlay_tls = threading.local()
 
     # ---------------------------------------------------------------- maps
     def create_map(self, spec: MapSpec) -> int:
@@ -198,7 +238,21 @@ class BpftimeRuntime:
             self._armed.add(parsed)
             self.attach_epoch += 1
 
-    def attach_live(self, pid: int, target: str) -> int:
+    def attach_live(self, pid: int, target: str) -> Link:
+        """Deprecated shim — use ``attach(pid, target, mode="table")``."""
+        warnings.warn(
+            "attach_live() is deprecated; use "
+            "attach(pid, target, mode='table')", DeprecationWarning,
+            stacklevel=2)
+        return self.attach(pid, target, mode="table", promote=False)
+
+    def detach_live(self, link_id) -> None:
+        """Deprecated shim — use ``detach(link)`` / ``link.detach()``."""
+        warnings.warn("detach_live() is deprecated; use detach()",
+                      DeprecationWarning, stacklevel=2)
+        self.detach(link_id)
+
+    def _attach_table(self, pid: int, target: str, promote: bool) -> Link:
         """Attach a loaded+verified program to an already-compiled step via
         the live table: encode into a free slot, bump the generation
         counter. NO attach_epoch bump — the caller pushes the new table with
@@ -222,16 +276,38 @@ class BpftimeRuntime:
         sid, ev_kind = parsed
         self.live.encode_slot(slot, prog.vprog, sid, ev_kind, pid=pid)
         lid = next(self._next_link)
-        self.links[lid] = Link(lid, pid, target)
+        link = Link(lid, pid, target, lane="table", slot=slot,
+                    promotion_state="interp", promote=promote,
+                    _parsed=parsed, _rt=self)
+        self.links[lid] = link
         self._live_slot_of[lid] = slot
+        if promote and self._promoter is not None:
+            self._promoter.schedule(link)
         self.publish_status()
-        return lid
+        return link
 
-    def detach_live(self, link_id: int) -> None:
-        slot = self._live_slot_of.pop(link_id)
-        self.links.pop(link_id)
-        self.live.clear_slot(slot)
-        self.publish_status()
+    def _table_attachable(self, pid: int, parsed) -> bool:
+        """mode="auto" heuristic: route through the live table iff it can
+        actually execute the program RIGHT NOW without a retrace — the lane
+        exists, the target site's events are already collected (armed or
+        statically attached), a slot is free, and the bytecode is
+        encodable.  Anything else falls back to the fused (epoch-bump)
+        path, which can always host the program."""
+        if self.live is None or parsed is None:
+            return False
+        if parsed not in self.wanted_sites():
+            return False               # trace-fixed collector never fires it
+        if self.live.free_slot() is None:
+            return False
+        from .verifier import VerifierError, check_table_encodable
+        try:
+            check_table_encodable(self.progs[pid].vprog,
+                                  n_maps=self.live.n_maps,
+                                  max_insns=self.live.max_insns,
+                                  ctx_words=self.live.ctx_words)
+        except VerifierError:
+            return False
+        return True
 
     def sync_live_table(self, map_states, force: bool = False):
         """Push the host-side table into the device map-state WITHOUT
@@ -242,6 +318,11 @@ class BpftimeRuntime:
         every step for free."""
         if self.live is None or "__live_table__" not in map_states:
             return map_states
+        if self._promoter is not None:
+            # generation boundary = promotion boundary: swap in any
+            # background-compiled fused step (clears the table slot, so the
+            # gen check below pushes the new table in the same call)
+            self._promoter.apply_ready()
         gen = int(self.live.host["gen"][0])
         if not force and gen == self._synced_gen:
             return map_states
@@ -256,48 +337,83 @@ class BpftimeRuntime:
         return {**map_states, "__live_table__": new}
 
     # ---------------------------------------------------------------- attach
-    def attach(self, pid: int, target: str) -> int:
-        """target: uprobe:SITE | uretprobe:SITE | probe:SITE |
-        tracepoint:SYS:enter|exit | filter:SYS"""
-        prog = self.progs[pid]
-        parts = target.split(":")
-        kind = parts[0]
-        if kind in ("uprobe", "uretprobe", "probe"):
-            site = parts[1]
-            ev_kind = {"uprobe": E.KIND_ENTRY, "uretprobe": E.KIND_EXIT,
-                       "probe": E.KIND_TRACEPOINT}[kind]
-            sid = E.SITES.get_or_create(site)
-            self.device_attach.setdefault((sid, ev_kind), []).append(pid)
-            self.attach_epoch += 1
-        elif kind == "tracepoint":
-            sys_name, phase = parts[1], parts[2]
-            self.syscalls.attach(sys_name, phase, prog.name, prog.insns,
-                                 self.map_specs)
-        elif kind == "filter":
-            sys_name = parts[1]
-            self.syscalls.attach(sys_name, "enter", prog.name, prog.insns,
-                                 self.map_specs)
-        else:
-            raise ValueError(f"bad attach target {target!r}")
-        lid = next(self._next_link)
-        self.links[lid] = Link(lid, pid, target)
-        return lid
+    def attach(self, pid: int, target: str, *, mode: str = "auto",
+               promote: bool = True) -> Link:
+        """Attach a loaded program; ONE entry point for every lane.
 
-    def detach(self, link_id: int) -> None:
-        if link_id in self._live_slot_of:
-            self.detach_live(link_id)
+        target: uprobe:SITE | uretprobe:SITE | probe:SITE |
+        tracepoint:SYS:enter|exit | filter:SYS
+
+        mode:
+          * "auto" (default) — device targets go through the live table
+            when that is free (live lane enabled, site armed/collected,
+            slot available, bytecode encodable): instant attach, no
+            retrace; otherwise the classic fused path (attach_epoch bump
+            -> the loop re-jits).  Host targets always take the host lane.
+          * "fused" — force the epoch-bumping trace-time path.
+          * "table" — force the live table; raises if unavailable.
+
+        promote: table-lane links are handed to the promotion engine
+        (enable_promotion), which retraces the fused lane in the
+        background and swaps it in at the next generation boundary —
+        steady state converges to fused cost while attach latency stays
+        ~1.4ms (DESIGN.md §12).  promote=False pins the link to the
+        interpreter.
+
+        Returns a Link handle (``link.lane``, ``link.promotion_state``,
+        ``link.detach()``); it coerces to its integer link id.
+        """
+        if mode not in ("auto", "fused", "table"):
+            raise ValueError(f"bad attach mode {mode!r}")
+        prog = self.progs[pid]
+        parsed = self._parse_device_target(target)
+        if parsed is None:                               # host lane
+            if mode == "table":
+                raise ValueError(f"live attach needs a device target, got "
+                                 f"{target!r}")
+            parts = target.split(":")
+            if parts[0] == "tracepoint":
+                self.syscalls.attach(parts[1], parts[2], prog.name,
+                                     prog.insns, self.map_specs)
+            elif parts[0] == "filter":
+                self.syscalls.attach(parts[1], "enter", prog.name,
+                                     prog.insns, self.map_specs)
+            else:
+                raise ValueError(f"bad attach target {target!r}")
+            lid = next(self._next_link)
+            link = Link(lid, pid, target, lane="host", _rt=self)
+            self.links[lid] = link
+            return link
+        if mode == "table" or (mode == "auto"
+                               and self._table_attachable(pid, parsed)):
+            return self._attach_table(pid, target, promote)
+        self.device_attach.setdefault(parsed, []).append(pid)
+        self.attach_epoch += 1
+        lid = next(self._next_link)
+        link = Link(lid, pid, target, lane="fused", _parsed=parsed,
+                    _rt=self)
+        self.links[lid] = link
+        return link
+
+    def detach(self, link) -> None:
+        """Detach by Link handle or integer link id (either lane)."""
+        link_id = int(link)
+        lk = self.links.pop(link_id)
+        if lk.lane == "table":
+            if lk.promotion_state in ("compiling", "ready"):
+                lk.promotion_state = "cancelled"   # promote thread backs off
+            slot = self._live_slot_of.pop(link_id)
+            self.live.clear_slot(slot)
+            self.publish_status()
             return
-        link = self.links.pop(link_id)
-        prog = self.progs[link.pid]
-        parts = link.target.split(":")
+        prog = self.progs[lk.pid]
+        parts = lk.target.split(":")
         kind = parts[0]
         if kind in ("uprobe", "uretprobe", "probe"):
-            ev_kind = {"uprobe": E.KIND_ENTRY, "uretprobe": E.KIND_EXIT,
-                       "probe": E.KIND_TRACEPOINT}[kind]
-            sid = E.SITES.get_or_create(parts[1])
+            sid, ev_kind = lk._parsed or self._parse_device_target(lk.target)
             lst = self.device_attach.get((sid, ev_kind), [])
-            if link.pid in lst:
-                lst.remove(link.pid)
+            if lk.pid in lst:
+                lst.remove(lk.pid)
             if not lst:
                 self.device_attach.pop((sid, ev_kind), None)
             self.attach_epoch += 1
@@ -306,9 +422,70 @@ class BpftimeRuntime:
         elif kind == "filter":
             self.syscalls.detach(parts[1], "enter", prog.name)
 
+    # ---------------------------------------------------------------- promote
+    def enable_promotion(self, step_builder, example_args,
+                         background: bool = True):
+        """Arm background promotion of table-lane links (DESIGN.md §12).
+
+        step_builder() must return a fresh jit-wrapped step traced against
+        this runtime's current attach state; example_args are the
+        (concrete or ShapeDtypeStruct) arguments the loop calls the step
+        with.  Existing table links attached with promote=True are
+        scheduled immediately.  background=False compiles synchronously
+        inside schedule() — deterministic, for tests."""
+        from .promote import PromotionEngine
+        self._promoter = PromotionEngine(self, step_builder, example_args,
+                                         background=background)
+        for lk in self.links.values():
+            if lk.lane == "table" and lk.promote:
+                self._promoter.schedule(lk)
+        return self._promoter
+
+    def take_promoted_step(self):
+        """Hand the loop the AOT-compiled step from the last promotion (or
+        None).  Pattern: on attach_epoch change, try this before re-jitting
+        — a promoted epoch never blocks on a foreground compile."""
+        step, self._promoted_step = self._promoted_step, None
+        return step
+
+    def _promote_table_link(self, link: Link, compiled) -> None:
+        """The atomic swap, called by PromotionEngine.apply_ready at a
+        generation boundary: retire the table slot and install the static
+        attachment in one host-side critical section, so the very next
+        step executes the program on the fused lane exactly once."""
+        slot = self._live_slot_of.pop(link.link_id)
+        self.live.clear_slot(slot)              # gen bump -> table resync
+        self.device_attach.setdefault(link._parsed, []).append(link.pid)
+        self.attach_epoch += 1                  # loop picks a new step fn
+        link.lane, link.slot = "fused", None
+        link.promotion_state = "fused"
+        self._promoted_step = compiled
+        self.publish_status()
+
+    @contextlib.contextmanager
+    def _attach_overlay(self, extra: dict):
+        """Thread-locally overlay extra device attachments — the promotion
+        thread traces the FUTURE attach state through this without the
+        foreground step's trace (or jit cache) ever seeing it."""
+        prev = getattr(self._overlay_tls, "extra", None)
+        self._overlay_tls.extra = extra
+        try:
+            yield
+        finally:
+            self._overlay_tls.extra = prev
+
+    def _effective_attach(self) -> dict:
+        extra = getattr(self._overlay_tls, "extra", None)
+        if not extra:
+            return self.device_attach
+        merged = {k: list(v) for k, v in self.device_attach.items()}
+        for k, pids in extra.items():
+            merged.setdefault(k, []).extend(pids)
+        return merged
+
     # ---------------------------------------------------------------- device
     def wanted_sites(self) -> set[tuple[int, int]]:
-        return set(self.device_attach.keys()) | self._armed
+        return set(self._effective_attach().keys()) | self._armed
 
     def collector(self, stats_fn=None) -> E.Collector:
         return E.Collector(self.wanted_sites(), stats_fn=stats_fn)
@@ -347,7 +524,10 @@ class BpftimeRuntime:
         return map_states, aux
 
     def _static_lanes(self, event_rows, map_states, aux, mode):
-        if event_rows.shape[0] == 0 or not self.device_attach:
+        # the promotion thread traces through a thread-local overlay that
+        # already contains the link being promoted (see _attach_overlay)
+        device_attach = self._effective_attach()
+        if event_rows.shape[0] == 0 or not device_attach:
             return map_states, aux
         if mode == "fused":
             from . import vectorized as V
@@ -358,9 +538,9 @@ class BpftimeRuntime:
             # back to scan mode for exactness (rare; typical instrumentation
             # uses disjoint or fetch-add/hist maps).
             uniq = {pid: self.progs[pid].vprog
-                    for pids in self.device_attach.values() for pid in pids}
+                    for pids in device_attach.values() for pid in pids}
             n_attach = {pid: sum(pids.count(pid)
-                                 for pids in self.device_attach.values())
+                                 for pids in device_attach.values())
                         for pid in uniq}
             # multi-attached scan-lane programs also lose per-attachment
             # order in the combined scan (the vector lane preserves it)
@@ -371,7 +551,7 @@ class BpftimeRuntime:
             if not self_conflict and \
                     not _has_ordering_conflict(list(uniq.values())):
                 vec, rest = [], []
-                for (sid, kind), pids in sorted(self.device_attach.items()):
+                for (sid, kind), pids in sorted(device_attach.items()):
                     for pid in pids:
                         vprog = self.progs[pid].vprog
                         lane = vec if V.is_vector_safe(vprog) else rest
@@ -384,7 +564,7 @@ class BpftimeRuntime:
                         rest, event_rows, map_states, aux)
                 return map_states, aux
             mode = "scan"
-        for (sid, kind), pids in sorted(self.device_attach.items()):
+        for (sid, kind), pids in sorted(device_attach.items()):
             valid = ((event_rows[:, 0] == sid) &
                      (event_rows[:, 1] == kind))
             for pid in pids:
@@ -427,11 +607,14 @@ class BpftimeRuntime:
 
     def poll_control(self) -> list[dict]:
         """Pick up daemon attach/detach/load requests (between steps).
-        Requests with "live": true route into the program table
-        (attach_live) — the running compiled step picks them up after the
-        loop calls sync_live_table(); everything else goes through the
-        epoch-bumping (retrace) path. Each applied load_attach reports the
-        assigned link_id so the daemon can detach it later."""
+        Everything routes through the unified attach(): requests carry
+        "mode" ("auto"/"fused"/"table") and "promote"; legacy requests
+        with "live": true map to mode="table" (the running compiled step
+        picks them up after the loop calls sync_live_table()), legacy
+        requests without either map to mode="fused" (the epoch-bumping
+        path), exactly as before the API was unified.  Each applied
+        load_attach reports the assigned link id, lane, and promotion
+        state so the daemon can detach/confirm it later."""
         if self.shm is None:
             return []
         reqs, self._req_cursor = self.shm.poll_requests(self._req_cursor)
@@ -442,9 +625,16 @@ class BpftimeRuntime:
                     obj = ProgramObject.from_json(r["object"])
                     pid = self.load_object(obj)
                     tgt = r.get("target") or obj.attach_to
-                    lid = (self.attach_live(pid, tgt) if r.get("live")
-                           else self.attach(pid, tgt))
-                    applied.append({**r, "link_id": lid})
+                    mode = r.get("mode") or ("table" if r.get("live")
+                                             else "fused")
+                    # missing "promote" (hand-rolled/legacy request) pins
+                    # the link to its lane — promotion is strictly opt-in
+                    # over the wire (request_load_attach sends it)
+                    link = self.attach(pid, tgt, mode=mode,
+                                       promote=bool(r.get("promote", False)))
+                    applied.append({**r, "link_id": int(link),
+                                    "lane": link.lane,
+                                    "promotion": link.promotion_state})
                     continue
                 elif r["op"] == "detach":
                     self.detach(int(r["link_id"]))
@@ -472,6 +662,9 @@ class BpftimeRuntime:
                             for p, pid in enumerate(self.live.slot_pid)}
                            if self.live else {}),
             "links": {str(lid): lk.target for lid, lk in self.links.items()},
+            "promotions": {str(lid): {"lane": lk.lane,
+                                      "state": lk.promotion_state}
+                           for lid, lk in self.links.items()},
         })
 
     # ---------------------------------------------------------------- misc

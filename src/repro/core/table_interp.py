@@ -51,8 +51,10 @@ I64 = jnp.int64
 TABLE_HELPER_IDS = tuple(sorted(HELPERS))
 TABLE_HELPER_INDEX = {hid: i for i, hid in enumerate(TABLE_HELPER_IDS)}
 
-# per-program metadata rows carried next to the packed insn arrays
-META_FIELDS = ("active", "site", "kind", "n_insns", "fuel")
+# per-program metadata rows carried next to the packed insn arrays.
+# "vec" routes the slot to the batched lockstep machine (still DATA — the
+# scheduling decision rides in the table, so flipping it never retraces).
+META_FIELDS = ("active", "site", "kind", "n_insns", "fuel", "vec")
 
 # ALU handler order — index == (op & OP_MASK) >> 4
 _ALU_ORDER = (isa.BPF_ADD, isa.BPF_SUB, isa.BPF_MUL, isa.BPF_DIV, isa.BPF_OR,
@@ -405,6 +407,388 @@ def _build_core(spec_key: tuple, ctx_words: int):
 
 
 # --------------------------------------------------------------------------
+# batched lockstep machine — the vectorized interpreter lane
+# --------------------------------------------------------------------------
+#
+# The sequential core above scans the tape one event at a time: every event
+# pays a full while_loop of per-instruction lax.switch dispatches (~28x the
+# scan lane). The batched machine instead runs ONE slot's program over ALL
+# matching events in lockstep SIMT style: machine state is per-LANE
+# (pc[B], fuel[B], regs[B,11], stack[B,64], done[B]); each machine step
+# gathers the instruction fields at every lane's pc and executes all handler
+# classes compute-all-then-select — the vector-machine translation of the
+# opcode switch. Map side effects collapse to the same batched primitives the
+# fused lane uses (scatter-add, j_hash_fetch_add_batch, searchsorted hist),
+# so the per-event cost drops from O(insns) switch dispatches to
+# O(max_live_path) machine steps amortized over the whole batch.
+#
+# Bit-identity contract (vs the sequential scan order):
+#   * only programs whose helper calls are pure or commutative-effect
+#     (fetch-add family, hist_add) are eligible (`batched_encodable`);
+#     fetch-add results must be dead — integer adds commute, so any
+#     cross-lane interleave yields the same end state;
+#   * HASH fetch_add additionally changes table LAYOUT at each key's first
+#     insert, which is order-sensitive: a hash-touching program is eligible
+#     only if it has no conditional branches, so every live lane reaches the
+#     call at the same machine step in lane (= event) order and
+#     `j_hash_fetch_add_batch`'s first-occurrence insert order matches the
+#     sequential scan exactly;
+#   * cross-slot sharing is resolved host-side (`LiveTable._recompute_vec`):
+#     a batched slot never shares a hash map with any other slot, nor any
+#     map with a sequential slot that touches it non-commutatively.
+
+# effectful helpers whose map writes commute (candidates for batching)
+_BATCH_EFFECT = {"map_fetch_add", "percpu_fetch_add", "hist_add"}
+
+# The batched machine carries a NARROW per-lane stack — the top
+# `_BATCH_STACK_WORDS` words of the 512-byte frame — because the [B, words]
+# stack is copied every machine step and the full 64-word frame dominates
+# the per-step cost on CPU (the scatter/select traffic is ~8x the rest of
+# the machine combined). Probe programs keep keys/scratch at r10-8..r10-64,
+# so eligibility (`_fits_batch_stack`) checks the verifier's static offsets.
+_BATCH_STACK_WORDS = 8
+
+
+def _fits_batch_stack(vprog: VerifiedProgram) -> bool:
+    """True iff every verified stack access (loads/stores and helper key
+    pointers) lands in the top `_BATCH_STACK_WORDS * 8` bytes of the frame
+    — the only region the batched machine materializes."""
+    from .verifier import CallAnn, MemAnn
+    floor = STACK_SIZE - 8 * _BATCH_STACK_WORDS
+    for ann in vprog.anns.values():
+        if isinstance(ann, MemAnn):
+            if ann.region == "stack" and ann.off < floor:
+                return False
+        elif isinstance(ann, CallAnn):
+            sig = HELPERS[ann.hid]
+            for i, kind in enumerate(sig.args):
+                if kind == "kptr" and ann.statics[i] is not None \
+                        and ann.statics[i] < floor:
+                    return False
+    return True
+
+
+def _has_cond_branch(vprog: VerifiedProgram) -> bool:
+    for ins in vprog.insns:
+        if ins.cls in (isa.BPF_JMP, isa.BPF_JMP32):
+            op = ins.op & isa.OP_MASK
+            if op not in (isa.BPF_JA, isa.BPF_CALL, isa.BPF_EXIT):
+                return True
+    return False
+
+
+def batched_encodable(vprog: VerifiedProgram) -> bool:
+    """True iff this program may run on the batched lockstep machine with
+    end states bit-identical to the sequential scan order. Loops are fine
+    (the machine steps diverged lanes independently); the constraints are
+    commutative-only effects, dead fetch-add results, stack traffic within
+    the machine's narrow frame, and — for HASH fetch_add, whose insert
+    order shapes the table layout — perfect lockstep, i.e. no conditional
+    branches."""
+    from .vectorized import _PURE, _r0_dead_after
+    from .verifier import CallAnn
+    if not _fits_batch_stack(vprog):
+        return False
+    touches_hash = False
+    for pc, ann in vprog.anns.items():
+        if not isinstance(ann, CallAnn):
+            continue
+        if ann.name in _PURE:
+            continue
+        if ann.name not in _BATCH_EFFECT:
+            return False
+        if ann.name in ("map_fetch_add", "percpu_fetch_add") and \
+                not _r0_dead_after(vprog, pc):
+            return False
+        if ann.name == "map_fetch_add" and \
+                vprog.map_specs[ann.statics[0]].kind == M.MapKind.HASH:
+            touches_hash = True
+    if touches_hash and _has_cond_branch(vprog):
+        return False
+    return True
+
+
+def _slot_resources(vprog: VerifiedProgram):
+    """({map_name: commutative-by-this-program}, {hash map names touched})
+    — the host-side footprint `_recompute_vec` resolves conflicts with."""
+    from .verifier import CallAnn
+    res: dict[str, bool] = {}
+    hashes: set[str] = set()
+    for ann in vprog.anns.values():
+        if not isinstance(ann, CallAnn):
+            continue
+        sig = HELPERS[ann.hid]
+        comm = sig.name in _BATCH_EFFECT
+        for i, kind in enumerate(sig.args):
+            if kind == "mapfd":
+                sp = vprog.map_specs[ann.statics[i]]
+                res[sp.name] = res.get(sp.name, True) and comm
+                if sp.kind == M.MapKind.HASH:
+                    hashes.add(sp.name)
+    return res, hashes
+
+
+@functools.lru_cache(maxsize=64)
+def _build_batched_core(spec_key: tuple, ctx_words: int):
+    """Build the batched lockstep interpreter for a fixed map universe.
+    `bcore(prog, ctx_rows, maps_state, aux, preds)` runs ONE table slot over
+    a whole event batch and returns (r0[B], maps_state). Like the sequential
+    core, the traced graph depends only on (spec_key, ctx_words) and the
+    padded dims — table contents stay pure data."""
+    specs = _specs_from_key(spec_key)
+    nmaps = len(specs)
+    hnames = [HELPERS[hid].name for hid in TABLE_HELPER_IDS]
+
+    vload = jax.vmap(J.dyn_word_load)
+
+    def _sel(rows, idx, hi):
+        """compute-all-then-select: rows is a list of [B] arrays, idx a [B]
+        selector — the batched form of `jnp.stack(rs)[op]`."""
+        ii = jnp.clip(idx, 0, hi).astype(jnp.int32)
+        return jnp.take_along_axis(jnp.stack(rows), ii[None, :], axis=0)[0]
+
+    def _batch_word_store(words, off, size, val):
+        """Elementwise twin of vmap(dyn_word_store) over the narrow [B, W]
+        stack: the two covering words are rewritten via word-index selects
+        instead of a batched scatter (XLA CPU serializes vmapped scatters —
+        this formulation is ~10x cheaper and bit-identical). Word1 is
+        selected first so a clipped w1 alias can never clobber the word0
+        write, mirroring dyn_word_store's write order."""
+        nwords = words.shape[1]
+        u = J._u
+        w0 = jnp.clip(off >> 3, 0, nwords - 1)
+        w1 = jnp.minimum(w0 + 1, nwords - 1)
+        rb = off & 7
+        old0 = jnp.take_along_axis(
+            words, w0[:, None].astype(jnp.int32), axis=1)[:, 0]
+        old1 = jnp.take_along_axis(
+            words, w1[:, None].astype(jnp.int32), axis=1)[:, 0]
+        nbits = (jnp.uint64(8) * u(size)) & jnp.uint64(63)
+        v = jnp.where(size >= 8, u(val),
+                      u(val) & ((jnp.uint64(1) << nbits) - jnp.uint64(1)))
+        nb0 = jnp.minimum(size, 8 - rb)
+        m0_bits = (jnp.uint64(8) * u(nb0)) & jnp.uint64(63)
+        m0 = jnp.where(nb0 >= 8, jnp.uint64(J._U64_FULL),
+                       (jnp.uint64(1) << m0_bits) - jnp.uint64(1)) \
+            << (jnp.uint64(8) * u(rb))
+        new0 = (u(old0) & ~m0) | ((v << (jnp.uint64(8) * u(rb))) & m0)
+        spans = (rb + size) > 8
+        nb1 = jnp.clip(rb + size - 8, 0, 7)
+        m1 = (jnp.uint64(1) << (jnp.uint64(8) * u(nb1))) - jnp.uint64(1)
+        sh1 = (jnp.uint64(8) * u(8 - rb)) & jnp.uint64(63)
+        new1 = (u(old1) & ~m1) | ((v >> sh1) & m1)
+        wcol = jnp.arange(nwords, dtype=jnp.int64)[None, :]
+        out = jnp.where((wcol == w1[:, None]) & spans[:, None],
+                        new1.astype(I64)[:, None], words)
+        out = jnp.where(wcol == w0[:, None], new0.astype(I64)[:, None], out)
+        return out
+
+    # Every map apply sits behind a lax.cond on "any lane fires": scatters
+    # (and the hash sort+probe twin) are the expensive per-step ops, and at
+    # most one machine step per program actually executes each call site —
+    # the cond makes every other step skip them at runtime.
+    def _apply_fetch_add(ms, fds, keys, deltas, m):
+        if nmaps == 0:
+            return ms
+        fdix = jnp.clip(fds, 0, nmaps - 1)
+        for si, sp in enumerate(specs):
+            mm = m & (fdix == si)
+            st = ms[sp.name]
+            if sp.kind == M.MapKind.ARRAY:
+                n = sp.max_entries
+
+                def do_array(o, n=n):
+                    st_, keys_, deltas_, mm_ = o
+                    inb = mm_ & (keys_ >= 0) & (keys_ < n)
+                    idx = jnp.clip(keys_, 0, n - 1).astype(jnp.int32)
+                    vals = st_["values"].at[idx].add(
+                        jnp.where(inb, deltas_, jnp.int64(0)))
+                    return {"values": vals}
+
+                new = jax.lax.cond(jnp.any(mm), do_array, lambda o: o[0],
+                                   (st, keys, deltas, mm))
+                ms = {**ms, sp.name: new}
+            elif sp.kind == M.MapKind.HASH:
+                new = jax.lax.cond(
+                    jnp.any(mm),
+                    lambda o: M.j_hash_fetch_add_batch(o[0], o[1], o[2],
+                                                       o[3]),
+                    lambda o: o[0],
+                    (st, keys, deltas, mm))
+                ms = {**ms, sp.name: new}
+        return ms
+
+    def _apply_percpu_fetch_add(ms, aux, fds, keys, deltas, m):
+        if nmaps == 0:
+            return ms
+        fdix = jnp.clip(fds, 0, nmaps - 1)
+        for si, sp in enumerate(specs):
+            if sp.kind != M.MapKind.PERCPU_ARRAY:
+                continue
+            mm = m & (fdix == si)
+            st = ms[sp.name]
+            n = sp.max_entries
+
+            def do_percpu(o, n=n, sp=sp):
+                st_, keys_, deltas_, mm_, cpu = o
+                inb = mm_ & (keys_ >= 0) & (keys_ < n)
+                idx = jnp.clip(keys_, 0, n - 1).astype(jnp.int32)
+                sh = jnp.clip(cpu, 0, sp.num_shards - 1).astype(jnp.int32)
+                vals = st_["values"].at[sh, idx].add(
+                    jnp.where(inb, deltas_, jnp.int64(0)))
+                return {"values": vals}
+
+            new = jax.lax.cond(jnp.any(mm), do_percpu, lambda o: o[0],
+                               (st, keys, deltas, mm, aux["cpu"]))
+            ms = {**ms, sp.name: new}
+        return ms
+
+    def _apply_hist_add(ms, fds, values, m):
+        if nmaps == 0:
+            return ms
+        fdix = jnp.clip(fds, 0, nmaps - 1)
+        pow2 = jnp.asarray(M._POW2)
+        for si, sp in enumerate(specs):
+            if sp.kind != M.MapKind.LOG2HIST:
+                continue
+            mm = m & (fdix == si)
+            st = ms[sp.name]
+
+            def do_hist(o):
+                st_, values_, mm_ = o
+                bl = jnp.searchsorted(pow2, values_, side="right").astype(
+                    jnp.int32)
+                bins_idx = jnp.where(values_ <= 0, 0, jnp.minimum(63, bl))
+                bins = st_["bins"].at[bins_idx].add(
+                    jnp.where(mm_, jnp.int64(1), jnp.int64(0)))
+                return {"bins": bins}
+
+            new = jax.lax.cond(jnp.any(mm), do_hist, lambda o: o[0],
+                               (st, values, mm))
+            ms = {**ms, sp.name: new}
+        return ms
+
+    def bcore(prog: dict, ctx_rows, maps_state, aux, preds):
+        n_pad = prog["hcls"].shape[0]
+        B = ctx_rows.shape[0]
+        col = jnp.arange(11, dtype=jnp.int64)[None, :]
+        # byte address of the narrow stack's word 0 (top of the real frame)
+        sbase = jnp.int64(STACK_BASE + STACK_SIZE - 8 * _BATCH_STACK_WORDS)
+
+        def machine_cond(c):
+            pc, fuel, regs, stacks, ms, done = c
+            return jnp.any((~done) & (fuel > 0))
+
+        def machine_step(c):
+            pc, fuel, regs, stacks, ms, done = c
+            live = (~done) & (fuel > 0)
+            i = jnp.clip(pc, 0, n_pad - 1).astype(jnp.int32)
+            g = {f: prog[f][i] for f in TABLE_FIELDS}   # [B] field gathers
+            hcls = g["hcls"]
+            dst = jnp.clip(g["dst"], 0, 10)
+            src = jnp.clip(g["src"], 0, 10)
+            d = jnp.take_along_axis(
+                regs, dst[:, None].astype(jnp.int32), axis=1)[:, 0]
+            sreg = jnp.take_along_axis(
+                regs, src[:, None].astype(jnp.int32), axis=1)[:, 0]
+            s = jnp.where(g["use_imm"] != 0, g["imm"], sreg)
+
+            # ALU, both widths — compute-all-then-select, elementwise [B]
+            v64 = _sel([J._alu_jax(op, d, s, True) for op in _ALU_ORDER],
+                       g["aluop"], 12)
+            v32 = _sel([J._alu_jax(op, d, s, False) for op in _ALU_ORDER],
+                       g["aluop"], 12)
+
+            # LDX — per-lane dynamic loads from stack or ctx row
+            addr = sreg + g["off"]
+            v_st = vload(stacks, addr - sbase, g["size"])
+            v_cx = vload(ctx_rows, addr - CTX_BASE, g["size"])
+            v_ldx = jnp.where(addr >= CTX_BASE, v_cx, v_st)
+
+            # register writeback (alu / lddw / ldx)
+            wval = v64
+            wval = jnp.where(hcls == isa.TH_ALU32, v32, wval)
+            wval = jnp.where(hcls == isa.TH_LDDW, g["imm"], wval)
+            wval = jnp.where(hcls == isa.TH_LDX, v_ldx, wval)
+            wmask = live & ((hcls == isa.TH_ALU64) | (hcls == isa.TH_ALU32)
+                            | (hcls == isa.TH_LDDW) | (hcls == isa.TH_LDX))
+            regs = jnp.where(wmask[:, None] & (col == dst[:, None]),
+                             wval[:, None], regs)
+
+            # stores (ST imm / STX reg) — d is the pre-write base pointer.
+            # Masked lanes store with size 0: dyn_word_store then writes the
+            # covering words back unchanged, so no outer select over the
+            # whole [B, words] stack is needed.
+            st_mask = live & ((hcls == isa.TH_ST) | (hcls == isa.TH_STX))
+            stval = jnp.where(hcls == isa.TH_STX, sreg, g["imm"])
+            stacks = _batch_word_store(
+                stacks, d + g["off"] - sbase,
+                jnp.where(st_mask, g["size"], jnp.int64(0)), stval)
+
+            # helper calls — masked batched applies, one per (helper, spec)
+            at_call = live & (hcls == isa.TH_CALL)
+            r1, r2, r3 = regs[:, 1], regs[:, 2], regs[:, 3]
+            keys8 = vload(stacks, r2 - sbase, jnp.full((B,), 8, dtype=I64))
+            r0c = jnp.zeros((B,), I64)
+            for hi, name in enumerate(hnames):
+                m = at_call & (g["hid"] == hi)
+                if name == "ktime_get_ns":
+                    r0c = jnp.where(m, aux["time_ns"], r0c)
+                elif name == "get_smp_processor_id":
+                    r0c = jnp.where(m, aux["cpu"], r0c)
+                elif name == "get_current_pid_tgid":
+                    r0c = jnp.where(m, aux["pid"], r0c)
+                elif name == "log2":
+                    r0c = jnp.where(
+                        m, jax.vmap(M.jnp_log2_bin)(r1).astype(I64), r0c)
+                elif name == "map_fetch_add":
+                    # r0 is verified dead (batched_encodable) -> stays 0
+                    ms = _apply_fetch_add(ms, r1, keys8, r3, m)
+                elif name == "percpu_fetch_add":
+                    ms = _apply_percpu_fetch_add(ms, aux, r1, keys8, r3, m)
+                elif name == "hist_add":
+                    ms = _apply_hist_add(ms, r1, r2, m)
+                # any other helper is unreachable in a vec slot
+                # (batched_encodable gates encoding) — mask stays a no-op
+            regs = jnp.where(at_call[:, None] & (col == 0),
+                             r0c[:, None], regs)
+            regs = jnp.where(at_call[:, None] & (col >= 1) & (col <= 5),
+                             jnp.int64(0), regs)
+
+            # control flow: cond-jumps select, everything else falls through
+            # to the pre-resolved tgt (ja) or pc+1
+            c64 = _sel([jnp.zeros((B,), bool) if op is None
+                        else J._jmp_cond_jax(op, d, s, True)
+                        for op in _COND_ORDER], g["aluop"],
+                       len(_COND_ORDER) - 1)
+            c32 = _sel([jnp.zeros((B,), bool) if op is None
+                        else J._jmp_cond_jax(op, d, s, False)
+                        for op in _COND_ORDER], g["aluop"],
+                       len(_COND_ORDER) - 1)
+            taken = jnp.where(hcls == isa.TH_JCOND64, c64,
+                              jnp.where(hcls == isa.TH_JCOND32, c32,
+                                        jnp.ones((B,), bool)))
+            nxt = jnp.where(taken, g["tgt"], pc + 1)
+            return (jnp.where(live, nxt, pc),
+                    jnp.where(live, fuel - 1, fuel),
+                    regs, stacks, ms,
+                    done | (live & (hcls == TH_EXIT)))
+
+        regs0 = jnp.zeros((B, 11), I64)
+        regs0 = regs0.at[:, isa.R1].set(jnp.int64(CTX_BASE))
+        regs0 = regs0.at[:, isa.R10].set(jnp.int64(STACK_BASE + STACK_SIZE))
+        stacks0 = jnp.zeros((B, _BATCH_STACK_WORDS), I64)
+        init = (jnp.zeros((B,), I64),
+                jnp.broadcast_to(prog["fuel"], (B,)),
+                regs0, stacks0, maps_state, ~preds)
+        _pc, _fuel, regs, _stacks, ms, _done = jax.lax.while_loop(
+            machine_cond, machine_step, init)
+        return regs[:, 0], ms
+
+    return bcore
+
+
+# --------------------------------------------------------------------------
 # the live table (host-side owner + in-step lane driver)
 # --------------------------------------------------------------------------
 
@@ -433,6 +817,10 @@ class LiveTable:
             self.host[f] = np.zeros((max_programs,), np.int64)
         self.host["gen"] = np.zeros((1,), np.int64)
         self.slot_pid: list[int | None] = [None] * max_programs
+        # host-side scheduling inputs for the batched lane (never traced)
+        self._slot_vec_ok: list[bool] = [False] * max_programs
+        self._slot_res: list[dict] = [{}] * max_programs
+        self._slot_hash: list[set] = [set()] * max_programs
 
     # ------------------------------------------------------------- host side
     def device_state(self) -> dict:
@@ -462,34 +850,109 @@ class LiveTable:
         # safety net, not a semantic) is outside the equivalence contract.
         max_block = max((b.end - b.start for b in vprog.blocks), default=1)
         self.host["fuel"][slot] = vprog.max_insns * max(1, max_block)
+        self._slot_vec_ok[slot] = batched_encodable(vprog)
+        self._slot_res[slot], self._slot_hash[slot] = _slot_resources(vprog)
+        self._recompute_vec()
         self.host["gen"][0] += 1
         self.slot_pid[slot] = pid
 
     def clear_slot(self, slot: int) -> None:
         self.host["active"][slot] = 0
+        self._slot_vec_ok[slot] = False
+        self._slot_res[slot] = {}
+        self._slot_hash[slot] = set()
+        self._recompute_vec()
         self.host["gen"][0] += 1
         self.slot_pid[slot] = None
 
+    def _recompute_vec(self) -> None:
+        """Resolve which active slots run on the batched machine. A slot
+        starts from its program's own eligibility (`batched_encodable`) and
+        is demoted to the sequential lane when cross-slot sharing would make
+        the batched interleave observable:
+
+          * it touches a HASH map that ANY other active slot also touches —
+            hash layout is insert-order-sensitive, and batching one slot
+            reorders its inserts relative to the per-event interleave;
+          * it shares a map with a sequential slot that touches it
+            NON-commutatively (lookup/update/delete observe order).
+
+        Demotions only remove batched slots (a demoted slot is commutative
+        on everything it touches), so the fixpoint is reached in one or two
+        sweeps. The result is written into the `vec` meta row — pure table
+        DATA, so rescheduling never retraces."""
+        P = self.max_programs
+        eff = [bool(self.host["active"][p]) and self._slot_vec_ok[p]
+               for p in range(P)]
+        changed = True
+        while changed:
+            changed = False
+            for p in range(P):
+                if not eff[p]:
+                    continue
+                for q in range(P):
+                    if q == p or not self.host["active"][q]:
+                        continue
+                    shared = set(self._slot_res[p]) & set(self._slot_res[q])
+                    for mname in shared:
+                        if mname in self._slot_hash[p] or \
+                                (not eff[q]
+                                 and not self._slot_res[q][mname]):
+                            eff[p] = False
+                            changed = True
+                            break
+                    if not eff[p]:
+                        break
+        for p in range(P):
+            self.host["vec"][p] = 1 if eff[p] else 0
+
     # ------------------------------------------------------------- device side
     def run(self, table_state: dict, event_rows, maps_state, aux):
-        """The interpreter lane: scan the event tape, running every active
-        table slot on each row (slot order — the combined-scan interleave,
-        like jit.run_fused_scan). Traced inside the step function; everything
-        about `table_state` is data."""
+        """The interpreter lane, two sub-lanes selected by table DATA:
+
+          * slots with `vec == 0` share one sequential lax.scan over the
+            tape (slot order per event — the combined-scan interleave, like
+            jit.run_fused_scan). The whole scan sits behind a `lax.cond` on
+            "any sequential slot active", so an all-batched table skips the
+            per-event while_loops entirely at runtime;
+          * slots with `vec == 1` each run the batched lockstep machine over
+            the full tape (commutative effects make the slot-vs-slot order
+            unobservable — enforced host-side by `_recompute_vec`).
+
+        Traced inside the step function; everything about `table_state` is
+        data, so attach/detach/rescheduling never retraces."""
         core = _build_core(self.spec_key, self.ctx_words)
+        bcore = _build_batched_core(self.spec_key, self.ctx_words)
+        active = table_state["active"]
+        vec = table_state["vec"]
 
-        def step(carry, row):
-            ms, ax = carry
-            for p in range(self.max_programs):
-                prog = {f: table_state[f][p] for f in TABLE_FIELDS}
-                prog["fuel"] = table_state["fuel"][p]
-                pred = ((table_state["active"][p] != 0)
-                        & (row[0] == table_state["site"][p])
-                        & (row[1] == table_state["kind"][p]))
-                _r0, ms, ax = core(prog, row, ms, ax, pred)
-            return (ms, ax), jnp.int64(0)
+        def seq_branch(op):
+            ms, ax = op
 
-        (ms, ax), _ = jax.lax.scan(step, (maps_state, aux), event_rows)
+            def step(carry, row):
+                ms, ax = carry
+                for p in range(self.max_programs):
+                    prog = {f: table_state[f][p] for f in TABLE_FIELDS}
+                    prog["fuel"] = table_state["fuel"][p]
+                    pred = ((active[p] != 0) & (vec[p] == 0)
+                            & (row[0] == table_state["site"][p])
+                            & (row[1] == table_state["kind"][p]))
+                    _r0, ms, ax = core(prog, row, ms, ax, pred)
+                return (ms, ax), jnp.int64(0)
+
+            (ms, ax), _ = jax.lax.scan(step, (ms, ax), event_rows)
+            return ms, ax
+
+        ms, ax = jax.lax.cond(jnp.any((active != 0) & (vec == 0)),
+                              seq_branch, lambda op: op, (maps_state, aux))
+
+        for p in range(self.max_programs):
+            prog = {f: table_state[f][p] for f in TABLE_FIELDS}
+            prog["fuel"] = table_state["fuel"][p]
+            preds = ((active[p] != 0) & (vec[p] != 0)
+                     & (event_rows[:, 0] == table_state["site"][p])
+                     & (event_rows[:, 1] == table_state["kind"][p]))
+            _r0, ms = bcore(prog, event_rows, ms, ax, preds)
         return ms, ax
 
 
@@ -518,3 +981,29 @@ def run_program(vprog: VerifiedProgram, ctx_row, maps_state, aux,
     prog["fuel"] = tbl["fuel"][0]
     return _jit_run_single(lt.spec_key, lt.ctx_words, prog,
                            jnp.asarray(ctx_row, I64), maps_state, aux)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _jit_run_batched(spec_key, ctx_words, prog, ctx_rows, maps_state, aux,
+                     preds):
+    bcore = _build_batched_core(spec_key, ctx_words)
+    return bcore(prog, ctx_rows, maps_state, aux, preds)
+
+
+def run_program_batched(vprog: VerifiedProgram, ctx_rows, maps_state, aux,
+                        pad_insns: int = 128):
+    """Run ONE batched-eligible program through the lockstep machine over a
+    [B, ctx_words] batch with every lane valid — the differential twin of
+    the vec sub-lane (`(r0[B], maps_state)`). Callers gate on
+    `batched_encodable(vprog)`."""
+    lt = LiveTable(vprog.map_specs, ctx_words=vprog.ctx_words,
+                   max_programs=1,
+                   max_insns=max(pad_insns, len(vprog.insns)))
+    lt.encode_slot(0, vprog, site_id=0, kind=0)
+    tbl = lt.device_state()
+    prog = {f: tbl[f][0] for f in TABLE_FIELDS}
+    prog["fuel"] = tbl["fuel"][0]
+    rows = jnp.asarray(ctx_rows, I64)
+    preds = jnp.ones((rows.shape[0],), bool)
+    return _jit_run_batched(lt.spec_key, lt.ctx_words, prog, rows,
+                            maps_state, aux, preds)

@@ -49,12 +49,31 @@ def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
 
     jit_cache: dict[int, object] = {}
 
+    def build_step():
+        return jax.jit(
+            make_train_step(cfg, tcfg, runtime, probe_mode=probe_mode))
+
     def get_step_fn():
         epoch = runtime.attach_epoch if runtime else 0
         if epoch not in jit_cache:
-            jit_cache[epoch] = jax.jit(
-                make_train_step(cfg, tcfg, runtime, probe_mode=probe_mode))
+            # a background-promoted table link pre-compiles the new epoch's
+            # step (core/promote.py) — never block the loop on a re-jit
+            # that promotion already paid for
+            promoted = runtime.take_promoted_step() if runtime else None
+            jit_cache[epoch] = promoted or build_step()
         return jit_cache[epoch]
+
+    def arm_promotion(batch_np):
+        """Hand the promotion engine the loop's step builder + the exact
+        call signature, so table-lane links injected later (poll_control)
+        converge to the fused lane without a foreground compile."""
+        if runtime is None or runtime.live is None \
+                or runtime._promoter is not None:
+            return
+        sig = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)),
+            (state, batch_np))
+        runtime.enable_promotion(build_step, sig)
 
     history = []
     t0 = time.time()
@@ -76,6 +95,7 @@ def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
                     f"row — a filter is vetoing every fetch")
             continue
         skips = 0
+        arm_promotion(batch_np)              # no-op after the first batch
         step_fn = get_step_fn()              # re-jits only on attach change
         state, metrics = step_fn(state, batch_np)
         history.append({k: float(np.asarray(v)) for k, v in metrics.items()})

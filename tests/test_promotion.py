@@ -1,0 +1,364 @@
+"""The unified attach API (PR 7) + background promotion to the fused lane.
+
+Covers: auto-mode routing, the Link handle, deprecation shims for the old
+attach_live/detach_live twins, promotion bit-identity across the swap
+boundary (jit cache stays 1 per lane), detach-mid-promotion cancellation,
+recompile-on-stale-world, control-plane routing, and promotion while the
+aggregator is being crash/restarted at an injected agg:cycle boundary.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import daemon as D, events as E, faults as F, jit as J, \
+    loader, maps as M
+from repro.core.runtime import BpftimeRuntime
+from repro.core.shm import ShmRegion
+
+COUNT_BY_LAYER = """
+    ldxdw r6, [r1+ctx:layer]
+    stxdw [r10-8], r6
+    lddw r1, map:pm_counts
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+HIST_RMS = """
+    ldxdw r2, [r1+ctx:rms]
+    lddw r1, map:pm_hist
+    call hist_add
+    mov r0, 0
+    exit
+"""
+
+ARR = M.MapSpec("pm_counts", M.MapKind.ARRAY, max_entries=64)
+HIST = M.MapSpec("pm_hist", M.MapKind.LOG2HIST)
+SPECS = [ARR, HIST]
+
+
+def make_tape(n=48, seed=7):
+    rng = np.random.default_rng(seed)
+    rows = np.zeros((n, E.EVENT_WIDTH), np.int64)
+    rows[:, 0] = E.SITES.get_or_create("pm_block")
+    rows[:, 1] = np.where(np.arange(n) % 3 == 2, E.KIND_EXIT, E.KIND_ENTRY)
+    rows[:, 2] = rng.integers(0, 32, n)
+    rows[:, 6] = rng.integers(1, 1 << 30, n)
+    return jnp.asarray(rows)
+
+
+def live_rt(**kw):
+    rt = BpftimeRuntime()
+    for sp in SPECS:
+        rt.create_map(sp)
+    rt.enable_live_attach(max_programs=4, max_insns=64,
+                          arm=("uprobe:pm_block", "uretprobe:pm_block"),
+                          **kw)
+    return rt
+
+
+def stage_builder(rt):
+    return lambda: jax.jit(lambda r, m: rt.probe_stage(r, m, J.make_aux()))
+
+
+def sig_of(*args):
+    return jax.tree.map(
+        lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)),
+        args)
+
+
+def scan_reference(progs, tapes):
+    """Run PROGS statically in scan mode over the concatenated tapes —
+    the oracle every lane combination must match bit-for-bit."""
+    rt = BpftimeRuntime()
+    for sp in SPECS:
+        rt.create_map(sp)
+    for name, text, mp, tgt in progs:
+        pid = rt.load_asm(name, text, mp, "uprobe")
+        rt.attach(pid, tgt, mode="fused")
+    maps = rt.init_device_maps()
+    stage = jax.jit(
+        lambda r, m: rt.probe_stage(r, m, J.make_aux(), mode="scan"))
+    for rows in tapes:
+        maps, _ = stage(rows, maps)
+    return maps
+
+
+def assert_maps_equal(got, want, names=("pm_counts", "pm_hist")):
+    for name in names:
+        for k in want[name]:
+            np.testing.assert_array_equal(np.asarray(got[name][k]),
+                                          np.asarray(want[name][k]),
+                                          err_msg=f"{name}.{k}")
+
+
+# --------------------------------------------------------------- unified API
+
+def test_attach_auto_mode_routing():
+    """auto = table iff the live lane can host the program RIGHT NOW
+    (enabled + site collected + free slot + encodable), else fused."""
+    rt = live_rt()
+    pid = rt.load_asm("pm_count", COUNT_BY_LAYER, [ARR], "uprobe")
+    lk = rt.attach(pid, "uprobe:pm_block")
+    assert lk.lane == "table" and lk.slot == 0
+    assert lk.promotion_state == "interp" and lk.promote
+
+    # un-collected site: the trace-fixed collector would never feed the
+    # table, so auto takes the epoch-bump path
+    lk2 = rt.attach(pid, "uprobe:pm_elsewhere")
+    assert lk2.lane == "fused" and lk2.promotion_state == "none"
+    rt.detach(lk2)
+
+    # table full -> fused fallback
+    fillers = [rt.attach(pid, "uprobe:pm_block", mode="table")
+               for _ in range(3)]
+    assert rt.live.free_slot() is None
+    lk3 = rt.attach(pid, "uprobe:pm_block")
+    assert lk3.lane == "fused"
+    for f in fillers:
+        f.detach()
+
+    # no live lane at all -> fused
+    rt2 = BpftimeRuntime()
+    rt2.create_map(ARR)
+    pid2 = rt2.load_asm("pm_count", COUNT_BY_LAYER, [ARR], "uprobe")
+    assert rt2.attach(pid2, "uprobe:pm_block").lane == "fused"
+
+    # host targets take the host lane whatever the live lane says
+    lkh = rt.attach(pid, "tracepoint:sys_step_end:enter")
+    assert lkh.lane == "host" and lkh.promotion_state == "none"
+    with pytest.raises(ValueError, match="device target"):
+        rt.attach(pid, "filter:sys_step_end", mode="table")
+    with pytest.raises(ValueError, match="bad attach mode"):
+        rt.attach(pid, "uprobe:pm_block", mode="eager")
+
+
+def test_link_handle_roundtrips():
+    rt = live_rt()
+    pid = rt.load_asm("pm_count", COUNT_BY_LAYER, [ARR], "uprobe")
+    lk = rt.attach(pid, "uprobe:pm_block", mode="table")
+    assert int(lk) == lk.link_id and rt.links[int(lk)] is lk
+    lk.detach()                              # handle-side detach
+    assert int(lk) not in rt.links and rt.live.free_slot() == 0
+    lk2 = rt.attach(pid, "uprobe:pm_block", mode="fused")
+    rt.detach(int(lk2))                      # detach by bare integer id
+    assert not rt.device_attach
+
+
+def test_deprecation_shims_still_work():
+    rt = live_rt()
+    pid = rt.load_asm("pm_count", COUNT_BY_LAYER, [ARR], "uprobe")
+    with pytest.warns(DeprecationWarning, match="attach_live"):
+        lk = rt.attach_live(pid, "uprobe:pm_block")
+    assert lk.lane == "table" and not lk.promote   # pinned, like the old API
+    assert rt.live.host["active"][lk.slot] == 1
+    with pytest.warns(DeprecationWarning, match="detach_live"):
+        rt.detach_live(int(lk))
+    assert int(lk) not in rt.links
+    assert rt.live.host["active"][0] == 0
+
+
+# --------------------------------------------------------------- promotion
+
+def test_promotion_bit_identity_across_swap():
+    """The tentpole invariant: interp phase -> (one generation boundary)
+    -> fused phase produces EXACTLY the state of an all-scan oracle over
+    the same tape — nothing skipped, nothing double-counted — while the
+    live step's jit cache stays at 1 and the fused step was compiled once,
+    in the background path."""
+    rows1, rows2 = make_tape(seed=7), make_tape(seed=11)
+    rt = live_rt()
+    step = stage_builder(rt)()
+    maps = rt.init_device_maps()
+
+    pid = rt.load_asm("pm_count", COUNT_BY_LAYER, [ARR], "uprobe")
+    lk = rt.attach(pid, "uprobe:pm_block")        # auto -> table
+    maps = rt.sync_live_table(maps)
+    maps, _ = step(rows1, maps)                   # interp phase
+    assert step._cache_size() == 1
+
+    # arm the engine (synchronous for determinism) — schedules the link,
+    # compiles the fused step against the future attach state
+    eng = rt.enable_promotion(stage_builder(rt), sig_of(rows1, maps),
+                              background=False)
+    assert lk.promotion_state == "ready", lk.promotion_error
+    assert lk.lane == "table"                     # not yet swapped
+
+    epoch0 = rt.attach_epoch
+    maps = rt.sync_live_table(maps)               # THE generation boundary
+    assert lk.lane == "fused" and lk.promotion_state == "fused"
+    assert lk.slot is None and rt.live.free_slot() == 0
+    assert rt.attach_epoch == epoch0 + 1
+    fused = rt.take_promoted_step()
+    assert fused is not None
+    assert rt.take_promoted_step() is None        # consumed exactly once
+
+    maps, _ = fused(rows2, maps)                  # fused phase
+    assert step._cache_size() == 1, "foreground step retraced"
+    assert eng.compiles == 1, "promotion compiled more than once"
+
+    oracle = scan_reference(
+        [("pm_count", COUNT_BY_LAYER, [ARR], "uprobe:pm_block")],
+        [rows1, rows2])
+    assert_maps_equal(maps, oracle)
+
+    # the old (pre-promotion) step still runs — empty table, no static
+    # attach in ITS trace — and must now be a no-op on the counters
+    before = int(np.asarray(maps["pm_counts"]["values"]).sum())
+    maps_idle, _ = step(rows2, maps)
+    assert int(np.asarray(maps_idle["pm_counts"]["values"]).sum()) == before
+
+    # re-promoting the same world is a pure cache hit
+    rt.detach(lk)
+    lk2 = rt.attach(pid, "uprobe:pm_block", mode="table")
+    eng.schedule(lk2)
+    rt.sync_live_table(maps_idle)
+    assert lk2.lane == "fused" and eng.compiles == 1
+
+
+def test_detach_mid_promotion_cancels_cleanly():
+    """A link detached while its compile is in flight never swaps in: the
+    thread backs off, the slot is already free, no epoch bump happens."""
+    rows = make_tape()
+    rt = live_rt()
+    maps = rt.init_device_maps()
+    pid = rt.load_asm("pm_count", COUNT_BY_LAYER, [ARR], "uprobe")
+
+    gate = threading.Event()
+
+    def gated_builder():
+        gate.wait(10)
+        return stage_builder(rt)()
+
+    eng = rt.enable_promotion(gated_builder, sig_of(rows, maps),
+                              background=True)
+    lk = rt.attach(pid, "uprobe:pm_block", mode="table")
+    assert lk.promotion_state == "compiling"
+    epoch0 = rt.attach_epoch
+    rt.detach(lk)                                 # mid-compile
+    assert lk.promotion_state == "cancelled"
+    gate.set()
+    eng.wait()
+    assert eng.pending() == 0                     # never queued for apply
+    maps = rt.sync_live_table(maps)
+    assert rt.take_promoted_step() is None
+    assert rt.attach_epoch == epoch0
+    assert not rt.device_attach
+    assert rt.live.free_slot() == 0               # slot really freed
+
+
+def test_promotion_reschedules_when_world_moves():
+    """An artifact compiled against a stale attach state must never swap
+    in: apply_ready detects the signature drift, recompiles, and the NEXT
+    boundary promotes — results stay bit-identical to the oracle that saw
+    both programs."""
+    rows1, rows2 = make_tape(seed=3), make_tape(seed=5)
+    rt = live_rt()
+    step = stage_builder(rt)()
+    maps = rt.init_device_maps()
+    pid_c = rt.load_asm("pm_count", COUNT_BY_LAYER, [ARR], "uprobe")
+    pid_h = rt.load_asm("pm_histp", HIST_RMS, [HIST], "uprobe")
+
+    eng = rt.enable_promotion(stage_builder(rt), sig_of(rows1, maps),
+                              background=False)
+    lk = rt.attach(pid_c, "uprobe:pm_block", mode="table")
+    assert lk.promotion_state == "ready" and eng.compiles == 1
+
+    # the world moves before the boundary: a second program lands on the
+    # fused lane, so the ready artifact's trace is missing it
+    rt.attach(pid_h, "uretprobe:pm_block", mode="fused")
+    maps = rt.sync_live_table(maps)
+    assert lk.lane == "table", "stale artifact must not swap in"
+    assert lk.promotion_state == "ready" and eng.compiles == 2
+
+    maps, _ = step(rows1, maps)                   # interp + fused coexist
+    maps = rt.sync_live_table(maps)               # next boundary: matches
+    assert lk.lane == "fused" and lk.promotion_state == "fused"
+    fused = rt.take_promoted_step()
+    maps, _ = fused(rows2, maps)
+
+    oracle = scan_reference(
+        [("pm_count", COUNT_BY_LAYER, [ARR], "uprobe:pm_block"),
+         ("pm_histp", HIST_RMS, [HIST], "uretprobe:pm_block")],
+        [rows1, rows2])
+    assert_maps_equal(maps, oracle)
+
+
+# --------------------------------------------------------- control plane
+
+def test_poll_control_routes_modes_and_status(tmp_path):
+    rt = live_rt()
+    rt.setup_shm(str(tmp_path / "shm"))
+    obj = loader.build_object(
+        "pm_count", COUNT_BY_LAYER, [ARR], "uprobe",
+        attach_to="uprobe:pm_block")
+    other = ShmRegion.attach(str(tmp_path / "shm"))
+
+    D.request_load_attach(other, obj.to_json(), mode="table", promote=False)
+    D.request_load_attach(other, obj.to_json(), live=True)       # legacy
+    D.request_load_attach(other, obj.to_json(), mode="fused")
+    applied = rt.poll_control()
+    assert [a["lane"] for a in applied] == ["table", "table", "fused"]
+    assert applied[0]["promotion"] == "interp"
+
+    status = rt.shm.read_status()
+    lanes = {lid: p["lane"] for lid, p in status["promotions"].items()}
+    assert sorted(lanes.values()) == ["fused", "table", "table"]
+    states = {lid: p["state"] for lid, p in status["promotions"].items()}
+    assert states[str(applied[0]["link_id"])] == "interp"
+    assert states[str(applied[2]["link_id"])] == "none"
+
+    D.request_detach(other, applied[1]["link_id"])
+    rt.poll_control()
+    assert applied[1]["link_id"] not in rt.links
+
+
+def test_promotion_under_agg_cycle_fault_never_tears(tmp_path):
+    """Chaos x promotion: the daemon crashes at an injected agg:cycle
+    boundary while the worker promotes its link between publishes; after a
+    journal restart the global view still converges to the exact oracle —
+    the swap can't tear or double-fold the fleet's state."""
+    root = str(tmp_path / "shm")
+    rows1, rows2 = make_tape(seed=21), make_tape(seed=22)
+    rt = live_rt()
+    rt.setup_shm(root, worker_id="w0")
+    maps = rt.init_device_maps()
+    pid = rt.load_asm("pm_count", COUNT_BY_LAYER, [ARR], "uprobe")
+    eng = rt.enable_promotion(stage_builder(rt), sig_of(rows1, maps),
+                              background=False)
+    lk = rt.attach(pid, "uprobe:pm_block", mode="table")
+    assert lk.promotion_state == "ready"
+
+    maps = rt.sync_live_table(maps)               # boundary 1: swap
+    assert lk.lane == "fused" and eng.compiles == 1
+    fused = rt.take_promoted_step()
+
+    maps, _ = fused(rows1, maps)                  # fused: counts rows1
+    rt.publish(maps)
+
+    agg = D.Aggregator(root)
+    with F.plan(F.FaultPlan(seed=0, crash_at=1)):
+        with pytest.raises(F.InjectedCrash):
+            agg.poll_once()
+    agg = D.Aggregator(root)                      # journal restart
+    agg.poll_once()
+
+    maps, _ = fused(rows2, maps)                  # keep training
+    rt.publish(maps)
+    agg.poll_once()
+    agg.poll_once()
+
+    oracle = scan_reference(
+        [("pm_count", COUNT_BY_LAYER, [ARR], "uprobe:pm_block")],
+        [rows1, rows2])
+    from repro.core import shm as SH
+    g = SH.GlobalView.attach(root)
+    np.testing.assert_array_equal(
+        g.snapshot("pm_counts")["values"],
+        np.asarray(oracle["pm_counts"]["values"]))

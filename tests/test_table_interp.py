@@ -109,7 +109,7 @@ def test_interp_lane_matches_scan_mode():
     rt = live_runtime()
     for name, text, maps, target in PROGS:
         pid = rt.load_asm(name, text, maps, "uprobe")
-        rt.attach_live(pid, target)
+        rt.attach(pid, target, mode="table")
     maps_live = rt.init_device_maps()
     stage = jax.jit(lambda r, m: rt.probe_stage(r, m, J.make_aux()))
     maps_live, _ = stage(rows, maps_live)
@@ -144,7 +144,7 @@ def test_attach_live_does_not_retrace():
     assert stage._cache_size() == 1
     assert np.asarray(maps["lt_counts"]["values"]).sum() == 0
 
-    lid = rt.attach_live(pid, "uprobe:lt_block")
+    lid = rt.attach(pid, "uprobe:lt_block", mode="table")
     maps = rt.sync_live_table(maps)
     maps = stage(rows, maps)
     n_entry = int(np.asarray(rows[:, 1] == E.KIND_ENTRY).sum())
@@ -152,7 +152,7 @@ def test_attach_live_does_not_retrace():
     assert stage._cache_size() == 1, "live attach retraced the step"
     assert int(np.asarray(maps["__live_table__"]["gen"])[0]) == 1
 
-    rt.detach_live(lid)
+    rt.detach(lid)
     maps = rt.sync_live_table(maps)
     before = np.asarray(maps["lt_counts"]["values"]).sum()
     maps = stage(rows, maps)
@@ -164,22 +164,22 @@ def test_attach_live_does_not_retrace():
 def test_detach_routes_live_links():
     rt = live_runtime()
     pid = rt.load_asm(*PROGS[0][:3], "uprobe")
-    lid = rt.attach_live(pid, "uprobe:lt_block")
+    lid = rt.attach(pid, "uprobe:lt_block", mode="table")
     assert rt.live.host["active"][0] == 1
     rt.detach(lid)                      # generic detach routes to the table
     assert rt.live.host["active"][0] == 0
-    assert lid not in rt.links
+    assert int(lid) not in rt.links
 
 
 def test_slot_reuse_and_full_table():
     rt = live_runtime()
     pid = rt.load_asm(*PROGS[0][:3], "uprobe")
-    lids = [rt.attach_live(pid, "uprobe:lt_block") for _ in range(4)]
+    lids = [rt.attach(pid, "uprobe:lt_block", mode="table") for _ in range(4)]
     with pytest.raises(loader.LoadError, match="full"):
-        rt.attach_live(pid, "uprobe:lt_block")
-    rt.detach_live(lids[1])
-    lid = rt.attach_live(pid, "uprobe:lt_block")
-    assert rt._live_slot_of[lid] == 1   # freed slot is reused
+        rt.attach(pid, "uprobe:lt_block", mode="table")
+    rt.detach(lids[1])
+    lid = rt.attach(pid, "uprobe:lt_block", mode="table")
+    assert lid.slot == 1                # freed slot is reused
 
 
 def test_attach_live_rejects_unknown_map():
@@ -191,7 +191,7 @@ def test_attach_live_rejects_unknown_map():
     prog = COUNT_BY_LAYER.replace("map:lt_counts", "map:lt_after")
     pid = rt.load_asm("late", prog, [new_map], "uprobe")
     with pytest.raises(VerifierError, match="created after"):
-        rt.attach_live(pid, "uprobe:lt_block")
+        rt.attach(pid, "uprobe:lt_block", mode="table")
     assert rt.live.host["gen"][0] == 0
 
 
@@ -201,7 +201,7 @@ def test_attach_live_rejects_oversized_program():
     rt.enable_live_attach(max_programs=1, max_insns=8)
     pid = rt.load_asm(*PROGS[0][:3], "uprobe")
     with pytest.raises(VerifierError, match="padded"):
-        rt.attach_live(pid, "uprobe:lt_block")
+        rt.attach(pid, "uprobe:lt_block", mode="table")
     assert rt.live.host["gen"][0] == 0
 
 
@@ -210,7 +210,7 @@ def test_attach_live_requires_enable():
     rt.create_map(ARR)
     pid = rt.load_asm(*PROGS[0][:3], "uprobe")
     with pytest.raises(loader.LoadError, match="enable_live_attach"):
-        rt.attach_live(pid, "uprobe:lt_block")
+        rt.attach(pid, "uprobe:lt_block", mode="table")
 
 
 def test_loop_program_in_lane():
@@ -222,7 +222,7 @@ def test_loop_program_in_lane():
     rt.enable_live_attach(arm=("uprobe:lt_block",))
     pid = rt.load_asm("loopy", LOOP_SUM, [ARR], "uprobe")
     assert rt.progs[pid].vprog.tier == "loop"
-    rt.attach_live(pid, "uprobe:lt_block")
+    rt.attach(pid, "uprobe:lt_block", mode="table")
     maps, _ = jax.jit(lambda r, m: rt.probe_stage(r, m, J.make_aux()))(
         rows, rt.init_device_maps())
 
@@ -244,10 +244,10 @@ def test_live_lane_composes_with_fused_lane():
     rt = live_runtime()
     # static attachment (fused lane) on the hist map
     pid_h = rt.load_asm("lt_histp", HIST_RMS, [HIST], "uprobe")
-    rt.attach(pid_h, "uretprobe:lt_block")
+    rt.attach(pid_h, "uretprobe:lt_block", mode="fused")
     # hot attachment (table lane) on the array map
     pid_c = rt.load_asm("lt_count", COUNT_BY_LAYER, [ARR], "uprobe")
-    rt.attach_live(pid_c, "uprobe:lt_block")
+    rt.attach(pid_c, "uprobe:lt_block", mode="table")
 
     maps, _ = jax.jit(lambda r, m: rt.probe_stage(r, m, J.make_aux()))(
         rows, rt.init_device_maps())
@@ -324,7 +324,11 @@ def test_run_training_applies_daemon_live_inject(tmp_path):
         epoch_at_compile[s] = rt.attach_epoch
         if s == 2:      # a 'daemon' injects while training runs
             other = ShmRegion.attach(str(tmp_path / "shm"))
-            daemon.request_load_attach(other, prog.to_json(), live=True)
+            # promote=False pins the link to the interpreter: this test's
+            # invariant is that a NON-promoted live inject never re-jits
+            # (promotion is exercised in tests/test_promotion.py)
+            daemon.request_load_attach(other, prog.to_json(), live=True,
+                                       promote=False)
 
     state, hist = run_training(
         "qwen2-0.5b", steps=6, smoke=True, runtime=rt,
@@ -349,3 +353,52 @@ def test_armed_sites_collect_without_programs():
                      kind=E.KIND_ENTRY)
         rows = col.take_all_rows()
     assert rows.shape[0] == 1           # collected even with zero programs
+
+
+def test_batched_vec_flags_and_cross_slot_demotion():
+    """The batched (lockstep) interpreter only takes slots whose HASH
+    layout order is provably event-order; two slots sharing a HASH map
+    interleave inserts, so BOTH demote to the sequential scan — and the
+    demotion is recomputed (lifted) when the conflict detaches."""
+    rt = live_runtime()
+    pid_c = rt.load_asm("lt_count", COUNT_BY_LAYER, [ARR], "uprobe")
+    pid_h = rt.load_asm("lt_hashp", HASH_BY_LAYER, [HASH], "uprobe")
+    pid_h2 = rt.load_asm("lt_hashq", HASH_BY_LAYER, [HASH], "uprobe")
+
+    lk_c = rt.attach(pid_c, "uprobe:lt_block", mode="table")
+    lk_h = rt.attach(pid_h, "uprobe:lt_block", mode="table")
+    assert rt.live.host["vec"][lk_c.slot] == 1
+    assert rt.live.host["vec"][lk_h.slot] == 1     # sole owner of the HASH
+
+    lk_h2 = rt.attach(pid_h2, "uretprobe:lt_block", mode="table")
+    assert rt.live.host["vec"][lk_h.slot] == 0     # shared HASH: demoted
+    assert rt.live.host["vec"][lk_h2.slot] == 0
+    assert rt.live.host["vec"][lk_c.slot] == 1     # ARRAY slot unaffected
+
+    # the demoted mix still matches a scan-mode oracle bit-for-bit
+    rows = make_tape()
+    maps, _ = jax.jit(lambda r, m: rt.probe_stage(r, m, J.make_aux()))(
+        rows, rt.init_device_maps())
+
+    rt2 = BpftimeRuntime()
+    for sp in SPECS:
+        rt2.create_map(sp)
+    for name, text, mp, tgt in (("lt_count", COUNT_BY_LAYER, [ARR],
+                                 "uprobe:lt_block"),
+                                ("lt_hashp", HASH_BY_LAYER, [HASH],
+                                 "uprobe:lt_block"),
+                                ("lt_hashq", HASH_BY_LAYER, [HASH],
+                                 "uretprobe:lt_block")):
+        p = rt2.load_asm(name, text, mp, "uprobe")
+        rt2.attach(p, tgt, mode="fused")
+    maps2, _ = jax.jit(
+        lambda r, m: rt2.probe_stage(r, m, J.make_aux(), mode="scan"))(
+            rows, rt2.init_device_maps())
+    for name in ("lt_counts", "lt_hash"):
+        for k in maps[name]:
+            np.testing.assert_array_equal(np.asarray(maps[name][k]),
+                                          np.asarray(maps2[name][k]),
+                                          err_msg=f"{name}.{k}")
+
+    rt.detach(lk_h2)                               # conflict gone
+    assert rt.live.host["vec"][lk_h.slot] == 1     # demotion lifted

@@ -63,6 +63,22 @@ def run_both(text, ctx_words=None, specs=(), aux_kw=None, check_maps=True):
         vprog, ctx, t_maps, jit.make_aux(**aux_kw))
     _check_outputs("table", res, oracle_aux, np_maps, specs, t_r0,
                    t_maps_out, t_aux_out, check_maps)
+
+    # ... and so must the batched (lockstep SIMT) interpreter, wherever its
+    # eligibility gate admits the program
+    if table_interp.batched_encodable(vprog):
+        _, b_maps = _mk_maps(specs)
+        b_r0, b_maps_out = table_interp.run_program_batched(
+            vprog, ctx[None, :], b_maps, jit.make_aux(**aux_kw))
+        assert isa.u64(int(b_r0[0])) == isa.u64(res.r0), \
+            f"r0 mismatch: batched={isa.u64(int(b_r0[0])):#x} " \
+            f"vm={isa.u64(res.r0):#x}"
+        if check_maps:
+            for sp in specs:
+                for k, arr in np_maps[sp.name].items():
+                    np.testing.assert_array_equal(
+                        np.asarray(b_maps_out[sp.name][k]), arr,
+                        err_msg=f"[batched] map {sp.name}.{k}")
     return res, r0
 
 
