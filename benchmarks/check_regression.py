@@ -21,7 +21,12 @@ Hard floors:
     to the fused lane within ONE generation boundary and the swapped lane
     must be BIT-IDENTICAL to the scan oracle (both hard invariants);
     time-to-fused (compile hidden behind interp steps) within TOLERANCE
-    of the recorded budget.
+    of the recorded budget;
+  * fleet cold-join (DESIGN.md §13): a worker booting with a warm AOT
+    artifact cache must absorb its first probed event within a HARD
+    100ms ceiling (no tolerance) and within TOLERANCE of the recorded
+    budget, and the deserialized executable must be BIT-IDENTICAL to a
+    fresh compile (hard invariant).
 
     python benchmarks/check_regression.py BENCH_probe.json \
         [--baseline benchmarks/BENCH_baseline.json] [--tolerance 2.0]
@@ -37,6 +42,10 @@ import sys
 
 FUSED_FLOOR = 5.0
 INTERP_SCAN_CEIL = 5.0
+# hard ceiling on warm-cache worker cold-join (DESIGN.md §13): the Nth
+# fleet member must reach its first probed event by deserializing the
+# shared AOT artifact, never by retracing — an absolute wall, no tolerance
+WARM_JOIN_CEIL_MS = 100.0
 
 
 def check(result: dict, baseline: dict, tolerance: float) -> list[str]:
@@ -94,6 +103,27 @@ def check(result: dict, baseline: dict, tolerance: float) -> list[str]:
         failures.append(
             f"live attach latency {attach:.2f}ms exceeds budget "
             f"{attach_budget:.2f}ms x{tolerance}")
+
+    cj = result.get("cold_join")
+    cj_budget = baseline.get("cold_join", {}).get("warm_join_ms")
+    if cj is None:
+        failures.append("result json has no cold-join measurement "
+                        "(cold_join.warm_join_ms)")
+    else:
+        if not cj.get("bit_identical", False):
+            failures.append(
+                "cold-join BROKE BIT-IDENTITY: the deserialized AOT "
+                "executable diverges from the freshly compiled one "
+                "(DESIGN.md §13)")
+        warm = cj.get("warm_join_ms", float("inf"))
+        if warm > WARM_JOIN_CEIL_MS:
+            failures.append(
+                f"warm-cache cold-join {warm:.1f}ms exceeds the hard "
+                f"{WARM_JOIN_CEIL_MS:.0f}ms ceiling (DESIGN.md §13)")
+        if cj_budget and warm > cj_budget * tolerance:
+            failures.append(
+                f"warm-cache cold-join {warm:.1f}ms exceeds budget "
+                f"{cj_budget:.1f}ms x{tolerance}")
 
     fleet = result.get("fleet", {}).get("events_per_s")
     fleet_budget = baseline.get("fleet", {}).get("events_per_s")
@@ -161,6 +191,13 @@ def main(argv=None) -> int:
         print(f"attach:        {result['attach_latency_ms']:.2f}ms "
               f"(budget {baseline.get('attach_latency_ms', 0):.2f} "
               f"x{args.tolerance})")
+    if "cold_join" in result:
+        cj = result["cold_join"]
+        print(f"cold join:     {cj.get('warm_join_ms', 0):.1f}ms warm "
+              f"(hard ceiling {WARM_JOIN_CEIL_MS:.0f}ms, budget "
+              f"{baseline.get('cold_join', {}).get('warm_join_ms', 0):.1f}"
+              f"ms x{args.tolerance}, "
+              f"bit_identical={cj.get('bit_identical')})")
     if "fleet" in result:
         print(f"fleet merge:   "
               f"{result['fleet']['events_per_s']:.0f} events/s "

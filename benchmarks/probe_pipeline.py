@@ -267,6 +267,58 @@ def measure_promotion(n_events: int = 512, repeats: int = 3,
             "bit_identical": bit_identical}
 
 
+def measure_cold_join(n_events: int = 512, repeats: int = 3) -> dict:
+    """Worker cold-join latency through the fleet AOT artifact cache
+    (DESIGN.md §13): worker 1 boots the representative 3-program world,
+    compiles its probe-stage step and stores the serialized executable
+    under the layout fingerprint; workers 2..N derive the SAME key from
+    the same trace inputs and reach their first probed event by
+    deserializing instead of retracing.  Reports both boots, asserts the
+    warm path actually hit the cache, and checks the deserialized
+    executable produces bit-identical map state."""
+    import os
+    import shutil
+    import tempfile
+
+    root = tempfile.mkdtemp(prefix="bpftime_coldjoin_")
+    rows = make_tape(n_events)
+    try:
+        def join(expect_hit: bool):
+            """One worker boot: runtime + cache join + AOT step + first
+            event batch absorbed (the cold-join critical path)."""
+            rt = build_runtime()
+            rt.enable_artifact_cache(os.path.join(root, "cache"))
+            t0 = time.perf_counter()
+
+            def build():
+                return jax.jit(
+                    lambda r, m: rt.probe_stage(r, m, J.make_aux()))
+
+            compiled, hit = rt.aot_step(
+                build, (rows, rt.init_device_maps()),
+                extra_key=("coldjoin", n_events))
+            maps, _ = jax.tree.map(jax.block_until_ready,
+                                   compiled(rows, rt.init_device_maps()))
+            dt = time.perf_counter() - t0
+            assert hit == expect_hit, \
+                f"cold-join cache hit={hit}, expected {expect_hit}"
+            return dt, maps
+
+        cold_s, maps_cold = join(expect_hit=False)   # worker 1 populates
+        warm_s, maps_warm = join(expect_hit=True)    # worker 2 reuses
+        for _ in range(repeats - 1):
+            warm_s = min(warm_s, join(expect_hit=True)[0])
+        bit_identical = bool(np.array_equal(
+            np.asarray(maps_cold["bp_layer_counts"]["values"]),
+            np.asarray(maps_warm["bp_layer_counts"]["values"])))
+        return {"cold_join_ms": cold_s * 1e3,
+                "warm_join_ms": warm_s * 1e3,
+                "speedup": cold_s / max(warm_s, 1e-9),
+                "bit_identical": bit_identical}
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 def measure_fleet_merge(n_workers: int = 3, rounds: int = 8,
                         events_per_round: int = 2048) -> dict:
     """Merge throughput of the interprocess map plane (DESIGN.md §10):
@@ -405,6 +457,8 @@ def run(n_events: int = 4096, iters: int = 20,
         out["attach_latency_ms"] = measure_attach_latency() * 1e3
         # unified-attach promotion: interp -> compiling -> fused swap
         out["promotion"] = measure_promotion()
+    # fleet AOT cache: Nth-worker boot deserializes instead of retracing
+    out["cold_join"] = measure_cold_join()
     # interprocess map plane: merge throughput across a 3-worker fleet
     out["fleet"] = measure_fleet_merge(
         events_per_round=max(384, n_events // 2))
@@ -431,6 +485,11 @@ def main():
         print(f"# promotion: interp->fused in {pr['time_to_fused_ms']:.0f}ms"
               f"{cached} (one boundary={pr['promoted_within_one_boundary']},"
               f" bit_identical={pr['bit_identical']})")
+    if "cold_join" in res:
+        cj = res["cold_join"]
+        print(f"# cold join: {cj['warm_join_ms']:.1f}ms warm-cache "
+              f"(cold {cj['cold_join_ms']:.0f}ms, {cj['speedup']:.0f}x, "
+              f"bit_identical={cj['bit_identical']})")
     if "fleet" in res:
         fl = res["fleet"]
         print(f"# fleet merge: {fl['events_per_s']:.0f} events/s "

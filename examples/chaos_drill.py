@@ -15,7 +15,12 @@ What happens (DESIGN.md §11):
     seqlock never surfaced), its last CONSISTENT contribution is retained,
     the survivors' full contributions merge, and the recovered global view
     is bit-identical to the replayed oracle;
-  * `fleet health` renders the victim's transition to DEAD.
+  * `fleet health` renders the victim's transition to DEAD;
+  * AOT artifact-cache drill (DESIGN.md §13): a worker's stored step
+    executable is corrupted on the cache:post_store hook; the next
+    joiner's CRC check detects it, DELETES the torn entry, and degrades
+    to recompile — never crashes, never runs corrupted code — and the
+    recompiled store serves the joiner after that.
 
     PYTHONPATH=src python examples/chaos_drill.py
 
@@ -212,7 +217,72 @@ def _drill(root: str, procs: dict, counter_file: str, go_file: str) -> int:
     if rc != 0:
         print("FAIL: fleet health CLI", file=sys.stderr)
         return 1
-    print("OK: chaos drill survived worker SIGKILL + daemon crash")
+
+    # -- AOT cache corruption drill
+    rc = _cache_drill(root)
+    if rc != 0:
+        return rc
+    print("OK: chaos drill survived worker SIGKILL + daemon crash "
+          "+ corrupted AOT artifact")
+    return 0
+
+
+def _cache_drill(root: str) -> int:
+    """Corrupted artifact -> CRC detect -> degrade to recompile.
+
+    Worker 1 boots through the cache while the corrupt_artifact fault
+    scribbles its stored executable (post-CRC, exactly the torn-write a
+    dying disk leaves behind). Worker 2 must see a MISS (never corrupted
+    code), recompile, and re-store; worker 3 then hits the clean entry.
+    All three produce identical outputs."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core import faults as F
+    from repro.core.maps import MapKind, MapSpec
+    from repro.core.runtime import BpftimeRuntime
+
+    cache_dir = os.path.join(root, "cache")
+    x = jnp.arange(8.0)
+
+    def boot():
+        rt = BpftimeRuntime()
+        rt.create_map(MapSpec("drill_counts", MapKind.ARRAY, max_entries=8))
+        rt.enable_artifact_cache(cache_dir)
+        compiled, hit = rt.aot_step(
+            lambda: jax.jit(lambda v: v * 2 + 1), (x,),
+            extra_key=("cache_drill",))
+        return rt.artifact_cache, compiled, hit
+
+    with F.plan(F.FaultPlan(seed=0,
+                            rates={"corrupt_artifact": 1.0})) as p:
+        _, c1, hit1 = boot()              # populate -> fault scribbles it
+        if hit1 or p.counters["corrupt_artifact"] != 1:
+            print(f"FAIL: corrupt_artifact never fired (hit={hit1}, "
+                  f"counters={p.counters})", file=sys.stderr)
+            return 1
+    print("stored AOT artifact corrupted (injected, post-CRC)")
+
+    cache2, c2, hit2 = boot()             # CRC detects -> recompile
+    if hit2 or cache2.counters["corrupt"] != 1:
+        print(f"FAIL: corrupted artifact served or not detected "
+              f"(hit={hit2}, counters={cache2.counters})", file=sys.stderr)
+        return 1
+    print("next joiner: CRC mismatch detected, torn entry deleted, "
+          "degraded to recompile")
+
+    cache3, c3, hit3 = boot()             # clean re-store serves again
+    if not hit3:
+        print(f"FAIL: recompiled artifact not reusable "
+              f"(counters={cache3.counters})", file=sys.stderr)
+        return 1
+    if not (np.array_equal(np.asarray(c1(x)), np.asarray(c2(x)))
+            and np.array_equal(np.asarray(c2(x)), np.asarray(c3(x)))):
+        print("FAIL: outputs diverged across the corruption drill",
+              file=sys.stderr)
+        return 1
+    print("OK: corruption degraded to recompile; re-stored artifact "
+          "hits again, outputs bit-identical")
     return 0
 
 

@@ -16,8 +16,12 @@ Asserts (exits non-zero on failure):
     measured locally;
   * every worker (including ones that already exited) is accounted for in
     the aggregation status;
-  * the bpftool-style CLI can read the global view.
+  * the bpftool-style CLI can read the global view;
+  * every worker boots its probe step through the fleet AOT artifact
+    cache (DESIGN.md §13), and a LATE joiner booting after the fleet has
+    populated <root>/cache hits it — deserialize, zero retraces.
 """
+import json
 import multiprocessing as mp
 import os
 import shutil
@@ -52,14 +56,23 @@ def worker_main(root: str, wid: str) -> None:
     spec = M.MapSpec("fleet_hist", M.MapKind.LOG2HIST)
     pid = rt.load_asm("fleet_hist_rms", HIST_RMS, [spec], "uprobe")
     rt.attach(pid, "uprobe:fleet_block")
-    rt.setup_shm(root, worker_id=wid)
+    rt.setup_shm(root, worker_id=wid)     # auto-joins <root>/cache
 
-    @jax.jit
-    def stage(rows, maps):
-        maps, _ = rt.probe_stage(rows, maps, J.make_aux())
-        return maps
+    def build():
+        return jax.jit(
+            lambda rows, maps: rt.probe_stage(rows, maps, J.make_aux())[0])
 
     maps = rt.init_device_maps()
+    sig = jnp.asarray(np.zeros((EVENTS_PER_STEP, E.EVENT_WIDTH), np.int64))
+    t0 = time.perf_counter()
+    # boot through the fleet AOT cache: first worker compiles + stores,
+    # later joiners deserialize instead of retracing
+    stage, cache_hit = rt.aot_step(build, (sig, maps),
+                                   extra_key=("fleet_agg", EVENTS_PER_STEP))
+    boot_ms = (time.perf_counter() - t0) * 1e3
+    rt.publish_status()      # surface hit/miss counters in status.json
+    with open(os.path.join(root, f"cachejoin_{wid}.json"), "w") as f:
+        json.dump({"wid": wid, "hit": cache_hit, "boot_ms": boot_ms}, f)
     rng = np.random.default_rng(seed=int(wid[1:]))
     sid = E.SITES.get_or_create("fleet_block")
     for step in range(N_STEPS):
@@ -128,6 +141,21 @@ def _run(root: str) -> int:
     rc = daemon.main([root, "map", "top", "fleet_hist", "-n", "3"])
     assert rc == 0
     print("OK: global histogram is the exact bin-wise sum of all workers")
+
+    # -- fleet cold-join: a LATE worker boots the same world against the
+    # now-populated AOT cache and must hit (deserialize, zero retraces)
+    late = ctx.Process(target=worker_main, args=(root, f"w{N_WORKERS}"))
+    late.start()
+    late.join()
+    assert late.exitcode == 0, f"late joiner crashed: {late.exitcode}"
+    with open(os.path.join(root, f"cachejoin_w{N_WORKERS}.json")) as f:
+        join_info = json.load(f)
+    assert join_info["hit"], \
+        f"late joiner missed the warm AOT cache: {join_info}"
+    rc = daemon.main([root, "prog", "cache", "stat"])
+    assert rc == 0
+    print(f"OK: late joiner w{N_WORKERS} warm cold-join in "
+          f"{join_info['boot_ms']:.1f}ms (AOT cache hit)")
     return 0
 
 

@@ -1,0 +1,201 @@
+"""Fleet-wide AOT artifact cache — compile once, every worker reuses.
+
+Every worker joining the fleet today pays the full ~0.3–5s trace+compile
+of its step function even though DESIGN.md §9 proves the compiled graph
+depends only on (map registry, ctx width, table dims, attach signature).
+This cache turns that invariant into reuse: executables produced by
+``fn.lower(*args).compile()`` are serialized (jax.experimental.
+serialize_executable) and stored on disk under the canonical layout
+fingerprint (core/layout.layout_fingerprint), alongside encoded
+table-program images.  The Nth worker derives the same key from the same
+trace inputs and deserializes in ~10ms instead of retracing — the
+<100ms warm cold-join measured by benchmarks.measure_cold_join.
+
+Durability model (same discipline as the shm plane, DESIGN.md §10/§11):
+
+  * writes are atomic (tmp + os.replace) with a zlib.crc32 over the
+    payload in a JSON meta sidecar — readers can never observe a torn
+    artifact;
+  * reads verify the CRC; a mismatch DELETES the entry, bumps the
+    ``corrupt`` counter, and returns a miss — the caller recompiles.
+    Corruption degrades to the cold path, it never crashes a worker and
+    never serves a torn executable (chaos-drilled via the
+    ``corrupt_artifact`` fault kind on the ``cache:post_store`` hook);
+  * invalidation is purely key-derivation: any change to the fingerprint
+    basis lands on a different key.  Stale entries are garbage, not
+    hazards — ``purge`` (CLI: ``prog cache purge``) reclaims them.
+
+Deserialization failures (version skew, backend mismatch) are treated
+exactly like corruption: count, delete, recompile.
+"""
+from __future__ import annotations
+
+import io
+import json
+import os
+import pickle
+import zlib
+
+import numpy as np
+
+from . import faults
+
+COUNTER_KEYS = ("hits", "misses", "stores", "corrupt", "purged")
+
+
+class ArtifactCache:
+    """One directory of <key>.bin payloads + <key>.json CRC sidecars.
+
+    Safe for concurrent use by N processes: entries are content-complete
+    before they are visible (atomic rename), reads never lock, and two
+    workers racing to store the same key write identical bytes (the key
+    IS the trace-stability invariant), so last-rename-wins is benign."""
+
+    def __init__(self, root: str):
+        self.root = str(root)
+        os.makedirs(self.root, exist_ok=True)
+        self.counters: dict[str, int] = {k: 0 for k in COUNTER_KEYS}
+
+    # ------------------------------------------------------------ raw bytes
+    def _bin(self, key: str) -> str:
+        return os.path.join(self.root, f"{key}.bin")
+
+    def _meta(self, key: str) -> str:
+        return os.path.join(self.root, f"{key}.json")
+
+    def put_bytes(self, key: str, payload: bytes, kind: str,
+                  meta: dict | None = None) -> None:
+        binpath, metapath = self._bin(key), self._meta(key)
+        tmp = f"{binpath}.{os.getpid()}.tmp"
+        with open(tmp, "wb") as f:
+            f.write(payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, binpath)
+        mtmp = f"{metapath}.{os.getpid()}.tmp"
+        with open(mtmp, "w") as f:
+            json.dump({"kind": kind, "crc": zlib.crc32(payload),
+                       "size": len(payload), **(meta or {})}, f)
+        os.replace(mtmp, metapath)
+        self.counters["stores"] += 1
+        faults.fire("cache:post_store", path=binpath, key=key)
+
+    def get_bytes(self, key: str, kind: str | None = None) -> bytes | None:
+        binpath, metapath = self._bin(key), self._meta(key)
+        try:
+            with open(metapath) as f:
+                meta = json.load(f)
+            with open(binpath, "rb") as f:
+                payload = f.read()
+        except (OSError, ValueError):
+            self.counters["misses"] += 1
+            return None
+        bad = (zlib.crc32(payload) != meta.get("crc")
+               or len(payload) != meta.get("size")
+               or (kind is not None and meta.get("kind") != kind))
+        if bad:
+            self._drop_corrupt(key)
+            return None
+        self.counters["hits"] += 1
+        return payload
+
+    def _drop_corrupt(self, key: str) -> None:
+        self.counters["corrupt"] += 1
+        for p in (self._bin(key), self._meta(key)):
+            try:
+                os.unlink(p)
+            except OSError:
+                pass
+
+    # ------------------------------------------------------------ executables
+    def put_step(self, key: str, compiled) -> bool:
+        """Serialize one AOT-compiled executable. Returns False (and stores
+        nothing) if this backend/version cannot serialize it — callers just
+        lose reuse, never correctness."""
+        try:
+            from jax.experimental.serialize_executable import serialize
+            payload, in_tree, out_tree = serialize(compiled)
+            blob = pickle.dumps({"payload": payload, "in_tree": in_tree,
+                                 "out_tree": out_tree},
+                                protocol=pickle.HIGHEST_PROTOCOL)
+        except Exception:
+            return False
+        self.put_bytes(key, blob, "step")
+        return True
+
+    def get_step(self, key: str):
+        """Load + deserialize an executable, or None on miss/corruption."""
+        blob = self.get_bytes(key, kind="step")
+        if blob is None:
+            return None
+        try:
+            from jax.experimental.serialize_executable import (
+                deserialize_and_load)
+            d = pickle.loads(blob)
+            return deserialize_and_load(d["payload"], d["in_tree"],
+                                        d["out_tree"])
+        except Exception:
+            # undetected-by-CRC skew (jax/backend version): same degrade
+            self.counters["hits"] -= 1
+            self._drop_corrupt(key)
+            return None
+
+    # ------------------------------------------------------------ table images
+    def put_table(self, key: str, arrays: dict) -> None:
+        """Store one encoded table-program image (isa.encode_table_program
+        output + metadata rows) as an npz blob."""
+        buf = io.BytesIO()
+        np.savez(buf, **{k: np.asarray(v) for k, v in arrays.items()})
+        self.put_bytes(key, buf.getvalue(), "table")
+
+    def get_table(self, key: str) -> dict | None:
+        blob = self.get_bytes(key, kind="table")
+        if blob is None:
+            return None
+        try:
+            with np.load(io.BytesIO(blob)) as z:
+                return {k: z[k] for k in z.files}
+        except Exception:
+            self.counters["hits"] -= 1
+            self._drop_corrupt(key)
+            return None
+
+    # ------------------------------------------------------------ introspection
+    def ls(self) -> list[dict]:
+        rows = []
+        for fn in sorted(os.listdir(self.root)):
+            if not fn.endswith(".json") or fn.endswith(".tmp"):
+                continue
+            key = fn[:-5]
+            try:
+                with open(self._meta(key)) as f:
+                    meta = json.load(f)
+            except (OSError, ValueError):
+                continue
+            rows.append({"key": key, "kind": meta.get("kind", "?"),
+                         "size": meta.get("size", 0),
+                         "crc": meta.get("crc", 0)})
+        return rows
+
+    def stats(self) -> dict:
+        rows = self.ls()
+        return {"root": self.root, "entries": len(rows),
+                "bytes": sum(r["size"] for r in rows),
+                **self.counters}
+
+    def purge(self, key: str | None = None) -> int:
+        """Delete one entry (or all). Returns entries removed."""
+        keys = [key] if key is not None else [r["key"] for r in self.ls()]
+        n = 0
+        for k in keys:
+            existed = os.path.exists(self._meta(k)) or \
+                os.path.exists(self._bin(k))
+            for p in (self._bin(k), self._meta(k)):
+                try:
+                    os.unlink(p)
+                except OSError:
+                    pass
+            if existed:
+                n += 1
+        self.counters["purged"] += n
+        return n

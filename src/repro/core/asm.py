@@ -33,6 +33,10 @@ class Assembled:
     insns: list[Insn]
     # relocations: insn index -> symbolic map name (patched by the loader)
     map_relocs: dict[int, str] = field(default_factory=dict)
+    # insn index -> 0-based source line number in the assembled text; lets
+    # the loader map textual `ctx:FIELD` substitutions back onto the insn
+    # they landed in (CO-RE ctx relocation records)
+    src_lines: list[int] = field(default_factory=list)
 
 
 _ALU_OPS = {
@@ -86,19 +90,19 @@ def assemble(text: str, helper_ids: dict[str, int] | None = None) -> Assembled:
     from .helpers import HELPER_IDS  # late import to avoid cycle
     helper_ids = {**HELPER_IDS, **(helper_ids or {})}
 
-    lines: list[tuple[str, list[str]]] = []
-    for raw in text.splitlines():
+    lines: list[tuple[int, str, list[str]]] = []
+    for lineno, raw in enumerate(text.splitlines()):
         line = raw.split(";")[0].split("//")[0].strip()
         if not line:
             continue
         parts = line.replace(",", " , ").split()
         parts = [p for p in parts if p != ","]
-        lines.append((line, parts))
+        lines.append((lineno, line, parts))
 
     # pass 1: label -> slot index
     labels: dict[str, int] = {}
     slot = 0
-    for line, parts in lines:
+    for _, line, parts in lines:
         if len(parts) == 1 and parts[0].endswith(":"):
             name = parts[0][:-1]
             if name in labels:
@@ -110,7 +114,7 @@ def assemble(text: str, helper_ids: dict[str, int] | None = None) -> Assembled:
     # pass 2: emit
     out = Assembled(insns=[])
     slot = 0
-    for line, parts in lines:
+    for lineno, line, parts in lines:
         if len(parts) == 1 and parts[0].endswith(":"):
             continue
         mn = parts[0].lower()
@@ -122,6 +126,7 @@ def assemble(text: str, helper_ids: dict[str, int] | None = None) -> Assembled:
         if reloc is not None:
             out.map_relocs[len(out.insns)] = reloc
         out.insns.append(ins)
+        out.src_lines.append(lineno)
         slot += 2 if ins.is_lddw() else 1
     return out
 

@@ -17,6 +17,8 @@ Usable as a library (tests) or CLI. bpftool-style subcommands:
     python -m repro.core.daemon <shm_dir> map dump [MAP] [--section S]
     python -m repro.core.daemon <shm_dir> map top MAP [-n K]
     python -m repro.core.daemon <shm_dir> prog list
+    python -m repro.core.daemon <shm_dir> prog cache [ls|stat|purge [KEY]]
+    python -m repro.core.daemon <shm_dir> prog relocate NAME [--json]
     python -m repro.core.daemon <shm_dir> attach OBJ.json [--target T]
                                 [--mode auto|fused|table] [--no-promote]
     python -m repro.core.daemon <shm_dir> detach LINK_ID
@@ -819,8 +821,126 @@ def _cmd_map(root: str, args) -> int:
     return 0
 
 
+def _worker_cache_counters(root: str) -> dict:
+    """wid -> artifact-cache hit/miss counters, from worker status.json."""
+    out = {}
+    for wid in SH.list_workers(root) or [None]:
+        try:
+            status = ShmRegion.attach(root, mode="r",
+                                      worker_id=wid).read_status()
+        except OSError:
+            continue
+        if status.get("cache"):
+            out[wid or "-"] = status["cache"]
+    return out
+
+
+def _cmd_prog_cache(root: str, args) -> int:
+    """`prog cache ls|stat|purge [KEY]` over the fleet artifact cache at
+    <root>/cache (the directory setup_shm auto-joins)."""
+    from .artifact_cache import ArtifactCache
+    action = args.arg or "stat"
+    if action not in ("ls", "stat", "purge"):
+        print(f"prog cache: unknown action {action!r} (ls|stat|purge)",
+              file=sys.stderr)
+        return 2
+    cache = ArtifactCache(os.path.join(root, "cache"))
+    if action == "ls":
+        rows = cache.ls()
+        if args.json:
+            print(json.dumps(rows, indent=1))
+        else:
+            print(f"{'KEY':26s} {'KIND':6s} {'BYTES':>10s}")
+            for r in rows:
+                print(f"{r['key']:26s} {r['kind']:6s} {r['size']:>10d}")
+            print(f"{len(rows)} artifact(s), "
+                  f"{sum(r['size'] for r in rows)} bytes")
+        return 0
+    if action == "purge":
+        n = cache.purge(args.arg2)
+        print(f"purged {n} artifact(s)"
+              + (f" for key {args.arg2}" if args.arg2 else ""))
+        return 0
+    # stat: disk contents + per-worker hit/miss counters (status.json)
+    st = cache.stats()
+    out = {"root": st["root"], "entries": st["entries"],
+           "bytes": st["bytes"], "workers": _worker_cache_counters(root)}
+    if args.json:
+        print(json.dumps(out, indent=1))
+        return 0
+    print(f"artifact cache {out['root']}: {out['entries']} entr"
+          f"{'y' if out['entries'] == 1 else 'ies'}, {out['bytes']} bytes")
+    for wid, c in sorted(out["workers"].items()):
+        print(f"  worker {wid}: hits={c.get('hits', 0)} "
+              f"misses={c.get('misses', 0)} stores={c.get('stores', 0)} "
+              f"corrupt={c.get('corrupt', 0)}")
+    return 0
+
+
+def _cmd_prog_relocate(root: str, args) -> int:
+    """`prog relocate NAME`: dry-run — abstract-verify the published
+    object, print its relocation record, and show how it binds against
+    this fleet's concrete registry (without touching any worker)."""
+    from . import reloc
+    from .loader import ProgramObject
+    name = args.arg
+    if not name:
+        print("prog relocate needs a program name", file=sys.stderr)
+        return 2
+    progs = SH.read_programs(root)
+    if name not in progs:
+        print(f"no such program: {name} (loaded: {sorted(progs)})",
+              file=sys.stderr)
+        return 1
+    obj = ProgramObject.from_json(progs[name])
+    try:
+        vabs = reloc.verify_relocatable(obj)
+    except Exception as e:
+        print(f"abstract verification failed: {e}", file=sys.stderr)
+        return 1
+    rows = reloc.relocation_table(vabs)
+    specs = SH.read_meta_specs(root)
+    fd_of = {s.name: i for i, s in enumerate(specs)}
+    bound = err = None
+    try:
+        bound = reloc.resolve(vabs, fd_of, specs)
+    except reloc.RelocationError as e:
+        err = str(e)
+    out = {"program": name, "tier": vabs.tier,
+           "declared_maps": [ml.name for ml in vabs.reloc.map_layouts],
+           "registry": [s.name for s in specs],
+           "relocations": rows, "resolved": bound is not None,
+           "error": err,
+           "bound": reloc.relocation_table(bound) if bound else None}
+    if args.json:
+        print(json.dumps(out, indent=1))
+        return 0 if bound else 1
+    print(f"program {name}: {len(rows)} relocation(s), "
+          f"declared maps {out['declared_maps']}")
+    for r in rows:
+        if r["kind"] == "map":
+            print(f"  insn {r['insn']:3d}  map  {r['symbol']:16s} "
+                  f"local_fd={r['local_fd']}  {r['disasm']}")
+        else:
+            print(f"  insn {r['insn']:3d}  ctx  {r['symbol']:16s} "
+                  f"byte={r['byte']}  {r['disasm']}")
+    if bound is not None:
+        binds = ", ".join(
+            f"{r['symbol']}->fd{r['bound_fd']}"
+            for r in out["bound"] if r["kind"] == "map")
+        print(f"resolves against registry {out['registry']}: "
+              f"{binds or 'no map refs'}")
+    else:
+        print(f"does NOT resolve against this registry: {err}")
+    return 0 if bound else 1
+
+
 def _cmd_prog(root: str, args) -> int:
     from .loader import ProgramObject
+    if args.action == "cache":
+        return _cmd_prog_cache(root, args)
+    if args.action == "relocate":
+        return _cmd_prog_relocate(root, args)
     progs = SH.read_programs(root)
     wids = SH.list_workers(root)
     links: dict[str, list] = {}
@@ -916,8 +1036,9 @@ def _cmd_fleet(root: str, args) -> int:
     if not status:
         print("no aggregation status published yet", file=sys.stderr)
         return 1
+    cache_by_worker = _worker_cache_counters(root)
     if args.json:
-        print(json.dumps(status, indent=1))
+        print(json.dumps({**status, "cache": cache_by_worker}, indent=1))
         return 0
     print(f"fleet health @ cycle {status.get('cycles', 0)}: "
           f"alive={status.get('alive', [])} dead={status.get('dead', [])} "
@@ -933,6 +1054,12 @@ def _cmd_fleet(root: str, args) -> int:
         extras.append(f"rb_lost={status['rb_lost']}")
     if status.get("coalesced_cycles"):
         extras.append(f"coalesced_cycles={status['coalesced_cycles']}")
+    if cache_by_worker:
+        hits = sum(c.get("hits", 0) for c in cache_by_worker.values())
+        misses = sum(c.get("misses", 0) for c in cache_by_worker.values())
+        corrupt = sum(c.get("corrupt", 0) for c in cache_by_worker.values())
+        extras.append(f"cache_hits={hits} cache_misses={misses}"
+                      + (f" cache_corrupt={corrupt}" if corrupt else ""))
     if extras:
         print("  " + " ".join(extras))
     print(f"{'WORKER':12s} {'STATE':10s} {'QUARANTINED':12s} TRANSITIONS")
@@ -959,8 +1086,14 @@ def _main_bpftool(argv: list[str]) -> int:
     mp.add_argument("-n", "--top-n", type=int, default=10)
     mp.add_argument("--json", action="store_true")
 
-    pp = sub.add_parser("prog", help="list loaded programs and links")
-    pp.add_argument("action", choices=("list",))
+    pp = sub.add_parser("prog",
+                        help="list programs/links, inspect the artifact "
+                             "cache, or dry-run a relocation")
+    pp.add_argument("action", choices=("list", "cache", "relocate"))
+    pp.add_argument("arg", nargs="?",
+                    help="cache: ls|stat|purge; relocate: program name")
+    pp.add_argument("arg2", nargs="?",
+                    help="cache purge: specific key (default: all)")
     pp.add_argument("--json", action="store_true")
 
     at = sub.add_parser("attach", help="queue load+attach (fleet fan-out)")

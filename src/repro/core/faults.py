@@ -21,6 +21,8 @@ Hook points (ctx keys in parentheses):
     agg:post_publish      global view published, journal not yet written
     agg:pre_journal       about to persist the fold journal
     agg:cycle_end         cycle complete, journal durable (cycle)
+    cache:post_store      AOT artifact payload + CRC meta just written to
+                          the artifact cache (path, key)
 
 Fault classes (each has a counter, asserted by the chaos tests):
 
@@ -36,6 +38,9 @@ Fault classes (each has a counter, asserted by the chaos tests):
     pid_reuse         rewrite worker.json to a recycled pid (scenario
                       helper, see simulate_pid_reuse)
     slow_worker       seeded delay inside the publish window (skew)
+    corrupt_artifact  scribble bytes into a stored cache artifact AFTER its
+                      CRC meta was written — CRC-detectable on read, so the
+                      cache must degrade to recompile, never serve it
 """
 from __future__ import annotations
 
@@ -48,7 +53,7 @@ from contextlib import contextmanager
 import numpy as np
 
 KINDS = ("torn_publish", "stuck_odd", "corrupt_snapshot", "kill_worker",
-         "daemon_crash", "pid_reuse", "slow_worker")
+         "daemon_crash", "pid_reuse", "slow_worker", "corrupt_artifact")
 
 EIO = 5            # injected errno for syscall drills (override value -EIO)
 
@@ -164,6 +169,12 @@ class FaultPlan(FaultHooks):
                 self.flush_counters()
                 raise InjectedCrash(f"{point} (occurrence {self._agg_seen})")
             return
+        if point == "cache:post_store":
+            if self._roll("corrupt_artifact"):
+                self._scribble_file(ctx["path"])
+                self._count("corrupt_artifact")
+                self.flush_counters()
+            return
         if ctx.get("role", "worker") != "worker":
             return      # publish-side fault classes model WORKER failures;
                         # the daemon's own global publish is failed via the
@@ -208,6 +219,19 @@ class FaultPlan(FaultHooks):
         n = min(self.corrupt_nbytes, flat.shape[0])
         idx = self.rng.integers(0, flat.shape[0], size=n)
         flat[idx] ^= np.uint8(0xA5)
+
+    def _scribble_file(self, path: str) -> None:
+        """Flip bytes in a stored artifact file in place — the CRC in its
+        meta sidecar was already written, so the next read must detect it."""
+        with open(path, "r+b") as f:
+            data = bytearray(f.read())
+            if not data:
+                return
+            n = min(self.corrupt_nbytes, len(data))
+            for i in self.rng.integers(0, len(data), size=n):
+                data[int(i)] ^= 0xA5
+            f.seek(0)
+            f.write(bytes(data))
 
 
 # --------------------------------------------------------------------------

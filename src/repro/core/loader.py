@@ -15,6 +15,7 @@ from dataclasses import asdict, dataclass, field
 
 from . import asm, isa
 from .isa import Insn
+from .layout import EVENT_BTF, SYSCALL_BTF  # canonical tables live in layout
 from .maps import MapKind, MapSpec
 
 
@@ -32,6 +33,11 @@ class ProgramObject:
     ctx_words: int = 16
     attach_to: str | None = None    # default target, e.g. "uprobe:mlp"
     btf: dict | None = None         # ctx field names -> word index (CO-RE-lite)
+    # insn idx -> ctx field name: which insns took their `off` operand from a
+    # `ctx:FIELD` substitution, so the program can be re-offset onto another
+    # ctx layout without re-assembly (core/reloc.py).  Default {} keeps old
+    # serialized objects loading unchanged.
+    ctx_relocs: dict[str, str] = field(default_factory=dict)
 
     def to_json(self) -> str:
         return json.dumps(asdict(self), indent=1)
@@ -53,16 +59,6 @@ class ProgramObject:
         return out
 
 
-# default BTF-lite table: event row field names (DESIGN.md layout)
-EVENT_BTF = {
-    "site_id": 0, "kind": 1, "layer": 2, "step": 3,
-    "numel": 4, "mean": 5, "rms": 6, "min": 7, "max": 8, "absmax": 9,
-    "nan_cnt": 10, "inf_cnt": 11,
-}
-SYSCALL_BTF = {"sys_id": 0, "arg0": 1, "arg1": 2, "arg2": 3, "arg3": 4,
-               "arg4": 5, "ret": 6}
-
-
 def _spec_dict(s: MapSpec) -> dict:
     return {"name": s.name, "kind": s.kind.value,
             "max_entries": s.max_entries, "rec_width": s.rec_width,
@@ -81,7 +77,8 @@ def build_object(name: str, text: str, maps: list[MapSpec],
     table = btf or (SYSCALL_BTF if prog_type in ("tracepoint", "filter")
                     else EVENT_BTF)
     out_lines = []
-    for line in text.splitlines():
+    line_fields: dict[int, list[str]] = {}   # source line -> ctx fields used
+    for lineno, line in enumerate(text.splitlines()):
         while "ctx:" in line:
             pre, rest = line.split("ctx:", 1)
             fieldname = ""
@@ -92,6 +89,7 @@ def build_object(name: str, text: str, maps: list[MapSpec],
                     break
             if fieldname not in table:
                 raise LoadError(f"unknown ctx field {fieldname!r}")
+            line_fields.setdefault(lineno, []).append(fieldname)
             line = pre + str(8 * table[fieldname]) + rest[len(fieldname):]
         out_lines.append(line)
     a = asm.assemble("\n".join(out_lines))
@@ -99,12 +97,24 @@ def build_object(name: str, text: str, maps: list[MapSpec],
     for idx, mname in a.map_relocs.items():
         if mname not in local_names:
             raise LoadError(f"program references undeclared map {mname!r}")
+    # map each ctx substitution back onto the insn its line assembled into
+    ctx_relocs: dict[str, str] = {}
+    for idx, lineno in enumerate(a.src_lines):
+        fields = line_fields.get(lineno)
+        if not fields:
+            continue
+        if len(fields) > 1:
+            raise LoadError(
+                f"line {lineno}: multiple ctx: references in one insn are "
+                f"not relocatable")
+        ctx_relocs[str(idx)] = fields[0]
     return ProgramObject(
         name=name, prog_type=prog_type,
         insns_hex=isa.encode_program(a.insns).hex(),
         maps=[_spec_dict(m) for m in maps],
         relocs={str(k): v for k, v in a.map_relocs.items()},
-        ctx_words=ctx_words, attach_to=attach_to, btf=table)
+        ctx_words=ctx_words, attach_to=attach_to, btf=table,
+        ctx_relocs=ctx_relocs)
 
 
 def relocate(obj: ProgramObject, fd_of: dict[str, int]) -> list[Insn]:

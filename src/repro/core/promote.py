@@ -63,7 +63,12 @@ class PromotionEngine:
         self.example_args = tuple(example_args)
         self.background = background
         self.compiles = 0                 # background traces actually run
-        self._cache: dict[tuple, object] = {}   # signature -> compiled step
+        # full layout fingerprint -> compiled step.  The key folds the map
+        # registry / ctx width / table dims AND the post-promotion attach
+        # signature: an attach signature alone under-keys — the same attach
+        # set over a different registry traces a different graph, and a
+        # signature-only cache would serve the stale executable.
+        self._cache: dict[str, object] = {}
         self._ready: list = []            # links compiled + waiting to swap
         self._threads: list[threading.Thread] = []
         self._lock = threading.Lock()
@@ -90,11 +95,26 @@ class PromotionEngine:
         merged.setdefault(link._parsed, []).append(link.pid)
         return attach_signature(merged)
 
+    def _cache_key(self, link) -> str:
+        """The FULL trace-stability key for this link's promoted world:
+        layout fingerprint (registry, ctx, table dims) + post-promotion
+        attach signature — never the signature alone."""
+        return self.runtime.layout_fingerprint(
+            attach_sig=self._target_signature(link))
+
     def _compile(self, link) -> None:
         try:
             sig = self._target_signature(link)
+            key = self._cache_key(link)
+            cache = self.runtime.artifact_cache
             with self._lock:
-                compiled = self._cache.get(sig)
+                compiled = self._cache.get(key)
+            if compiled is None and cache is not None:
+                # another fleet member may have promoted this exact world
+                compiled = cache.get_step(key)
+                if compiled is not None:
+                    with self._lock:
+                        self._cache[key] = compiled
             if compiled is None:
                 # trace against the future: the overlay makes
                 # _static_lanes/_effective_attach on THIS thread see the
@@ -104,8 +124,10 @@ class PromotionEngine:
                     fn = self.step_builder()
                     compiled = fn.lower(*self.example_args).compile()
                 with self._lock:
-                    self._cache[sig] = compiled
+                    self._cache[key] = compiled
                     self.compiles += 1
+                if cache is not None:
+                    cache.put_step(key, compiled)
             if link.promotion_state != "compiling":    # detached mid-compile
                 return
             link.promotion_state = "ready"

@@ -90,6 +90,10 @@ class LoadedProg:
     prog_type: str
     insns: list
     vprog: VerifiedProgram
+    # the abstract (pre-relocation) verification, when the program came in
+    # through the CO-RE path — re-bindable to other worlds without
+    # re-verification (None for programs verified concretely)
+    vabs: VerifiedProgram | None = None
 
 
 @dataclass(eq=False)
@@ -156,6 +160,9 @@ class BpftimeRuntime:
         self._promoter = None
         self._promoted_step = None    # AOT-compiled step awaiting pickup
         self._overlay_tls = threading.local()
+        # fleet-wide AOT artifact cache (enable_artifact_cache /
+        # core/artifact_cache.py); setup_shm auto-joins <root>/cache
+        self.artifact_cache = None
 
     # ---------------------------------------------------------------- maps
     def create_map(self, spec: MapSpec) -> int:
@@ -180,16 +187,41 @@ class BpftimeRuntime:
 
     # ---------------------------------------------------------------- load
     def load_object(self, obj: ProgramObject) -> int:
+        """Verify ONCE against the object's own declared layout (abstract
+        mode), then bind to this runtime's registry by relocation — the
+        CO-RE pipeline.  The abstract VerifiedProgram is kept on the
+        LoadedProg so the same verification can be re-bound to any other
+        world (load_relocatable / `prog relocate`) without re-running the
+        verifier."""
+        from . import reloc
+        vabs = reloc.verify_relocatable(obj)
         for spec in obj.map_specs():
             self.create_map(spec)
-        insns = loader.relocate(obj, self.fd_of)
-        vprog = verify(insns, self.map_specs, ctx_words=obj.ctx_words)
+        vprog = reloc.resolve(vabs, self.fd_of, self.map_specs)
         pid = next(self._next_pid)
-        self.progs[pid] = LoadedProg(pid, obj.name, obj.prog_type, insns,
-                                     vprog)
+        self.progs[pid] = LoadedProg(pid, obj.name, obj.prog_type,
+                                     vprog.insns, vprog, vabs=vabs)
         self._objects[obj.name] = obj.to_json()
         if self.shm is not None:
             self.shm.publish_program(obj.to_json(), obj.name)
+        return pid
+
+    def load_relocatable(self, vabs: VerifiedProgram, name: str,
+                         prog_type: str = "uprobe") -> int:
+        """Bind an ALREADY-verified abstract program to this runtime —
+        zero verifier work, pure relocation (the fleet path: verify on one
+        worker, relocate on N).  Declared maps are created on demand, like
+        load_object."""
+        from . import reloc
+        if not vabs.is_abstract:
+            raise loader.LoadError("load_relocatable needs an abstract "
+                                   "VerifiedProgram (verify_relocatable)")
+        for ml in vabs.reloc.map_layouts:
+            self.create_map(ml.to_spec())
+        vprog = reloc.resolve(vabs, self.fd_of, self.map_specs)
+        pid = next(self._next_pid)
+        self.progs[pid] = LoadedProg(pid, name, prog_type, vprog.insns,
+                                     vprog, vabs=vabs)
         return pid
 
     def load_asm(self, name: str, text: str, maps: list[MapSpec] = (),
@@ -422,6 +454,56 @@ class BpftimeRuntime:
         elif kind == "filter":
             self.syscalls.detach(parts[1], "enter", prog.name)
 
+    # ---------------------------------------------------------------- cache
+    def enable_artifact_cache(self, root: str):
+        """Join (or create) an AOT artifact cache directory. Compiled steps
+        produced by aot_step()/PromotionEngine are stored under the layout
+        fingerprint; any process sharing the directory and the same layout
+        basis reuses them instead of retracing."""
+        from .artifact_cache import ArtifactCache
+        self.artifact_cache = ArtifactCache(root)
+        return self.artifact_cache
+
+    def layout_fingerprint(self, attach_sig: tuple | None = None,
+                           extra: tuple = ()) -> str:
+        """Canonical cache key for artifacts compiled against THIS
+        runtime's world: map registry (fd order), event-row width, live
+        table dims, plus the static attach signature the trace bakes in
+        (defaults to the current device_attach) — exactly the
+        trace-stability basis of DESIGN.md §9/§12."""
+        from . import layout as L
+        from .promote import attach_signature
+        if attach_sig is None:
+            attach_sig = attach_signature(self.device_attach)
+        dims = ()
+        if self.live is not None:
+            dims = (self.live.max_programs, self.live.max_insns,
+                    self.live.n_maps, self.live.ctx_words)
+        return L.layout_fingerprint(self.map_specs, E.EVENT_WIDTH,
+                                    table_dims=dims, attach_sig=attach_sig,
+                                    extra=extra)
+
+    def aot_step(self, build_fn, example_args, extra_key: tuple = ()):
+        """Consult-or-compile-and-store: the worker cold-join fast path.
+
+        Returns ``(compiled, hit)``. On a warm cache the executable
+        deserializes in ~10ms; on a miss (or with no cache enabled) this
+        is exactly the old ``jit(...).lower().compile()`` boot, plus a
+        background-free store for the next joiner. ``build_fn()`` must
+        return a fresh jit-wrapped step; ``example_args`` concrete or
+        ShapeDtypeStruct arguments. ``extra_key`` folds caller facts the
+        trace also depends on (e.g. batch geometry) into the key."""
+        key = self.layout_fingerprint(extra=tuple(extra_key))
+        if self.artifact_cache is not None:
+            compiled = self.artifact_cache.get_step(key)
+            if compiled is not None:
+                return compiled, True
+        fn = build_fn()
+        compiled = fn.lower(*example_args).compile()
+        if self.artifact_cache is not None:
+            self.artifact_cache.put_step(key, compiled)
+        return compiled, False
+
     # ---------------------------------------------------------------- promote
     def enable_promotion(self, step_builder, example_args,
                          background: bool = True):
@@ -594,6 +676,11 @@ class BpftimeRuntime:
             self.host_maps[spec.name] = self.shm.host[spec.name]
         for name, obj_json in self._objects.items():
             self.shm.publish_program(obj_json, name)
+        # every fleet member shares one artifact cache next to the shm
+        # plane — the Nth joiner reuses the first joiner's compiles
+        if self.artifact_cache is None:
+            import os
+            self.enable_artifact_cache(os.path.join(root, "cache"))
         self.publish_status()
         return self.shm
 
@@ -665,6 +752,8 @@ class BpftimeRuntime:
             "promotions": {str(lid): {"lane": lk.lane,
                                       "state": lk.promotion_state}
                            for lid, lk in self.links.items()},
+            "cache": (dict(self.artifact_cache.counters)
+                      if self.artifact_cache is not None else {}),
         })
 
     # ---------------------------------------------------------------- misc

@@ -30,6 +30,10 @@ from .maps import MapSpec
 
 MAX_PROG_INSNS = 4096
 
+# Monotone counters — tests assert relocation does ZERO re-verification by
+# pinning verify_calls across a relocate-to-N-worlds loop.
+STATS = {"verify_calls": 0}
+
 
 class VerifierError(ValueError):
     pass
@@ -37,9 +41,15 @@ class VerifierError(ValueError):
 
 # ---------------------------------------------------------------- reg lattice
 UNINIT, SCALAR, CONST, PTR_STACK, PTR_CTX, CONFLICT = range(6)
+# Abstract map reference (the kernel's CONST_PTR_TO_MAP analogue): produced
+# only by `lddw rX, map:NAME` in abstract mode, val = object-local map index.
+# It may be mov-copied and passed as a helper mapfd arg — nothing else — so
+# relocation can rebind names to concrete fds knowing every mapfd a helper
+# sees is provenance-tracked (a forged scalar fd cannot sneak past rebinding).
+MAPVAL = 6
 _KIND_NAMES = {UNINIT: "uninit", SCALAR: "scalar", CONST: "const",
                PTR_STACK: "ptr_stack", PTR_CTX: "ptr_ctx",
-               CONFLICT: "conflict"}
+               CONFLICT: "conflict", MAPVAL: "mapval"}
 
 
 @dataclass(frozen=True)
@@ -126,6 +136,16 @@ class VerifiedProgram:
     # to exactly this footprint instead of selecting over ALL map state.
     touched_map_fds: frozenset = frozenset()
     touched_aux: frozenset = frozenset()
+    # relocation record (reloc.RelocRecord) when verified in abstract mode:
+    # insn index -> symbolic ref, plus the layouts verified against. None
+    # for layout-concrete programs. An abstract program is NOT runnable —
+    # core/reloc.resolve() binds it to a concrete world first.
+    reloc: object = None
+
+    @property
+    def is_abstract(self) -> bool:
+        return self.reloc is not None and not getattr(
+            self.reloc, "resolved", False)
 
     def touched_map_names(self) -> tuple[str, ...]:
         return tuple(self.map_specs[fd].name
@@ -133,7 +153,23 @@ class VerifiedProgram:
 
 
 def verify(insns: list[Insn], map_specs: list[MapSpec], ctx_words: int = 16,
-           max_insns: int = 65536) -> VerifiedProgram:
+           max_insns: int = 65536, *, map_refs: dict[int, str] | None = None,
+           ctx_refs: dict[int, str] | None = None,
+           ctx_layout=None) -> VerifiedProgram:
+    """Verify a program against a world of maps + ctx layout.
+
+    Concrete mode (default): `map_specs` is the runtime's registry in fd
+    order; lddw imm64s are already-patched fds. Abstract mode (any of
+    `map_refs`/`ctx_refs`/`ctx_layout` given): `map_specs` is the
+    program's DECLARED map list (object-local order), `map_refs` names
+    the `lddw rX, map:NAME` insns and `ctx_refs` the insns whose off
+    came from a `ctx:FIELD` substitution against `ctx_layout`. The
+    result carries a relocation record and binds to any concrete
+    registry via core/reloc.resolve() — verify once, relocate anywhere.
+    """
+    STATS["verify_calls"] += 1
+    abstract = (map_refs is not None or ctx_refs is not None
+                or ctx_layout is not None)
     if not insns:
         raise VerifierError("empty program")
     if len(insns) > MAX_PROG_INSNS:
@@ -141,6 +177,22 @@ def verify(insns: list[Insn], map_specs: list[MapSpec], ctx_words: int = 16,
     if ctx_words * 8 > isa.MAX_CTX_BYTES:
         raise VerifierError("ctx too large")
     ctx_bytes = ctx_words * 8
+
+    if ctx_refs and ctx_layout is None:
+        raise VerifierError("ctx_refs given without the ctx_layout they "
+                            "were assembled against")
+    # symbolic map refs -> object-local indices, validated up front
+    map_local_of: dict[int, int] = {}
+    if map_refs:
+        name_to_local = {s.name: i for i, s in enumerate(map_specs)}
+        for idx, mname in map_refs.items():
+            if not 0 <= idx < len(insns) or not insns[idx].is_lddw():
+                raise VerifierError(
+                    f"map reloc at insn {idx} is not an lddw")
+            if mname not in name_to_local:
+                raise VerifierError(
+                    f"insn {idx}: reference to undeclared map {mname!r}")
+            map_local_of[idx] = name_to_local[mname]
 
     slots = isa.insn_slots(insns)
     slot2idx = {s: i for i, s in enumerate(slots)}
@@ -190,7 +242,7 @@ def verify(insns: list[Insn], map_specs: list[MapSpec], ctx_words: int = 16,
             raise VerifierError("verifier fixpoint did not converge")
         pc = work.pop()
         out = _transfer(pc, insns[pc], in_states[pc], map_specs, ctx_bytes,
-                        anns, helper_ids_used)
+                        anns, helper_ids_used, map_local_of, abstract)
         for s in succs[pc]:
             merged = out if s not in in_states else _merge_state(in_states[s], out)
             if s not in in_states or merged != in_states[s]:
@@ -275,12 +327,34 @@ def verify(insns: list[Insn], map_specs: list[MapSpec], ctx_words: int = 16,
                 touched_fds.add(ann.statics[i])
         touched_aux.update(AUX_WRITES.get(ann.name, ()))
 
+    # ---------------- relocation record (abstract mode)
+    record = None
+    if abstract:
+        live_ctx_refs: dict[int, str] = {}
+        for idx, fld in sorted((ctx_refs or {}).items()):
+            if idx not in reachable:
+                continue  # dead code never executes; leave it un-relocated
+            ann = anns.get(idx)
+            if not (isinstance(ann, MemAnn) and ann.region == "ctx"):
+                raise VerifierError(
+                    f"insn {idx}: ctx:{fld} reference is not a direct ctx "
+                    f"load — indirect ctx offsets are not relocatable")
+            live_ctx_refs[idx] = fld
+        from .layout import MapLayout  # late: layout never imports verifier
+        from .reloc import RelocRecord
+        record = RelocRecord(
+            map_layouts=tuple(MapLayout.from_spec(s) for s in map_specs),
+            map_lddw=dict(map_local_of),
+            ctx_refs=live_ctx_refs,
+            ctx_layout=ctx_layout)
+
     return VerifiedProgram(insns=insns, map_specs=list(map_specs),
                            ctx_words=ctx_words, anns=anns, blocks=blocks,
                            block_of=block_of, tier=tier, max_insns=max_insns,
                            helper_ids_used=helper_ids_used,
                            touched_map_fds=frozenset(touched_fds),
-                           touched_aux=frozenset(touched_aux))
+                           touched_aux=frozenset(touched_aux),
+                           reloc=record)
 
 
 def check_table_encodable(vprog: VerifiedProgram, n_maps: int,
@@ -340,10 +414,14 @@ def _check_stack_access(st: AbsState, base: Reg, off: int, size: int,
 
 
 def _transfer(pc: int, ins: Insn, st: AbsState, map_specs, ctx_bytes: int,
-              anns: dict, helper_ids_used: set) -> AbsState:
+              anns: dict, helper_ids_used: set,
+              map_local_of: dict[int, int] | None = None,
+              abstract: bool = False) -> AbsState:
     cls = ins.cls
 
     if ins.is_lddw():
+        if map_local_of and pc in map_local_of:
+            return st.with_reg(ins.dst, Reg(MAPVAL, map_local_of[pc]))
         return st.with_reg(ins.dst, Reg(CONST, u64(ins.imm64 or 0)))
 
     if cls in (BPF_ALU64, BPF_ALU):
@@ -353,7 +431,7 @@ def _transfer(pc: int, ins: Insn, st: AbsState, map_specs, ctx_bytes: int,
         is64 = cls == BPF_ALU64
         if op == isa.BPF_NEG:
             d = _require_init(st, ins.dst, pc, "neg")
-            if d.kind in (PTR_STACK, PTR_CTX):
+            if d.kind in (PTR_STACK, PTR_CTX, MAPVAL):
                 raise VerifierError(f"insn {pc}: arithmetic on pointer")
             if d.kind == CONST:
                 return st.with_reg(ins.dst, Reg(CONST, vm._alu(op, d.val, 0, is64)))
@@ -365,13 +443,15 @@ def _transfer(pc: int, ins: Insn, st: AbsState, map_specs, ctx_bytes: int,
             s = Reg(CONST, u64(ins.imm) if is64 else u32(ins.imm))
 
         if op == isa.BPF_MOV:
-            if not is64 and s.kind in (PTR_STACK, PTR_CTX):
+            if not is64 and s.kind in (PTR_STACK, PTR_CTX, MAPVAL):
                 return st.with_reg(ins.dst, Reg(SCALAR))  # truncation kills ptr
             if not is64 and s.kind == CONST:
                 return st.with_reg(ins.dst, Reg(CONST, u32(s.val)))
             return st.with_reg(ins.dst, s)
 
         d = _require_init(st, ins.dst, pc, "alu")
+        if MAPVAL in (d.kind, s.kind):
+            raise VerifierError(f"insn {pc}: arithmetic on map reference")
         d_ptr = d.kind in (PTR_STACK, PTR_CTX)
         s_ptr = s.kind in (PTR_STACK, PTR_CTX)
         if d_ptr or s_ptr:
@@ -429,7 +509,7 @@ def _transfer(pc: int, ins: Insn, st: AbsState, map_specs, ctx_bytes: int,
             raise VerifierError(f"insn {pc}: store via non-pointer r{ins.dst}")
         if cls == BPF_STX:
             v = _require_init(st, ins.src, pc, "store value")
-            if v.kind in (PTR_STACK, PTR_CTX):
+            if v.kind in (PTR_STACK, PTR_CTX, MAPVAL):
                 raise VerifierError(f"insn {pc}: spilling pointers to stack "
                                     "is not supported")
         lo = _check_stack_access(st, base, ins.off, size, pc, write=True)
@@ -440,19 +520,23 @@ def _transfer(pc: int, ins: Insn, st: AbsState, map_specs, ctx_bytes: int,
     if cls in (BPF_JMP, BPF_JMP32):
         op = ins.op & OP_MASK
         if op == isa.BPF_EXIT:
-            _require_init(st, isa.R0, pc, "exit")
+            r0 = _require_init(st, isa.R0, pc, "exit")
+            if r0.kind == MAPVAL:
+                raise VerifierError(f"insn {pc}: returning a map reference "
+                                    "(its concrete value is layout-dependent)")
             return st
         if op == isa.BPF_JA:
             return st
         if op == isa.BPF_CALL:
-            return _transfer_call(pc, ins, st, map_specs, anns, helper_ids_used)
+            return _transfer_call(pc, ins, st, map_specs, anns,
+                                  helper_ids_used, abstract)
         # conditional jump
         d = _require_init(st, ins.dst, pc, "jump")
-        if d.kind in (PTR_STACK, PTR_CTX):
+        if d.kind in (PTR_STACK, PTR_CTX, MAPVAL):
             raise VerifierError(f"insn {pc}: comparison on pointer")
         if ins.op & SRC_MASK:
             s = _require_init(st, ins.src, pc, "jump")
-            if s.kind in (PTR_STACK, PTR_CTX):
+            if s.kind in (PTR_STACK, PTR_CTX, MAPVAL):
                 raise VerifierError(f"insn {pc}: comparison on pointer")
         return st
 
@@ -460,7 +544,7 @@ def _transfer(pc: int, ins: Insn, st: AbsState, map_specs, ctx_bytes: int,
 
 
 def _transfer_call(pc: int, ins: Insn, st: AbsState, map_specs, anns,
-                   helper_ids_used) -> AbsState:
+                   helper_ids_used, abstract: bool = False) -> AbsState:
     sig = HELPERS.get(ins.imm)
     if sig is None:
         raise VerifierError(f"insn {pc}: unknown helper {ins.imm}")
@@ -470,10 +554,17 @@ def _transfer_call(pc: int, ins: Insn, st: AbsState, map_specs, anns,
         r = 1 + i
         reg = _require_init(st, r, pc, f"call {sig.name} arg{i + 1}")
         if kind == "mapfd":
-            if reg.kind != CONST:
-                raise VerifierError(f"insn {pc}: {sig.name} arg{i + 1} map fd "
-                                    "must be a compile-time constant")
-            fd = s64(reg.val)
+            if reg.kind == MAPVAL:
+                fd = reg.val
+            elif reg.kind == CONST and not abstract:
+                fd = s64(reg.val)
+            else:
+                # abstract mode refuses scalar-forged fds: positional rebinding
+                # at relocation time must never silently retarget them
+                raise VerifierError(
+                    f"insn {pc}: {sig.name} arg{i + 1} map fd must be "
+                    + ("a symbolic map reference (lddw rX, map:NAME)"
+                       if abstract else "a compile-time constant"))
             if not 0 <= fd < len(map_specs):
                 raise VerifierError(f"insn {pc}: map fd {fd} out of range")
             if sig.map_kinds and map_specs[fd].kind not in sig.map_kinds:
@@ -497,7 +588,7 @@ def _transfer_call(pc: int, ins: Insn, st: AbsState, map_specs, anns,
                                     "be a compile-time constant")
             statics.append(s64(reg.val))
         else:  # scalar
-            if reg.kind in (PTR_STACK, PTR_CTX):
+            if reg.kind in (PTR_STACK, PTR_CTX, MAPVAL):
                 raise VerifierError(f"insn {pc}: {sig.name} arg{i + 1} must "
                                     "be a scalar, not a pointer")
             statics.append(None)

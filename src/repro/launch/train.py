@@ -27,7 +27,8 @@ def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
                  ckpt_dir: str | None = None, save_every: int = 0,
                  probe_mode: str = "scan", seq_len: int = 64,
                  batch: int = 8, microbatch: int = 0, log_every: int = 10,
-                 on_step=None, max_data_skips: int = 1000):
+                 on_step=None, max_data_skips: int = 1000,
+                 cache_dir: str | None = None):
     from repro.configs import registry
     from repro.configs.base import ShapeConfig, TrainConfig
     from repro.data.pipeline import SyntheticDataset
@@ -38,6 +39,10 @@ def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
     tcfg = TrainConfig(microbatch=microbatch, remat=True, warmup=10,
                        total_steps=steps)
     shape = ShapeConfig("driver", seq_len, batch, "train")
+    if runtime is not None and cache_dir:
+        # explicit cache dir wins over the <shm>/cache default setup_shm
+        # would otherwise join
+        runtime.enable_artifact_cache(cache_dir)
     if runtime is not None and shm_dir:
         # worker_id=None keeps the single-process layout; with an id, this
         # trainer joins <shm_dir>/workers/<wid>/ so a fleet daemon can
@@ -53,14 +58,32 @@ def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
         return jax.jit(
             make_train_step(cfg, tcfg, runtime, probe_mode=probe_mode))
 
-    def get_step_fn():
+    def _call_sig(batch_np):
+        return jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(jnp.shape(a), jnp.result_type(a)),
+            (state, batch_np))
+
+    # trace facts the layout fingerprint can't see from the runtime alone:
+    # model + batch geometry + schedule length all shape the compiled graph
+    aot_key = ("train_step", arch, bool(smoke), seq_len, batch, microbatch,
+               probe_mode, steps)
+
+    def get_step_fn(batch_np):
         epoch = runtime.attach_epoch if runtime else 0
         if epoch not in jit_cache:
             # a background-promoted table link pre-compiles the new epoch's
             # step (core/promote.py) — never block the loop on a re-jit
             # that promotion already paid for
             promoted = runtime.take_promoted_step() if runtime else None
-            jit_cache[epoch] = promoted or build_step()
+            if promoted is None and runtime is not None \
+                    and runtime.artifact_cache is not None:
+                # fleet cold-join fast path: reuse another worker's AOT
+                # executable (or compile-and-store for the next joiner)
+                compiled, _hit = runtime.aot_step(
+                    build_step, _call_sig(batch_np), extra_key=aot_key)
+                jit_cache[epoch] = compiled
+            else:
+                jit_cache[epoch] = promoted or build_step()
         return jit_cache[epoch]
 
     def arm_promotion(batch_np):
@@ -96,7 +119,7 @@ def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
             continue
         skips = 0
         arm_promotion(batch_np)              # no-op after the first batch
-        step_fn = get_step_fn()              # re-jits only on attach change
+        step_fn = get_step_fn(batch_np)      # re-jits only on attach change
         state, metrics = step_fn(state, batch_np)
         history.append({k: float(np.asarray(v)) for k, v in metrics.items()})
         s = int(state["step"])
@@ -129,14 +152,18 @@ def main(argv=None):
                          "(multi-trainer aggregation, DESIGN.md §10)")
     ap.add_argument("--ckpt")
     ap.add_argument("--save-every", type=int, default=0)
+    ap.add_argument("--cache",
+                    help="AOT artifact cache directory (defaults to "
+                         "<shm>/cache when --shm is given)")
     args = ap.parse_args(argv)
 
     from repro.core.runtime import BpftimeRuntime
-    rt = BpftimeRuntime() if args.shm else None
+    rt = BpftimeRuntime() if (args.shm or args.cache) else None
     state, hist = run_training(
         args.arch, steps=args.steps, smoke=args.smoke, runtime=rt,
         shm_dir=args.shm, worker_id=args.worker_id, ckpt_dir=args.ckpt,
-        save_every=args.save_every, batch=args.batch, seq_len=args.seq)
+        save_every=args.save_every, batch=args.batch, seq_len=args.seq,
+        cache_dir=args.cache)
     print(f"final loss {hist[-1]['loss']:.4f} after {len(hist)} steps")
 
 

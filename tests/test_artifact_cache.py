@@ -1,0 +1,207 @@
+"""Fleet AOT artifact cache (DESIGN.md §13): durable round-trips,
+CRC-detected corruption degrading to recompile, fingerprint keying
+(the promote.py under-keying regression), and cross-process reuse."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core import events as E, faults as F
+from repro.core.artifact_cache import ArtifactCache
+from repro.core.maps import MapKind, MapSpec
+from repro.core.runtime import BpftimeRuntime
+
+
+# ------------------------------------------------------------- round trips
+def test_bytes_round_trip_and_counters(tmp_path):
+    c = ArtifactCache(str(tmp_path))
+    assert c.get_bytes("k1") is None
+    assert c.counters["misses"] == 1
+    c.put_bytes("k1", b"payload", "table")
+    assert c.get_bytes("k1") == b"payload"
+    assert c.get_bytes("k1", kind="step") is None     # kind mismatch drops
+    assert c.counters == {"hits": 1, "misses": 1, "stores": 1,
+                          "corrupt": 1, "purged": 0}
+    assert c.get_bytes("k1") is None                  # entry was dropped
+
+
+def test_table_image_round_trip(tmp_path):
+    c = ArtifactCache(str(tmp_path))
+    arrays = {"op": np.arange(12, dtype=np.int32),
+              "imm": np.ones((3, 4), np.int64)}
+    c.put_table("t", arrays)
+    out = c.get_table("t")
+    assert set(out) == {"op", "imm"}
+    assert np.array_equal(out["op"], arrays["op"])
+    assert np.array_equal(out["imm"], arrays["imm"])
+
+
+def test_step_round_trip_is_callable(tmp_path):
+    import jax
+    import jax.numpy as jnp
+
+    c = ArtifactCache(str(tmp_path))
+    compiled = jax.jit(lambda x: x * 2 + 1).lower(
+        jnp.arange(4.0)).compile()
+    assert c.put_step("s", compiled)
+    loaded = c.get_step("s")
+    assert loaded is not None
+    assert np.array_equal(np.asarray(loaded(jnp.arange(4.0))),
+                          np.asarray(compiled(jnp.arange(4.0))))
+
+
+def test_purge(tmp_path):
+    c = ArtifactCache(str(tmp_path))
+    c.put_bytes("a", b"1", "table")
+    c.put_bytes("b", b"2", "table")
+    assert c.purge("a") == 1
+    assert c.get_bytes("b") == b"2"
+    assert c.purge() == 1
+    assert c.stats()["entries"] == 0
+    assert c.counters["purged"] == 2
+
+
+# ------------------------------------------------------------- corruption
+def test_manual_corruption_detected_and_dropped(tmp_path):
+    c = ArtifactCache(str(tmp_path))
+    c.put_bytes("k", b"x" * 64, "table")
+    with open(c._bin("k"), "r+b") as f:
+        f.seek(10)
+        f.write(b"\xff")
+    assert c.get_bytes("k") is None
+    assert c.counters["corrupt"] == 1
+    assert not os.path.exists(c._bin("k"))            # torn entry reclaimed
+    # degrade to recompile: a fresh store of the same key works
+    c.put_bytes("k", b"y" * 64, "table")
+    assert c.get_bytes("k") == b"y" * 64
+
+
+def test_fault_plan_corrupts_artifact_and_cache_degrades(tmp_path):
+    """The chaos drill in miniature: corrupt_artifact fires on the
+    cache:post_store hook, the CRC catches it on read, and the caller
+    sees a plain miss — never a torn artifact, never a crash."""
+    c = ArtifactCache(str(tmp_path))
+    with F.plan(F.FaultPlan(seed=0,
+                            rates={"corrupt_artifact": 1.0})) as p:
+        c.put_bytes("k", b"z" * 256, "step")
+        assert p.counters["corrupt_artifact"] == 1
+    assert c.get_bytes("k", kind="step") is None
+    assert c.counters["corrupt"] == 1
+    assert c.counters["hits"] == 0
+    # and with the plan gone, the rewrite round-trips
+    c.put_bytes("k", b"z" * 256, "step")
+    assert c.get_bytes("k", kind="step") == b"z" * 256
+
+
+# ------------------------------------------------------------- keying
+def _runtime(specs):
+    rt = BpftimeRuntime()
+    for s in specs:
+        rt.create_map(s)
+    return rt
+
+
+def test_same_attach_signature_different_registry_different_key():
+    """Regression for the promote.py under-keying bug: the compile cache
+    was keyed on attach_signature alone, so two worlds with the same
+    attach set but different map registries collided — the second world
+    would be served the first world's executable."""
+    from repro.core.promote import PromotionEngine
+
+    rt_a = _runtime([MapSpec("m", MapKind.ARRAY, max_entries=64)])
+    rt_b = _runtime([MapSpec("m", MapKind.ARRAY, max_entries=64),
+                     MapSpec("extra", MapKind.HASH, max_entries=32)])
+
+    class _Link:
+        _parsed = (E.SITES.get_or_create("keying_site"), E.KIND_ENTRY)
+        pid = 1
+
+    key_a = PromotionEngine(rt_a, lambda: None, ())._cache_key(_Link())
+    key_b = PromotionEngine(rt_b, lambda: None, ())._cache_key(_Link())
+    # identical post-promotion attach signatures...
+    assert (PromotionEngine(rt_a, None, ())._target_signature(_Link())
+            == PromotionEngine(rt_b, None, ())._target_signature(_Link()))
+    # ...must still key to different artifacts
+    assert key_a != key_b
+
+
+def test_layout_fingerprint_separates_attach_sets():
+    rt = _runtime([MapSpec("m", MapKind.ARRAY, max_entries=64)])
+    base = rt.layout_fingerprint()
+    assert rt.layout_fingerprint(attach_sig=((("s", 0), (1,)),)) != base
+    assert rt.layout_fingerprint(extra=("batch", 8)) != base
+    assert rt.layout_fingerprint() == base            # deterministic
+
+
+# ------------------------------------------------------------- aot_step
+def test_aot_step_round_trip_same_process(tmp_path):
+    import jax
+    import jax.numpy as jnp
+
+    def boot():
+        rt = _runtime([MapSpec("m", MapKind.ARRAY, max_entries=64)])
+        rt.enable_artifact_cache(str(tmp_path))
+        calls = []
+
+        def build():
+            calls.append(1)
+            return jax.jit(lambda x: x + 1)
+
+        compiled, hit = rt.aot_step(build, (jnp.arange(8.0),))
+        return compiled, hit, len(calls), rt
+
+    c1, hit1, calls1, _ = boot()
+    assert (hit1, calls1) == (False, 1)
+    c2, hit2, calls2, rt2 = boot()
+    assert (hit2, calls2) == (True, 0)                # zero retraces
+    assert np.array_equal(np.asarray(c1(jnp.arange(8.0))),
+                          np.asarray(c2(jnp.arange(8.0))))
+    assert rt2.artifact_cache.counters["hits"] == 1
+
+
+_WORKER_SRC = r"""
+import json, sys
+import jax, jax.numpy as jnp
+from repro.core.maps import MapKind, MapSpec
+from repro.core.runtime import BpftimeRuntime
+
+cache_dir = sys.argv[1]
+rt = BpftimeRuntime()
+rt.create_map(MapSpec("m", MapKind.ARRAY, max_entries=64))
+rt.enable_artifact_cache(cache_dir)
+builds = []
+def build():
+    builds.append(1)
+    return jax.jit(lambda x: x * 3)
+compiled, hit = rt.aot_step(build, (jnp.arange(4.0),))
+out = [float(v) for v in compiled(jnp.arange(4.0))]
+print(json.dumps({"hit": hit, "builds": len(builds), "out": out,
+                  "counters": rt.artifact_cache.counters}))
+"""
+
+
+@pytest.mark.slow
+def test_cross_process_cache_reuse(tmp_path):
+    """Worker A populates the shared cache directory; a FRESH process B
+    derives the same fingerprint, hits, and never builds/retraces."""
+    env = dict(os.environ, PYTHONPATH="src")
+
+    def worker():
+        r = subprocess.run(
+            [sys.executable, "-c", _WORKER_SRC, str(tmp_path)],
+            capture_output=True, text=True, env=env, cwd=os.getcwd())
+        assert r.returncode == 0, r.stderr
+        return json.loads(r.stdout.strip().splitlines()[-1])
+
+    a = worker()
+    assert a["hit"] is False and a["builds"] == 1
+    assert a["counters"]["stores"] == 1
+    b = worker()
+    assert b["hit"] is True
+    assert b["builds"] == 0                           # zero retraces in B
+    assert b["counters"] == {"hits": 1, "misses": 0, "stores": 0,
+                             "corrupt": 0, "purged": 0}
+    assert a["out"] == b["out"]

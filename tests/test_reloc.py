@@ -1,0 +1,236 @@
+"""Relocatable verification (CO-RE, DESIGN.md §13): verify ONE abstract
+program, relocate it onto every config world in src/repro/configs/ —
+bit-identical to verifying from scratch in each world, with the verifier
+invoked exactly once."""
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.core import asm, events as E, loader, maps as M, reloc, verifier, vm
+from repro.core.layout import (EVENT_LAYOUT, CtxLayout, layout_fingerprint)
+from repro.core.maps import MapKind, MapSpec
+
+# two ctx fields + two maps: the representative per-layer probe shape
+PROG = """
+    ldxdw r6, [r1+ctx:layer]
+    ldxdw r7, [r1+ctx:rms]
+    stxdw [r10-8], r6
+    lddw r1, map:rl_counts
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    lddw r1, map:rl_hist
+    mov r2, r7
+    call hist_add
+    mov r0, 0
+    exit
+"""
+
+DECLARED = [MapSpec("rl_counts", MapKind.ARRAY, max_entries=64),
+            MapSpec("rl_hist", MapKind.LOG2HIST)]
+
+
+def _abstract():
+    obj = loader.build_object("rl_probe", PROG, list(DECLARED), "uprobe")
+    return obj, reloc.verify_relocatable(obj)
+
+
+def _concrete_text(fd_of, layout=EVENT_LAYOUT):
+    """The verify-from-scratch control: same source with fds and ctx byte
+    offsets hard-coded for one world (no relocation machinery at all)."""
+    t = PROG.replace("ctx:layer", str(layout.byte_of("layer")))
+    t = t.replace("ctx:rms", str(layout.byte_of("rms")))
+    t = t.replace("map:rl_counts", str(fd_of["rl_counts"]))
+    return t.replace("map:rl_hist", str(fd_of["rl_hist"]))
+
+
+def _worlds():
+    """>= 12 distinct concrete registries derived from every config in
+    src/repro/configs: decoy maps shift the real maps' fd positions, and
+    odd worlds reverse the declared order, so the lddw targets genuinely
+    move between worlds."""
+    worlds = []
+    for i, arch in enumerate(sorted(registry.ARCHS)):
+        for smoke in (False, True):
+            cfg = registry.smoke(arch) if smoke else registry.get(arch)
+            n_decoy = (i + (1 if smoke else 0)) % 4
+            decoys = [MapSpec(f"decoy_{arch[:8]}_{j}", MapKind.ARRAY,
+                              max_entries=8 + cfg.num_layers % 8 + j)
+                      for j in range(n_decoy)]
+            reals = list(DECLARED) if i % 2 == 0 else list(DECLARED[::-1])
+            specs = decoys + reals
+            worlds.append((f"{arch}{'-smoke' if smoke else ''}", specs))
+    assert len(worlds) >= 12
+    return worlds
+
+
+def _pack(row):
+    return b"".join(int(v).to_bytes(8, "little", signed=True) for v in row)
+
+
+def _rows(layout=EVENT_LAYOUT, n=32, seed=0):
+    rng = np.random.default_rng(seed)
+    rows = np.zeros((n, layout.words), np.int64)
+    rows[:, layout.word_of("layer")] = rng.integers(0, 64, n)
+    rows[:, layout.word_of("rms")] = rng.integers(1, 1 << 30, n)
+    return rows
+
+
+def _vm_states(specs, insns, rows):
+    states = {s.name: M.init_state(s, np) for s in specs}
+    for row in rows:
+        vm.run(insns, _pack(row), specs, states)
+    return states
+
+
+def test_one_verification_relocates_to_every_config_world():
+    obj, vabs = _abstract()
+    assert vabs.is_abstract
+    verifier.STATS["verify_calls"] = 0
+
+    worlds = _worlds()
+    resolved = []
+    for name, specs in worlds:
+        fd_of = {s.name: i for i, s in enumerate(specs)}
+        resolved.append((name, specs, fd_of,
+                         reloc.resolve(vabs, fd_of, specs)))
+    # the whole fleet bound from ONE verification: zero verifier re-entry
+    assert verifier.STATS["verify_calls"] == 0
+    assert vabs.reloc.resolved is False        # source record untouched
+
+    rows = _rows()
+    for name, specs, fd_of, vprog in resolved:
+        # differential control: assemble + verify this world from scratch
+        scratch = verifier.verify(
+            asm.assemble(_concrete_text(fd_of)).insns, specs)
+        blob_a = b"".join(i.encode() for i in vprog.insns)
+        blob_b = b"".join(i.encode() for i in scratch.insns)
+        assert blob_a == blob_b, f"world {name}: relocated bytecode differs"
+        assert vprog.touched_map_fds == scratch.touched_map_fds
+        # and the relocated program computes the same map state
+        sa = _vm_states(specs, vprog.insns, rows)
+        sb = _vm_states(specs, scratch.insns, rows)
+        assert np.array_equal(sa["rl_counts"]["values"],
+                              sb["rl_counts"]["values"]), name
+        assert np.array_equal(sa["rl_hist"]["bins"],
+                              sb["rl_hist"]["bins"]), name
+
+
+def test_fingerprints_separate_worlds():
+    seen = {}
+    for name, specs in _worlds():
+        fp = layout_fingerprint(specs, E.EVENT_WIDTH)
+        assert fp not in seen or seen[fp] == [
+            (s.name, s.kind, s.max_entries) for s in specs], \
+            f"distinct registries {name} collide on one fingerprint"
+        seen[fp] = [(s.name, s.kind, s.max_entries) for s in specs]
+    assert len(set(seen)) > 1
+
+
+def test_relocate_onto_permuted_ctx_layout():
+    """The same verified program reads a PERMUTED event layout correctly
+    once relocated — the CO-RE field-offset story, not just map fds."""
+    _, vabs = _abstract()
+    perm = CtxLayout.from_btf("permuted", {"layer": 9, "rms": 1}, words=16)
+    specs = list(DECLARED)
+    fd_of = {s.name: i for i, s in enumerate(specs)}
+    v_base = reloc.resolve(vabs, fd_of, specs)
+    v_perm = reloc.resolve(vabs, fd_of, specs, ctx_layout=perm)
+
+    base_rows = _rows()
+    perm_rows = np.zeros_like(base_rows)
+    perm_rows[:, 9] = base_rows[:, EVENT_LAYOUT.word_of("layer")]
+    perm_rows[:, 1] = base_rows[:, EVENT_LAYOUT.word_of("rms")]
+
+    sa = _vm_states(specs, v_base.insns, base_rows)
+    sb = _vm_states(specs, v_perm.insns, perm_rows)
+    assert np.array_equal(sa["rl_counts"]["values"],
+                          sb["rl_counts"]["values"])
+    assert np.array_equal(sa["rl_hist"]["bins"], sb["rl_hist"]["bins"])
+
+
+def test_relocated_attach_matches_scratch_in_jitted_pipeline():
+    """One world end-to-end through the fused jitted probe stage:
+    load_relocatable (zero verifier work) vs load_asm (full verify)."""
+    import jax
+
+    from repro.core import jit as J
+    from repro.core.runtime import BpftimeRuntime
+
+    _, vabs = _abstract()
+    site = E.SITES.get_or_create("rl_site")
+    rows = np.zeros((256, E.EVENT_WIDTH), np.int64)
+    rows[:, 0] = site
+    rows[:, 1] = E.KIND_ENTRY
+    rows[:, EVENT_LAYOUT.word_of("layer")] = \
+        np.arange(256) % 48
+    rows[:, EVENT_LAYOUT.word_of("rms")] = 1 + np.arange(256)
+
+    def run_world(load):
+        rt = BpftimeRuntime()
+        rt.create_map(MapSpec("decoy_jit", MapKind.ARRAY, max_entries=8))
+        pid = load(rt)
+        rt.attach(pid, "uprobe:rl_site")
+        stage = jax.jit(lambda r, m: rt.probe_stage(r, m, J.make_aux()))
+        maps, _ = stage(rows, rt.init_device_maps())
+        return jax.tree.map(np.asarray, maps)
+
+    verifier.STATS["verify_calls"] = 0
+    ma = run_world(lambda rt: rt.load_relocatable(vabs, "rl_probe"))
+    assert verifier.STATS["verify_calls"] == 0
+    mb = run_world(lambda rt: rt.load_asm("rl_probe", PROG, DECLARED))
+    assert verifier.STATS["verify_calls"] == 1
+    assert np.array_equal(ma["rl_counts"]["values"],
+                          mb["rl_counts"]["values"])
+    assert np.array_equal(ma["rl_hist"]["bins"], mb["rl_hist"]["bins"])
+    assert ma["rl_counts"]["values"].sum() == 256
+
+
+# --------------------------------------------------------------- negatives
+def test_missing_map_symbol_rejected():
+    _, vabs = _abstract()
+    specs = [DECLARED[0]]                       # no rl_hist in this world
+    fd_of = {s.name: i for i, s in enumerate(specs)}
+    with pytest.raises(reloc.RelocationError, match="rl_hist"):
+        reloc.resolve(vabs, fd_of, specs)
+    assert vabs.reloc.resolved is False
+
+
+def test_map_kind_mismatch_rejected():
+    _, vabs = _abstract()
+    specs = [DECLARED[0],
+             MapSpec("rl_hist", MapKind.ARRAY, max_entries=64)]
+    fd_of = {s.name: i for i, s in enumerate(specs)}
+    with pytest.raises(reloc.RelocationError, match="rl_hist"):
+        reloc.resolve(vabs, fd_of, specs)
+
+
+def test_ctx_field_out_of_bounds_rejected():
+    _, vabs = _abstract()
+    specs = list(DECLARED)
+    fd_of = {s.name: i for i, s in enumerate(specs)}
+    oob = CtxLayout.from_btf("wide", {"layer": 2, "rms": 20}, words=24)
+    with pytest.raises(reloc.RelocationError):
+        reloc.resolve(vabs, fd_of, specs, ctx_layout=oob, ctx_words=16)
+    assert vabs.reloc.resolved is False
+
+
+def test_failed_relocation_leaves_live_generation_untouched():
+    """A bad relocation must be rejected BEFORE any runtime mutation: the
+    live table generation, registry, and program set stay as they were."""
+    from repro.core.runtime import BpftimeRuntime
+
+    _, vabs = _abstract()
+    rt = BpftimeRuntime()
+    rt.create_map(DECLARED[0])
+    rt.create_map(MapSpec("rl_hist", MapKind.ARRAY, max_entries=64))
+    rt.enable_live_attach(max_programs=2, max_insns=64,
+                          arm=("uprobe:rl_site",))
+    gen0 = int(rt.live.host["gen"][0])
+    n_specs, n_progs = len(rt.map_specs), len(rt.progs)
+    with pytest.raises(Exception):
+        rt.load_relocatable(vabs, "rl_probe")   # rl_hist kind mismatch
+    assert int(rt.live.host["gen"][0]) == gen0
+    assert len(rt.map_specs) == n_specs
+    assert len(rt.progs) == n_progs
