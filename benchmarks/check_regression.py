@@ -26,7 +26,16 @@ Hard floors:
     artifact cache must absorb its first probed event within a HARD
     100ms ceiling (no tolerance) and within TOLERANCE of the recorded
     budget, and the deserialized executable must be BIT-IDENTICAL to a
-    fresh compile (hard invariant).
+    fresh compile (hard invariant);
+  * commutativity widening (DESIGN.md §14): the disjoint-static-update
+    program set must stay conflict-free (rule 1 proves it fused — hard),
+    fused output must be BIT-IDENTICAL to scan (hard), and the widened
+    fused set must beat whole-stage scan by >= WIDEN_FUSED_FLOOR; the
+    shared-hash static-key slots must keep their batched vec flags
+    (rule 2 — hard), colliding keys must still demote (the widening must
+    not over-approximate — hard), and batched must beat the demoted row
+    loop by >= WIDEN_BATCHED_FLOOR; both ns/event within TOLERANCE of
+    their recorded budgets.
 
     python benchmarks/check_regression.py BENCH_probe.json \
         [--baseline benchmarks/BENCH_baseline.json] [--tolerance 2.0]
@@ -46,6 +55,11 @@ INTERP_SCAN_CEIL = 5.0
 # fleet member must reach its first probed event by deserializing the
 # shared AOT artifact, never by retracing — an absolute wall, no tolerance
 WARM_JOIN_CEIL_MS = 100.0
+# floors on what the commutativity widening buys (DESIGN.md §14): the
+# previously-demoted sets must actually run on their fast lanes, not
+# just be eligible for them
+WIDEN_FUSED_FLOOR = 2.0
+WIDEN_BATCHED_FLOOR = 1.5
 
 
 def check(result: dict, baseline: dict, tolerance: float) -> list[str]:
@@ -151,6 +165,52 @@ def check(result: dict, baseline: dict, tolerance: float) -> list[str]:
                 f"fleet recovery {rec['recovery_ms']:.1f}ms exceeds budget "
                 f"{rec_budget:.1f}ms x{tolerance}")
 
+    wid = result.get("widening")
+    wid_base = baseline.get("widening", {})
+    if wid is None:
+        failures.append("result json has no widening measurement "
+                        "(widening.fused / widening.batched)")
+    else:
+        wf, wb = wid.get("fused", {}), wid.get("batched", {})
+        if not wf.get("conflict_free", False):
+            failures.append(
+                "widening rule 1 REGRESSED: the disjoint-static-update "
+                "set is no longer proven conflict-free — the stage fell "
+                "back to scan (DESIGN.md §14)")
+        if not wf.get("bit_identical", False):
+            failures.append(
+                "widening BROKE BIT-IDENTITY: fused output for the "
+                "widened set diverges from scan (DESIGN.md §14)")
+        if wf.get("speedup", 0.0) < WIDEN_FUSED_FLOOR:
+            failures.append(
+                f"widened fused set {wf.get('speedup', 0):.2f}x vs scan "
+                f"is below the {WIDEN_FUSED_FLOOR}x floor")
+        wf_budget = wid_base.get("fused", {}).get("ns_per_event")
+        if wf_budget and wf.get("ns_per_event", 0.0) > \
+                wf_budget * tolerance:
+            failures.append(
+                f"widened fused set {wf['ns_per_event']:.0f}ns/event "
+                f"exceeds budget {wf_budget:.0f}ns/event x{tolerance}")
+        if not wb.get("all_slots_batched", False):
+            failures.append(
+                "widening rule 2 REGRESSED: static-key shared-hash slots "
+                "lost their batched vec flag (DESIGN.md §14)")
+        if not wb.get("demotion_still_works", False):
+            failures.append(
+                "widening rule 2 OVER-APPROXIMATES: colliding home-slot "
+                "keys no longer demote (DESIGN.md §14)")
+        if wb.get("speedup", 0.0) < WIDEN_BATCHED_FLOOR:
+            failures.append(
+                f"widened batched slots {wb.get('speedup', 0):.2f}x vs "
+                f"the demoted row loop is below the "
+                f"{WIDEN_BATCHED_FLOOR}x floor")
+        wb_budget = wid_base.get("batched", {}).get("ns_per_event")
+        if wb_budget and wb.get("ns_per_event", 0.0) > \
+                wb_budget * tolerance:
+            failures.append(
+                f"widened batched slots {wb['ns_per_event']:.0f}ns/event "
+                f"exceeds budget {wb_budget:.0f}ns/event x{tolerance}")
+
     return failures
 
 
@@ -209,6 +269,17 @@ def main(argv=None) -> int:
               f"zero_loss={fr.get('zero_loss')} (budget "
               f"{baseline.get('fleet_recovery', {}).get('recovery_ms', 0):.1f}"
               f"ms x{args.tolerance})")
+    if "widening" in result:
+        wf = result["widening"].get("fused", {})
+        wb = result["widening"].get("batched", {})
+        print(f"widening:      fused {wf.get('speedup', 0):.1f}x vs scan "
+              f"(floor {WIDEN_FUSED_FLOOR}x, "
+              f"conflict_free={wf.get('conflict_free')}, "
+              f"bit_identical={wf.get('bit_identical')}); "
+              f"batched {wb.get('speedup', 0):.1f}x vs demoted "
+              f"(floor {WIDEN_BATCHED_FLOOR}x, "
+              f"all_batched={wb.get('all_slots_batched')}, "
+              f"demotes={wb.get('demotion_still_works')})")
     if failures:
         for msg in failures:
             print(f"REGRESSION: {msg}", file=sys.stderr)

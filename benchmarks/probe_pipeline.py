@@ -431,6 +431,139 @@ def measure_fleet_recovery(n_workers: int = 3, rounds: int = 6,
         shutil.rmtree(root, ignore_errors=True)
 
 
+WIDEN_UPD = """
+    ldxdw r6, [r1+ctx:rms]
+    stdw [r10-8], {key}
+    stxdw [r10-16], r6
+    lddw r1, map:bp_lastseen
+    mov r2, r10
+    add r2, -8
+    mov r3, r10
+    add r3, -16
+    mov r4, 0
+    call map_update_elem
+    mov r0, 0
+    exit
+"""
+
+WIDEN_HASH_ADD = """
+    ldxdw r6, [r1+ctx:layer]
+    stdw [r10-8], {key}
+    lddw r1, map:bp_widen_hash
+    mov r2, r10
+    add r2, -8
+    mov r3, r6
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+
+def measure_widening(n_events: int = 4096, iters: int = 20) -> dict:
+    """What the commutativity-widening rules buy (DESIGN.md §14).
+
+    Fused: the representative 3-program world plus TWO map_update_elem
+    programs writing provably-disjoint static cells of a shared ARRAY —
+    non-commutative sharing that pre-widening demoted the entire stage to
+    per-attachment scan, and that footprint disjointness (rule 1) now
+    proves order-free.  Reports fused vs scan ns/event for the 5-program
+    set, whether the conflict check really cleared it, and fused/scan
+    bit-identity (the certificate).
+
+    Batched: two static-key hash fetch_add programs live-attached with
+    home-slot-distinct keys — same-map hash sharing that pre-widening
+    forced into the sequential row loop, and that rule 2 keeps on the
+    lockstep SIMT lane.  Reports batched vs (force-demoted, via colliding
+    keys) ns/event and that both slots really kept their vec flag."""
+    from repro.core.runtime import WIDEN_STATS, _has_ordering_conflict
+
+    lastseen = M.MapSpec("bp_lastseen", M.MapKind.ARRAY, max_entries=16)
+    rows = make_tape(n_events)
+
+    rt = build_runtime()
+    rt.create_map(lastseen)
+    for i, key in enumerate((2, 5)):
+        pid = rt.load_asm(f"bp_upd{i}", WIDEN_UPD.format(key=key),
+                          [lastseen], "uprobe")
+        rt.attach(pid, "uprobe:bp_block")
+    vps = [rec.vprog for rec in rt.progs.values()]
+    before = WIDEN_STATS["fused_disjoint_pairs"]
+    conflict_free = not _has_ordering_conflict(vps)
+    widened = WIDEN_STATS["fused_disjoint_pairs"] > before
+
+    stage_f, fused = _measure_stage(rt, rows, iters, mode="fused")
+    stage_s, scan = _measure_stage(rt, rows, iters, mode="scan")
+    mf = jax.block_until_ready(stage_f(rows, rt.init_device_maps()))
+    ms = jax.block_until_ready(stage_s(rows, rt.init_device_maps()))
+    bit_identical = all(
+        np.array_equal(np.asarray(mf[name][k]), np.asarray(ms[name][k]))
+        for name in ("bp_layer_counts", "bp_lastseen")
+        for k in mf[name])
+
+    def live_hash_world(keys):
+        hsh = M.MapSpec("bp_widen_hash", M.MapKind.HASH, max_entries=64)
+        lrt = BpftimeRuntime()
+        lrt.create_map(hsh)
+        lrt.enable_live_attach(
+            max_programs=4, max_insns=64,
+            arm=("uprobe:bp_block", "uretprobe:bp_block"))
+        slots = []
+        for i, (key, target) in enumerate(zip(
+                keys, ("uprobe:bp_block", "uretprobe:bp_block"))):
+            pid = lrt.load_asm(f"bp_wh{i}", WIDEN_HASH_ADD.format(key=key),
+                               [hsh], "uprobe")
+            slots.append(lrt.attach(pid, target, mode="table",
+                                    promote=False).slot)
+        return lrt, slots
+
+    def distinct_home_keys(n=64):
+        homes, out = set(), []
+        for k in range(256):
+            h = M._np_hash_idx(k, n)
+            if h not in homes:
+                homes.add(h)
+                out.append(k)
+                if len(out) == 2:
+                    return out
+        raise AssertionError
+
+    def colliding_home_keys(n=64):
+        homes = {}
+        for k in range(256):
+            h = M._np_hash_idx(k, n)
+            if h in homes:
+                return homes[h], k
+            homes[h] = k
+        raise AssertionError
+
+    wrt, wslots = live_hash_world(distinct_home_keys())
+    all_batched = all(wrt.live.host["vec"][s] == 1 for s in wslots)
+    _, batched = _measure_stage(wrt, rows, iters)
+    drt, dslots = live_hash_world(colliding_home_keys())
+    all_demoted = all(drt.live.host["vec"][s] == 0 for s in dslots)
+    _, demoted = _measure_stage(drt, rows, iters)
+
+    return {
+        "fused": {
+            "n_programs": len(vps),
+            "conflict_free": bool(conflict_free and widened),
+            "bit_identical": bool(bit_identical),
+            "ns_per_event": fused["ns_per_event"],
+            "scan_ns_per_event": scan["ns_per_event"],
+            "speedup": scan["ns_per_event"]
+            / max(fused["ns_per_event"], 1e-12),
+        },
+        "batched": {
+            "all_slots_batched": bool(all_batched),
+            "demotion_still_works": bool(all_demoted),
+            "ns_per_event": batched["ns_per_event"],
+            "demoted_ns_per_event": demoted["ns_per_event"],
+            "speedup": demoted["ns_per_event"]
+            / max(batched["ns_per_event"], 1e-12),
+        },
+    }
+
+
 def run(n_events: int = 4096, iters: int = 20,
         modes=("scan", "vectorized", "fused", "interp")) -> dict:
     rt = build_runtime()
@@ -465,6 +598,8 @@ def run(n_events: int = 4096, iters: int = 20,
     # chaos plane: daemon restart latency + zero-loss journal recovery
     out["fleet_recovery"] = measure_fleet_recovery(
         events_per_round=max(384, n_events // 4))
+    # commutativity widening: previously-demoted program sets stay fast
+    out["widening"] = measure_widening(n_events=n_events, iters=iters)
     return out
 
 
@@ -498,6 +633,17 @@ def main():
         fr = res["fleet_recovery"]
         print(f"# fleet recovery: {fr['recovery_ms']:.1f}ms daemon restart "
               f"(zero_loss={fr['zero_loss']})")
+    if "widening" in res:
+        wf, wb = res["widening"]["fused"], res["widening"]["batched"]
+        print(f"# widening fused: {wf['n_programs']} progs incl. disjoint "
+              f"updates at {wf['ns_per_event']:.1f}ns/event "
+              f"({wf['speedup']:.1f}x vs scan, "
+              f"conflict_free={wf['conflict_free']}, "
+              f"bit_identical={wf['bit_identical']})")
+        print(f"# widening batched: shared-hash slots at "
+              f"{wb['ns_per_event']:.1f}ns/event "
+              f"({wb['speedup']:.1f}x vs demoted row loop, "
+              f"all_batched={wb['all_slots_batched']})")
 
 
 if __name__ == "__main__":

@@ -78,6 +78,13 @@ def main(argv=None):
             fr = res["fleet_recovery"]
             print(f"# fleet recovery: {fr['recovery_ms']:.1f}ms daemon "
                   f"restart (zero_loss={fr['zero_loss']})")
+        if "widening" in res:
+            wf, wb = res["widening"]["fused"], res["widening"]["batched"]
+            print(f"# widening: disjoint-update set fused at "
+                  f"{wf['ns_per_event']:.0f}ns/event "
+                  f"({wf['speedup']:.1f}x vs scan fallback), shared-hash "
+                  f"slots batched at {wb['ns_per_event']:.0f}ns/event "
+                  f"({wb['speedup']:.1f}x vs demoted row loop)")
         print(f"\nwrote {args.json}\nOK")
         return
 

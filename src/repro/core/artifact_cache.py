@@ -40,7 +40,7 @@ import numpy as np
 
 from . import faults
 
-COUNTER_KEYS = ("hits", "misses", "stores", "corrupt", "purged")
+COUNTER_KEYS = ("hits", "misses", "stores", "corrupt", "purged", "evicted")
 
 
 class ArtifactCache:
@@ -49,10 +49,19 @@ class ArtifactCache:
     Safe for concurrent use by N processes: entries are content-complete
     before they are visible (atomic rename), reads never lock, and two
     workers racing to store the same key write identical bytes (the key
-    IS the trace-stability invariant), so last-rename-wins is benign."""
+    IS the trace-stability invariant), so last-rename-wins is benign.
 
-    def __init__(self, root: str):
+    ``max_bytes`` arms an LRU size budget: after every store, least-
+    recently-used entries (payload mtime, refreshed on every hit) are
+    deleted until the directory fits.  Eviction is safe for the same
+    reason purge is — an evicted key is a future miss, and the caller's
+    recompile path regenerates identical bytes.  The entry just written
+    is never the eviction victim, so a single artifact larger than the
+    budget still serves its own writer."""
+
+    def __init__(self, root: str, max_bytes: int | None = None):
         self.root = str(root)
+        self.max_bytes = max_bytes
         os.makedirs(self.root, exist_ok=True)
         self.counters: dict[str, int] = {k: 0 for k in COUNTER_KEYS}
 
@@ -79,6 +88,7 @@ class ArtifactCache:
         os.replace(mtmp, metapath)
         self.counters["stores"] += 1
         faults.fire("cache:post_store", path=binpath, key=key)
+        self._evict(exclude=key)
 
     def get_bytes(self, key: str, kind: str | None = None) -> bytes | None:
         binpath, metapath = self._bin(key), self._meta(key)
@@ -97,7 +107,44 @@ class ArtifactCache:
             self._drop_corrupt(key)
             return None
         self.counters["hits"] += 1
+        try:                       # refresh LRU recency (payload mtime)
+            os.utime(binpath)
+        except OSError:
+            pass
         return payload
+
+    def _evict(self, exclude: str | None = None) -> int:
+        """Delete LRU entries until the directory fits ``max_bytes``.
+        Recency is the payload file's mtime (stores and hits both refresh
+        it).  ``exclude`` shields the entry just written.  Returns the
+        number of entries evicted."""
+        if self.max_bytes is None:
+            return 0
+        entries = []        # (mtime, key, size)
+        total = 0
+        for r in self.ls():
+            try:
+                mtime = os.stat(self._bin(r["key"])).st_mtime
+            except OSError:
+                continue
+            entries.append((mtime, r["key"], r["size"]))
+            total += r["size"]
+        entries.sort()      # oldest first
+        n = 0
+        for mtime, key, size in entries:
+            if total <= self.max_bytes:
+                break
+            if key == exclude:
+                continue
+            for p in (self._bin(key), self._meta(key)):
+                try:
+                    os.unlink(p)
+                except OSError:
+                    pass
+            total -= size
+            n += 1
+        self.counters["evicted"] += n
+        return n
 
     def _drop_corrupt(self, key: str) -> None:
         self.counters["corrupt"] += 1
@@ -181,6 +228,7 @@ class ArtifactCache:
         rows = self.ls()
         return {"root": self.root, "entries": len(rows),
                 "bytes": sum(r["size"] for r in rows),
+                "max_bytes": self.max_bytes,
                 **self.counters}
 
     def purge(self, key: str | None = None) -> int:

@@ -863,17 +863,25 @@ def _cmd_prog_cache(root: str, args) -> int:
         return 0
     # stat: disk contents + per-worker hit/miss counters (status.json)
     st = cache.stats()
+    evicted = sum(c.get("evicted", 0)
+                  for c in _worker_cache_counters(root).values())
     out = {"root": st["root"], "entries": st["entries"],
-           "bytes": st["bytes"], "workers": _worker_cache_counters(root)}
+           "bytes": st["bytes"], "max_bytes": st["max_bytes"],
+           "evicted": evicted,
+           "workers": _worker_cache_counters(root)}
     if args.json:
         print(json.dumps(out, indent=1))
         return 0
+    budget = ("no budget" if out["max_bytes"] is None
+              else f"budget {out['max_bytes']} bytes")
     print(f"artifact cache {out['root']}: {out['entries']} entr"
-          f"{'y' if out['entries'] == 1 else 'ies'}, {out['bytes']} bytes")
+          f"{'y' if out['entries'] == 1 else 'ies'}, {out['bytes']} bytes "
+          f"({budget}, {out['evicted']} evicted)")
     for wid, c in sorted(out["workers"].items()):
         print(f"  worker {wid}: hits={c.get('hits', 0)} "
               f"misses={c.get('misses', 0)} stores={c.get('stores', 0)} "
-              f"corrupt={c.get('corrupt', 0)}")
+              f"corrupt={c.get('corrupt', 0)} "
+              f"evicted={c.get('evicted', 0)}")
     return 0
 
 

@@ -164,16 +164,20 @@ def resolve(vabs: VerifiedProgram, fd_of: dict[str, int],
             for i, kind in enumerate(sig.args):
                 if kind == "mapfd":
                     statics[i] = local_fd[statics[i]]
-            ann = CallAnn(hid=ann.hid, name=ann.name, statics=statics)
+            # key_vals are stack constants — layout-independent, carry over
+            ann = CallAnn(hid=ann.hid, name=ann.name, statics=statics,
+                          key_vals=ann.key_vals)
         anns[idx] = ann
 
     touched = frozenset(local_fd[li] for li in vabs.touched_map_fds)
+    from .verifier import compute_footprints
     return VerifiedProgram(
         insns=insns, map_specs=list(concrete_specs), ctx_words=ctx_words,
         anns=anns, blocks=vabs.blocks, block_of=vabs.block_of,
         tier=vabs.tier, max_insns=vabs.max_insns,
         helper_ids_used=set(vabs.helper_ids_used),
         touched_map_fds=touched, touched_aux=vabs.touched_aux,
+        footprints=compute_footprints(anns, concrete_specs),
         reloc=_dc_replace(rec, resolved=True))
 
 

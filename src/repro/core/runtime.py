@@ -41,12 +41,14 @@ from . import events as E, jit as J, loader, maps as M, syscalls as S, vm
 from .helpers import HELPERS
 from .loader import ProgramObject
 from .maps import MapSpec
-from .verifier import CallAnn, VerifiedProgram, verify
+from .verifier import (CallAnn, COMMUTATIVE_HELPERS as _COMMUTATIVE_HELPERS,
+                       VerifiedProgram, footprints_disjoint, verify)
 
-# helpers whose map side effects commute across programs (order-free)
-_COMMUTATIVE_HELPERS = {"map_fetch_add", "percpu_fetch_add", "hist_add"}
 _AUX_RESOURCES = {"trace_printk": "printk", "override_return": "override",
                   "get_prandom_u32": "rand"}
+
+# observability: how often the footprint proofs fired (fuzz/bench reports)
+WIDEN_STATS = {"fused_disjoint_pairs": 0}
 
 
 def _ordering_resources(vprog: VerifiedProgram) -> dict:
@@ -73,13 +75,21 @@ def _ordering_resources(vprog: VerifiedProgram) -> dict:
 def _has_ordering_conflict(vprogs: list) -> bool:
     """True iff any resource is shared non-commutatively across two
     distinct programs (same program attached to several sites is fine —
-    its per-attachment order is preserved by the fused scheduler)."""
+    its per-attachment order is preserved by the fused scheduler) AND the
+    verifier's effect footprints cannot prove the sharing unobservable
+    (disjoint static cells on a positional map — widening rule 1)."""
     res = [_ordering_resources(vp) for vp in vprogs]
     for i in range(len(res)):
         for j in range(i + 1, len(res)):
             for key, comm_i in res[i].items():
-                if key in res[j] and not (comm_i and res[j][key]):
-                    return True
+                if key not in res[j] or (comm_i and res[j][key]):
+                    continue
+                if key[0] == "map" and footprints_disjoint(
+                        vprogs[i].footprint_of(key[1]),
+                        vprogs[j].footprint_of(key[1])):
+                    WIDEN_STATS["fused_disjoint_pairs"] += 1
+                    continue
+                return True
     return False
 
 
@@ -306,7 +316,11 @@ class BpftimeRuntime:
             raise loader.LoadError(
                 f"live table full ({self.live.max_programs} slots)")
         sid, ev_kind = parsed
-        self.live.encode_slot(slot, prog.vprog, sid, ev_kind, pid=pid)
+        # encoded table images are content-addressed in the fleet artifact
+        # cache (setup_shm auto-joins <root>/cache): the daemon fanning an
+        # attach out to N workers encodes once, N-1 workers reuse the image
+        self.live.encode_slot(slot, prog.vprog, sid, ev_kind, pid=pid,
+                              cache=self.artifact_cache)
         lid = next(self._next_link)
         link = Link(lid, pid, target, lane="table", slot=slot,
                     promotion_state="interp", promote=promote,
@@ -455,13 +469,14 @@ class BpftimeRuntime:
             self.syscalls.detach(parts[1], "enter", prog.name)
 
     # ---------------------------------------------------------------- cache
-    def enable_artifact_cache(self, root: str):
+    def enable_artifact_cache(self, root: str, max_bytes: int | None = None):
         """Join (or create) an AOT artifact cache directory. Compiled steps
         produced by aot_step()/PromotionEngine are stored under the layout
         fingerprint; any process sharing the directory and the same layout
-        basis reuses them instead of retracing."""
+        basis reuses them instead of retracing. ``max_bytes`` arms the LRU
+        size budget for long-lived fleets (see artifact_cache.py)."""
         from .artifact_cache import ArtifactCache
-        self.artifact_cache = ArtifactCache(root)
+        self.artifact_cache = ArtifactCache(root, max_bytes=max_bytes)
         return self.artifact_cache
 
     def layout_fingerprint(self, attach_sig: tuple | None = None,

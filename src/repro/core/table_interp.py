@@ -43,7 +43,8 @@ import numpy as np
 from . import isa, jit as J, maps as M
 from .helpers import HELPERS
 from .isa import (TABLE_FIELDS, TH_EXIT, STACK_BASE, STACK_SIZE, CTX_BASE)
-from .verifier import VerifiedProgram
+from .verifier import (COMMUTATIVE_HELPERS, MapFootprint, VerifiedProgram,
+                       footprints_disjoint)
 
 I64 = jnp.int64
 
@@ -437,8 +438,12 @@ def _build_core(spec_key: tuple, ctx_words: int):
 #     a batched slot never shares a hash map with any other slot, nor any
 #     map with a sequential slot that touches it non-commutatively.
 
-# effectful helpers whose map writes commute (candidates for batching)
-_BATCH_EFFECT = {"map_fetch_add", "percpu_fetch_add", "hist_add"}
+# effectful helpers whose map writes commute (candidates for batching) —
+# single source of truth next to the footprints (verifier.py)
+_BATCH_EFFECT = COMMUTATIVE_HELPERS
+
+# observability: how often the footprint proofs fired (fuzz/bench reports)
+WIDEN_STATS = {"batched_hash_widened": 0, "seq_disjoint_widened": 0}
 
 # The batched machine carries a NARROW per-lane stack — the top
 # `_BATCH_STACK_WORDS` words of the 512-byte frame — because the [B, words]
@@ -477,14 +482,49 @@ def _has_cond_branch(vprog: VerifiedProgram) -> bool:
     return False
 
 
+def _hash_fp_order_free(fp: MapFootprint | None) -> bool:
+    """A hash footprint whose touches cannot observe insert order by
+    themselves: only map_fetch_add (no deletes -> no tombstones) with
+    fully-static keys."""
+    return (fp is not None and fp.static_keys is not None
+            and fp.ops <= {"map_fetch_add"})
+
+
+def _home_slots_distinct(keys, max_entries: int) -> bool:
+    """True iff every distinct key lands on its own home slot under the
+    open-addressing hash — no probe chains, so the physical layout is the
+    same for ANY insert order (and values are commutative sums)."""
+    homes: dict[int, int] = {}
+    for k in keys:
+        h = M._np_hash_idx(k, max_entries)
+        if homes.setdefault(h, k) != k:
+            return False
+    return True
+
+
+def _self_hash_collision_free(vprog: VerifiedProgram) -> bool:
+    """Widening rule 3 (DESIGN.md §14): a program whose every HASH touch is
+    fetch_add on static, home-slot-distinct keys produces the same table
+    layout under any per-lane execution order — lockstep divergence
+    (conditional branches) stops being observable."""
+    for fp in vprog.footprints.values():
+        if fp.kind != M.MapKind.HASH:
+            continue
+        if not (_hash_fp_order_free(fp)
+                and _home_slots_distinct(fp.static_keys, fp.max_entries)):
+            return False
+    return True
+
+
 def batched_encodable(vprog: VerifiedProgram) -> bool:
     """True iff this program may run on the batched lockstep machine with
     end states bit-identical to the sequential scan order. Loops are fine
     (the machine steps diverged lanes independently); the constraints are
     commutative-only effects, dead fetch-add results, stack traffic within
     the machine's narrow frame, and — for HASH fetch_add, whose insert
-    order shapes the table layout — perfect lockstep, i.e. no conditional
-    branches."""
+    order shapes the table layout — either perfect lockstep (no
+    conditional branches) or a footprint PROOF that the program's static
+    key set is home-slot collision-free (widening rule 3)."""
     from .vectorized import _PURE, _r0_dead_after
     from .verifier import CallAnn
     if not _fits_batch_stack(vprog):
@@ -503,7 +543,8 @@ def batched_encodable(vprog: VerifiedProgram) -> bool:
         if ann.name == "map_fetch_add" and \
                 vprog.map_specs[ann.statics[0]].kind == M.MapKind.HASH:
             touches_hash = True
-    if touches_hash and _has_cond_branch(vprog):
+    if touches_hash and _has_cond_branch(vprog) \
+            and not _self_hash_collision_free(vprog):
         return False
     return True
 
@@ -821,6 +862,9 @@ class LiveTable:
         self._slot_vec_ok: list[bool] = [False] * max_programs
         self._slot_res: list[dict] = [{}] * max_programs
         self._slot_hash: list[set] = [set()] * max_programs
+        # per-slot effect footprints by map name (verifier.MapFootprint) —
+        # what _recompute_vec's widening rules prove commutativity from
+        self._slot_fp: list[dict] = [{}] * max_programs
 
     # ------------------------------------------------------------- host side
     def device_state(self) -> dict:
@@ -832,9 +876,37 @@ class LiveTable:
                 return p
         return None
 
-    def encode_slot(self, slot: int, vprog: VerifiedProgram, site_id: int,
-                    kind: int, pid: int = 0) -> None:
+    @staticmethod
+    def image_key(vprog: VerifiedProgram) -> str:
+        """Content address of one encoded table image: the insn blob plus
+        the helper-dispatch order the encoding bakes in. Table dims don't
+        enter — padding happens at slot-write time."""
+        from .layout import program_digest
+        blob = b"".join(i.encode() for i in vprog.insns)
+        blob += repr(TABLE_HELPER_IDS).encode()
+        return f"tblimg-{program_digest(blob)}"
+
+    def _encoded_image(self, vprog: VerifiedProgram, cache) -> dict:
+        """Fetch the packed insn arrays from the fleet artifact cache, or
+        encode and publish them — the live-attach fanout path encodes each
+        program once fleet-wide instead of once per worker."""
+        n = len(vprog.insns)
+        key = None
+        if cache is not None:
+            key = self.image_key(vprog)
+            img = cache.get_table(key)
+            if img is not None and set(img) >= set(TABLE_FIELDS) and \
+                    all(len(img[f]) == n for f in TABLE_FIELDS):
+                return img
         tp = isa.encode_table_program(vprog.insns, TABLE_HELPER_INDEX)
+        if cache is not None:
+            cache.put_table(key, {f: np.asarray(tp[f], np.int64)
+                                  for f in TABLE_FIELDS})
+        return tp
+
+    def encode_slot(self, slot: int, vprog: VerifiedProgram, site_id: int,
+                    kind: int, pid: int = 0, cache=None) -> None:
+        tp = self._encoded_image(vprog, cache)
         n = len(vprog.insns)
         for f in TABLE_FIELDS:
             self.host[f][slot, :] = TH_EXIT if f == "hcls" else 0
@@ -852,6 +924,8 @@ class LiveTable:
         self.host["fuel"][slot] = vprog.max_insns * max(1, max_block)
         self._slot_vec_ok[slot] = batched_encodable(vprog)
         self._slot_res[slot], self._slot_hash[slot] = _slot_resources(vprog)
+        self._slot_fp[slot] = {fp.name: fp
+                               for fp in vprog.footprints.values()}
         self._recompute_vec()
         self.host["gen"][0] += 1
         self.slot_pid[slot] = pid
@@ -861,9 +935,33 @@ class LiveTable:
         self._slot_vec_ok[slot] = False
         self._slot_res[slot] = {}
         self._slot_hash[slot] = set()
+        self._slot_fp[slot] = {}
         self._recompute_vec()
         self.host["gen"][0] += 1
         self.slot_pid[slot] = None
+
+    def _hash_sharing_widened(self, mname: str) -> bool:
+        """Widening rule 2 (DESIGN.md §14): a HASH map shared across slots
+        stays batchable when EVERY active slot touching it does so only via
+        map_fetch_add with fully-static keys, and the UNION of those keys
+        is home-slot collision-free — every insert lands in its home slot
+        whatever the order, so the physical layout is identical and values
+        are commutative sums. Certified by tests/test_widening.py."""
+        keys: set[int] = set()
+        n = None
+        for q in range(self.max_programs):
+            if not self.host["active"][q] or \
+                    mname not in self._slot_res[q]:
+                continue
+            fp = self._slot_fp[q].get(mname)
+            if not _hash_fp_order_free(fp):
+                return False
+            keys |= fp.static_keys
+            n = fp.max_entries
+        if n is None or not _home_slots_distinct(keys, n):
+            return False
+        WIDEN_STATS["batched_hash_widened"] += 1
+        return True
 
     def _recompute_vec(self) -> None:
         """Resolve which active slots run on the batched machine. A slot
@@ -873,9 +971,13 @@ class LiveTable:
 
           * it touches a HASH map that ANY other active slot also touches —
             hash layout is insert-order-sensitive, and batching one slot
-            reorders its inserts relative to the per-event interleave;
+            reorders its inserts relative to the per-event interleave —
+            UNLESS the union footprint is provably order-free
+            (`_hash_sharing_widened`, widening rule 2);
           * it shares a map with a sequential slot that touches it
-            NON-commutatively (lookup/update/delete observe order).
+            NON-commutatively (lookup/update/delete observe order) —
+            UNLESS the two footprints address provably disjoint static
+            cells of a positional map (widening rule 1).
 
         Demotions only remove batched slots (a demoted slot is commutative
         on everything it touches), so the fixpoint is reached in one or two
@@ -895,9 +997,18 @@ class LiveTable:
                         continue
                     shared = set(self._slot_res[p]) & set(self._slot_res[q])
                     for mname in shared:
-                        if mname in self._slot_hash[p] or \
-                                (not eff[q]
-                                 and not self._slot_res[q][mname]):
+                        if mname in self._slot_hash[p]:
+                            if self._hash_sharing_widened(mname):
+                                continue
+                            eff[p] = False
+                            changed = True
+                            break
+                        if not eff[q] and not self._slot_res[q][mname]:
+                            if footprints_disjoint(
+                                    self._slot_fp[p].get(mname),
+                                    self._slot_fp[q].get(mname)):
+                                WIDEN_STATS["seq_disjoint_widened"] += 1
+                                continue
                             eff[p] = False
                             changed = True
                             break

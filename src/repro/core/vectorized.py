@@ -113,9 +113,14 @@ def is_vector_safe(vprog: VerifiedProgram) -> bool:
     """True iff the program can run on the batched (shadow+apply) path.
     ARRAY *and* HASH fetch_add are both batchable (hash via the sorted
     segment-scatter in maps.j_hash_fetch_add_batch); the remaining
-    requirements are an acyclic CFG and dead fetch-add results."""
+    requirements are an acyclic CFG, dead fetch-add results, and at most
+    ONE ringbuf_output site per ring — effects apply per call SITE, so a
+    second site emitting to the same ring would land its whole batch
+    after the first site's instead of interleaving per event (found by
+    the fuzz harness, pinned in tests/corpus/ringbuf_two_sites.json)."""
     if vprog.tier != "dag":
         return False
+    rb_fds: set[int] = set()
     for pc, ann in vprog.anns.items():
         if not isinstance(ann, CallAnn):
             continue
@@ -126,6 +131,11 @@ def is_vector_safe(vprog: VerifiedProgram) -> bool:
         if ann.name in ("map_fetch_add", "percpu_fetch_add"):
             if not _r0_dead_after(vprog, pc):
                 return False
+        if ann.name == "ringbuf_output":
+            fd = ann.statics[0]
+            if fd in rb_fds:
+                return False
+            rb_fds.add(fd)
     return True
 
 

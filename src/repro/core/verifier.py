@@ -19,6 +19,7 @@ run fast" property):
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 from . import isa, vm
@@ -26,13 +27,24 @@ from .helpers import HELPERS
 from .isa import (BPF_ALU, BPF_ALU64, BPF_JMP, BPF_JMP32, BPF_LDX, BPF_ST,
                   BPF_STX, COND_JMP_OPS, Insn, OP_MASK, SIZE_BYTES, SIZE_MASK,
                   SRC_MASK, STACK_SIZE, s64, u32, u64)
-from .maps import MapSpec
+from .maps import MapKind, MapSpec
 
 MAX_PROG_INSNS = 4096
 
 # Monotone counters — tests assert relocation does ZERO re-verification by
-# pinning verify_calls across a relocate-to-N-worlds loop.
+# pinning verify_calls across a relocate-to-N-worlds loop. Increments are
+# serialized under _STATS_LOCK so the background promotion thread and the
+# fuzz harness cannot lose updates; the object stays a plain dict (tests
+# assign STATS["verify_calls"] = 0 directly).
 STATS = {"verify_calls": 0}
+_STATS_LOCK = threading.Lock()
+
+
+def reset_stats() -> None:
+    """Zero all counters (harness entry points call this between runs)."""
+    with _STATS_LOCK:
+        for k in STATS:
+            STATS[k] = 0
 
 
 class VerifierError(ValueError):
@@ -78,16 +90,23 @@ def _merge_reg(a: Reg, b: Reg) -> Reg:
 class AbsState:
     regs: tuple[Reg, ...]
     stack_init: frozenset[int]
+    # statically-known stack words: (byte_off, u64_value) for every aligned
+    # 8-byte slot last written with a compile-time constant on ALL paths.
+    # Merge is set intersection; any overlapping store invalidates. This is
+    # what lets a helper's key pointer resolve to a STATIC key value — the
+    # raw material of the effect-footprint lattice (DESIGN.md §14).
+    stack_const: frozenset[tuple[int, int]] = frozenset()
 
     def with_reg(self, i: int, r: Reg) -> "AbsState":
         rs = list(self.regs)
         rs[i] = r
-        return AbsState(tuple(rs), self.stack_init)
+        return AbsState(tuple(rs), self.stack_init, self.stack_const)
 
 
 def _merge_state(a: AbsState, b: AbsState) -> AbsState:
     return AbsState(tuple(_merge_reg(x, y) for x, y in zip(a.regs, b.regs)),
-                    a.stack_init & b.stack_init)
+                    a.stack_init & b.stack_init,
+                    a.stack_const & b.stack_const)
 
 
 # ---------------------------------------------------------------- annotations
@@ -108,6 +127,102 @@ class CallAnn:
     # per-arg resolved statics: for mapfd -> fd int; kptr -> stack off;
     # cscalar -> value; scalar -> None
     statics: list
+    # per-arg statically-known POINTEE values: for a kptr arg whose stack
+    # word holds a path-invariant constant, the s64 value; None elsewhere.
+    # Layout-independent (stack contents), so relocation carries it over.
+    key_vals: list | None = None
+
+
+# helpers whose map side effects commute across programs/events (order-free);
+# the single source of truth for runtime._COMMUTATIVE_HELPERS and
+# table_interp._BATCH_EFFECT.
+COMMUTATIVE_HELPERS = frozenset(
+    {"map_fetch_add", "percpu_fetch_add", "hist_add"})
+
+# which helper arg (0-based) is the MAP KEY pointer, for key-addressed ops
+_KEY_ARG = {"map_lookup_elem": 1, "map_update_elem": 1, "map_delete_elem": 1,
+            "map_fetch_add": 1, "percpu_fetch_add": 1}
+
+
+@dataclass(frozen=True)
+class MapFootprint:
+    """Per-map effect footprint — what the program can do to one map.
+
+    ``ops`` are the helper names touching it; ``commutative_only`` means
+    every touch is in COMMUTATIVE_HELPERS (order across programs is
+    unobservable in the map's final state); ``static_keys`` is the exact
+    set of s64 key values the program can address when EVERY key-addressed
+    touch resolved to a stack constant, else None (some key is dynamic).
+    The widening rules in runtime._has_ordering_conflict and
+    table_interp._recompute_vec PROVE commutativity from these instead of
+    assuming conflict (DESIGN.md §14)."""
+    fd: int
+    name: str
+    kind: MapKind
+    max_entries: int
+    ops: frozenset[str]
+    commutative_only: bool
+    static_keys: frozenset[int] | None
+
+
+def compute_footprints(anns: dict, map_specs) -> dict[int, MapFootprint]:
+    """Derive per-map footprints from the CallAnns of a verified program.
+    Shared by verify() and reloc.resolve() (which rebinds fds and must
+    recompute against the concrete registry)."""
+    touches: dict[int, dict] = {}
+    for ann in anns.values():
+        if not isinstance(ann, CallAnn):
+            continue
+        sig = HELPERS[ann.hid]
+        for i, kind in enumerate(sig.args):
+            if kind != "mapfd":
+                continue
+            fd = ann.statics[i]
+            t = touches.setdefault(
+                fd, {"ops": set(), "comm": True, "keys": set(),
+                     "static": True})
+            t["ops"].add(sig.name)
+            t["comm"] = t["comm"] and sig.name in COMMUTATIVE_HELPERS
+            ka = _KEY_ARG.get(sig.name)
+            kv = (ann.key_vals[ka] if ka is not None
+                  and ann.key_vals is not None else None)
+            if kv is None:
+                t["static"] = False      # non-keyed op or dynamic key
+            else:
+                t["keys"].add(kv)
+    return {fd: MapFootprint(
+        fd=fd, name=map_specs[fd].name, kind=map_specs[fd].kind,
+        max_entries=map_specs[fd].max_entries, ops=frozenset(t["ops"]),
+        commutative_only=t["comm"],
+        static_keys=frozenset(t["keys"]) if t["static"] else None)
+        for fd, t in touches.items()}
+
+
+# map kinds whose storage is positional (cell = key), so the layout never
+# depends on op order — the precondition of widening rule 1 (HASH is
+# excluded: inserts shape the physical probe-chain layout)
+_POSITIONAL_KINDS = (MapKind.ARRAY, MapKind.PERCPU_ARRAY)
+
+
+def footprints_disjoint(fa: MapFootprint | None,
+                        fb: MapFootprint | None) -> bool:
+    """Widening rule 1 (DESIGN.md §14): two programs sharing one map
+    non-commutatively still cannot observe each other's order when the map
+    is positional (ARRAY / PERCPU_ARRAY), both key sets are fully static
+    and in bounds, and the sets are disjoint — each program's reads and
+    writes are confined to its own cells, and every execution lane
+    preserves each program's own op order. Certified by the fuzz harness
+    (tests/test_widening.py)."""
+    if fa is None or fb is None:
+        return False
+    if fa.kind not in _POSITIONAL_KINDS:
+        return False
+    if fa.static_keys is None or fb.static_keys is None:
+        return False
+    n = fa.max_entries
+    if any(not 0 <= k < n for k in fa.static_keys | fb.static_keys):
+        return False        # out-of-bounds keys clamp/no-op: don't reason
+    return not (fa.static_keys & fb.static_keys)
 
 
 @dataclass
@@ -136,6 +251,10 @@ class VerifiedProgram:
     # to exactly this footprint instead of selecting over ALL map state.
     touched_map_fds: frozenset = frozenset()
     touched_aux: frozenset = frozenset()
+    # fd -> MapFootprint (the effect-footprint lattice, DESIGN.md §14):
+    # proven per-map op sets, commutativity, and static key ranges. The
+    # fused/batched schedulers widen their ordering guards from these.
+    footprints: dict = field(default_factory=dict)
     # relocation record (reloc.RelocRecord) when verified in abstract mode:
     # insn index -> symbolic ref, plus the layouts verified against. None
     # for layout-concrete programs. An abstract program is NOT runnable —
@@ -150,6 +269,12 @@ class VerifiedProgram:
     def touched_map_names(self) -> tuple[str, ...]:
         return tuple(self.map_specs[fd].name
                      for fd in sorted(self.touched_map_fds))
+
+    def footprint_of(self, name: str) -> MapFootprint | None:
+        for fp in self.footprints.values():
+            if fp.name == name:
+                return fp
+        return None
 
 
 def verify(insns: list[Insn], map_specs: list[MapSpec], ctx_words: int = 16,
@@ -167,7 +292,8 @@ def verify(insns: list[Insn], map_specs: list[MapSpec], ctx_words: int = 16,
     result carries a relocation record and binds to any concrete
     registry via core/reloc.resolve() — verify once, relocate anywhere.
     """
-    STATS["verify_calls"] += 1
+    with _STATS_LOCK:
+        STATS["verify_calls"] += 1
     abstract = (map_refs is not None or ctx_refs is not None
                 or ctx_layout is not None)
     if not insns:
@@ -354,6 +480,7 @@ def verify(insns: list[Insn], map_specs: list[MapSpec], ctx_words: int = 16,
                            helper_ids_used=helper_ids_used,
                            touched_map_fds=frozenset(touched_fds),
                            touched_aux=frozenset(touched_aux),
+                           footprints=compute_footprints(anns, map_specs),
                            reloc=record)
 
 
@@ -507,6 +634,7 @@ def _transfer(pc: int, ins: Insn, st: AbsState, map_specs, ctx_bytes: int,
             raise VerifierError(f"insn {pc}: store to read-only ctx")
         if base.kind != PTR_STACK:
             raise VerifierError(f"insn {pc}: store via non-pointer r{ins.dst}")
+        v = None
         if cls == BPF_STX:
             v = _require_init(st, ins.src, pc, "store value")
             if v.kind in (PTR_STACK, PTR_CTX, MAPVAL):
@@ -515,7 +643,17 @@ def _transfer(pc: int, ins: Insn, st: AbsState, map_specs, ctx_bytes: int,
         lo = _check_stack_access(st, base, ins.off, size, pc, write=True)
         anns[pc] = MemAnn("stack", lo, size,
                           aligned=(lo % 8 == 0 and size == 8))
-        return AbsState(st.regs, st.stack_init | frozenset(range(lo, lo + size)))
+        # stack-constant tracking: any overlapping store invalidates; a
+        # fresh aligned 8-byte constant store (re)establishes the slot
+        sc = frozenset(e for e in st.stack_const
+                       if not (lo < e[0] + 8 and e[0] < lo + size))
+        if size == 8 and lo % 8 == 0:
+            if cls == BPF_ST:
+                sc = sc | {(lo, u64(ins.imm))}
+            elif v is not None and v.kind == CONST:
+                sc = sc | {(lo, u64(v.val))}
+        return AbsState(st.regs,
+                        st.stack_init | frozenset(range(lo, lo + size)), sc)
 
     if cls in (BPF_JMP, BPF_JMP32):
         op = ins.op & OP_MASK
@@ -604,9 +742,17 @@ def _transfer_call(pc: int, ins: Insn, st: AbsState, map_specs, anns,
                 raise VerifierError(f"insn {pc}: ringbuf_output reads "
                                     f"uninitialized stack byte {b}")
 
-    anns[pc] = CallAnn(hid=ins.imm, name=sig.name, statics=statics)
+    # statically-known pointee values for kptr args (footprint static keys)
+    consts = dict(st.stack_const)
+    key_vals: list = [None] * len(sig.args)
+    for i, kind in enumerate(sig.args):
+        if kind == "kptr" and statics[i] % 8 == 0 and statics[i] in consts:
+            key_vals[i] = s64(consts[statics[i]])
+
+    anns[pc] = CallAnn(hid=ins.imm, name=sig.name, statics=statics,
+                       key_vals=key_vals)
     rs = list(st.regs)
     rs[0] = Reg(SCALAR)
     for r in range(1, 6):
         rs[r] = Reg(UNINIT)
-    return AbsState(tuple(rs), st.stack_init)
+    return AbsState(tuple(rs), st.stack_init, st.stack_const)

@@ -24,7 +24,7 @@ def test_bytes_round_trip_and_counters(tmp_path):
     assert c.get_bytes("k1") == b"payload"
     assert c.get_bytes("k1", kind="step") is None     # kind mismatch drops
     assert c.counters == {"hits": 1, "misses": 1, "stores": 1,
-                          "corrupt": 1, "purged": 0}
+                          "corrupt": 1, "purged": 0, "evicted": 0}
     assert c.get_bytes("k1") is None                  # entry was dropped
 
 
@@ -62,6 +62,58 @@ def test_purge(tmp_path):
     assert c.purge() == 1
     assert c.stats()["entries"] == 0
     assert c.counters["purged"] == 2
+
+
+# ------------------------------------------------------------- eviction
+def test_lru_eviction_respects_budget(tmp_path):
+    """Oldest-accessed entries go first; the directory ends under budget
+    and evictions are counted (surfaced by `prog cache stat`)."""
+    c = ArtifactCache(str(tmp_path), max_bytes=256)
+    c.put_bytes("a", b"x" * 100, "table")
+    c.put_bytes("b", b"y" * 100, "table")
+    assert c.counters["evicted"] == 0                 # under budget: no-op
+    os.utime(c._bin("a"), (1, 1))                     # make "a" the LRU
+    c.put_bytes("c", b"z" * 100, "table")             # 300 > 256 -> evict
+    assert c.counters["evicted"] == 1
+    assert c.get_bytes("a") is None                   # LRU victim
+    assert c.get_bytes("b") == b"y" * 100
+    assert c.get_bytes("c") == b"z" * 100
+    assert c.stats()["bytes"] <= 256
+    assert c.stats()["max_bytes"] == 256
+
+
+def test_eviction_hit_refreshes_recency(tmp_path):
+    """A get_bytes hit bumps the entry's recency, so a recently-read
+    entry survives eviction over a never-read older store."""
+    c = ArtifactCache(str(tmp_path), max_bytes=256)
+    c.put_bytes("a", b"x" * 100, "table")
+    c.put_bytes("b", b"y" * 100, "table")
+    os.utime(c._bin("a"), (1, 1))
+    os.utime(c._bin("b"), (2, 2))
+    assert c.get_bytes("a") == b"x" * 100             # refresh "a"
+    c.put_bytes("c", b"z" * 100, "table")
+    assert c.get_bytes("a") is not None               # read-recency saved it
+    assert c.get_bytes("b") is None                   # cold entry evicted
+
+
+def test_eviction_never_removes_just_written_entry(tmp_path):
+    """An artifact larger than the whole budget still serves its writer:
+    the store that triggered eviction is shielded from it."""
+    c = ArtifactCache(str(tmp_path), max_bytes=64)
+    c.put_bytes("big", b"x" * 1000, "table")
+    assert c.get_bytes("big") == b"x" * 1000
+    c.put_bytes("big2", b"y" * 1000, "table")         # evicts "big" only
+    assert c.get_bytes("big") is None
+    assert c.get_bytes("big2") == b"y" * 1000
+
+
+def test_no_budget_no_eviction(tmp_path):
+    c = ArtifactCache(str(tmp_path))                  # max_bytes=None
+    for i in range(8):
+        c.put_bytes(f"k{i}", b"x" * 512, "table")
+    assert c.counters["evicted"] == 0
+    assert c.stats()["entries"] == 8
+    assert c.stats()["max_bytes"] is None
 
 
 # ------------------------------------------------------------- corruption
@@ -203,5 +255,5 @@ def test_cross_process_cache_reuse(tmp_path):
     assert b["hit"] is True
     assert b["builds"] == 0                           # zero retraces in B
     assert b["counters"] == {"hits": 1, "misses": 0, "stores": 0,
-                             "corrupt": 0, "purged": 0}
+                             "corrupt": 0, "purged": 0, "evicted": 0}
     assert a["out"] == b["out"]

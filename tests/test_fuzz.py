@@ -1,0 +1,165 @@
+"""Grammar fuzzer harness (DESIGN.md §14): generator determinism and
+acceptance rate, the repair pass, the shrink loop, and the pinned-seed
+differential matrix (oracle vs jit vs table vs batched vs vectorized vs
+1/2/3-worker shm-merge) that gates every PR in CI."""
+import random
+
+import pytest
+
+from repro.core import asm, fuzz, verifier
+
+# Pinned PR-gate seeds, chosen so every lane the gates can admit appears
+# at least twice: seeds {2,8,19,26,34} exercise the batched SIMT lane,
+# {8,9,19,34} the shadow-vmap vectorized lane, {9,19,26,34,45,51} the
+# 1/2/3-worker shm-merge lanes, and all of them jit+table.
+GATE_SEEDS = [0, 1, 2, 8, 9, 19, 26, 34, 45, 51]
+
+
+# ------------------------------------------------------------- generator
+def test_generation_is_seed_deterministic():
+    for seed in (0, 7, 123):
+        a = fuzz.generate_case(seed)
+        b = fuzz.generate_case(seed)
+        assert a.text == b.text
+        assert a.tape == b.tape
+    assert fuzz.generate_case(0).text != fuzz.generate_case(1).text
+
+
+def test_acceptance_rate_over_seed_budget():
+    """ISSUE gate: >= 90% of generated programs verifier-accepted at a
+    fixed seed budget (verify only — no lane execution, stays fast)."""
+    n, ok = 60, 0
+    for seed in range(n):
+        case = fuzz.generate_case(seed)
+        a = asm.assemble(case.text)
+        try:
+            verifier.verify(a.insns, fuzz.FUZZ_SPECS,
+                            ctx_words=fuzz.CTX_WORDS)
+            ok += 1
+        except verifier.VerifierError:
+            pass
+    assert ok / n >= 0.9, f"acceptance {ok}/{n}"
+
+
+def test_repaired_text_always_assembles():
+    """Whatever the generator emits (including injected breakage — dead
+    labels, clobbered registers), the repair pass yields assemblable
+    text; the verifier may still reject, but never the assembler."""
+    for seed in range(20):
+        rng = random.Random(seed)
+        asm.assemble(fuzz.repair(fuzz.generate_text(rng, breakage=0.3)))
+
+
+# ------------------------------------------------------------- repair
+def test_repair_redirects_dangling_label():
+    out = fuzz.repair("mov r2, 1\njeq r2, 1, nowhere\nmov r0, 0\nexit")
+    lines = out.splitlines()
+    assert "jeq r2, 1, __repair_out" in lines
+    assert "__repair_out:" in lines
+    a = asm.assemble(out)
+    verifier.verify(a.insns, fuzz.FUZZ_SPECS, ctx_words=fuzz.CTX_WORDS)
+
+
+def test_repair_zeroes_uninit_read_in_place():
+    out = fuzz.repair("add r3, 7\nmov r0, r3\nexit").splitlines()
+    assert out.index("mov r3, 0") == out.index("add r3, 7") - 1
+
+
+def test_repair_handles_post_call_clobber():
+    """r4 written, then clobbered by a call, then read: the prologue-zero
+    strategy misses this; in-place insertion must catch it."""
+    text = "\n".join(["mov r4, 9", "call ktime_get_ns", "add r4, 1",
+                      "mov r0, 0", "exit"])
+    out = fuzz.repair(text)
+    a = asm.assemble(out)
+    verifier.verify(a.insns, fuzz.FUZZ_SPECS, ctx_words=fuzz.CTX_WORDS)
+    lines = out.splitlines()
+    assert lines.index("mov r4, 0") == lines.index("add r4, 1") - 1
+
+
+def test_repair_preserves_ctx_pointer():
+    # r1 is the ctx pointer at entry; repair must not zero it before a load
+    out = fuzz.repair("ldxdw r6, [r1+0]\nmov r0, r6\nexit")
+    assert "mov r1, 0" not in out.splitlines()
+    a = asm.assemble(out)
+    verifier.verify(a.insns, fuzz.FUZZ_SPECS, ctx_words=fuzz.CTX_WORDS)
+
+
+def test_repair_is_idempotent():
+    for seed in range(10):
+        t1 = fuzz.repair(fuzz.generate_text(random.Random(seed),
+                                            breakage=0.3))
+        assert fuzz.repair(t1) == t1
+
+
+# ------------------------------------------------------------- case model
+def test_case_json_round_trip():
+    case = fuzz.generate_case(3)
+    again = fuzz.FuzzCase.from_json(case.to_json())
+    assert (again.seed, again.text, again.tape) == \
+        (case.seed, case.text, case.tape)
+
+
+def test_rejected_program_is_not_a_divergence():
+    case = fuzz.FuzzCase(seed=0, text="add r5, 1\nexit",
+                         tape=[[0] * fuzz.CTX_WORDS])
+    r = fuzz.run_case(case)
+    assert not r.accepted and r.rejected and not r.diverged
+
+
+# ------------------------------------------------------------- shrinker
+def test_shrinker_minimizes_against_injected_predicate():
+    """The loop itself: with a predicate that only needs two specific
+    lines, shrinking converges to exactly those lines, in order."""
+    text = "\n".join(f"mov r{i % 9}, {i}" for i in range(16))
+    case = fuzz.FuzzCase(seed=0, text=text, tape=[])
+
+    def needs(text, _case):
+        lines = text.splitlines()
+        return "mov r3, 3" in lines and "mov r3, 12" in lines
+
+    mini = fuzz.shrink_case(case, still_fails=needs)
+    assert mini.text.splitlines() == ["mov r3, 3", "mov r3, 12"]
+
+
+def test_shrinker_keeps_case_when_nothing_removable():
+    case = fuzz.FuzzCase(seed=0, text="a\nb", tape=[])
+    mini = fuzz.shrink_case(case, still_fails=lambda t, c: t == "a\nb")
+    assert mini.text == "a\nb"
+
+
+# ------------------------------------------------------------- the matrix
+@pytest.mark.parametrize("seed", GATE_SEEDS)
+def test_differential_matrix_pinned_seeds(seed):
+    """The PR gate: every lane the program's footprints admit must be
+    bit-identical with the sequential numpy oracle — r0 per event,
+    override aux per event, and final map state, across 1/2/3-worker
+    shm-merge splits."""
+    case = fuzz.generate_case(seed)
+    r = fuzz.run_case(case)
+    assert r.accepted, r.rejected
+    assert not r.diverged, r.mismatches or r.crashed
+
+
+def test_pinned_seeds_cover_every_lane():
+    """If a grammar/eligibility change silently stops any lane from being
+    exercised by the gate seeds, fail loudly rather than green-wash."""
+    seen = set()
+    for seed in GATE_SEEDS:
+        seen.update(fuzz.run_case(fuzz.generate_case(seed)).lanes)
+    assert {"jit", "table", "batched", "vectorized",
+            "merge1", "merge2", "merge3"} <= seen, seen
+
+
+def test_campaign_driver_summary(tmp_path):
+    s = fuzz.fuzz(range(4), out_dir=str(tmp_path))
+    assert s["seeds"] == 4
+    assert s["divergences"] == 0 and s["failures"] == []
+    assert s["acceptance_rate"] >= 0.75
+    assert list(tmp_path.iterdir()) == []   # no repros on a clean run
+
+
+def test_cli_exit_codes(capsys):
+    assert fuzz.main(["--seeds", "0-2"]) == 0
+    out = capsys.readouterr().out
+    assert "3 seeds" in out

@@ -1,0 +1,59 @@
+"""Regression corpus of minimized fuzzer-found programs (tests/corpus/):
+each is replayed deterministically through the full differential matrix
+in tier-1.  A corpus entry that diverges again means a fixed bug has
+been reintroduced; one whose recorded lane set changes means a lane
+eligibility gate silently moved."""
+import glob
+import json
+import os
+
+import pytest
+
+from repro.core import fuzz
+
+CORPUS = sorted(glob.glob(
+    os.path.join(os.path.dirname(__file__), "corpus", "*.json")))
+
+
+def _load(path):
+    with open(path) as fh:
+        return json.load(fh)
+
+
+def test_corpus_is_not_empty():
+    assert len(CORPUS) >= 3
+
+
+@pytest.mark.parametrize("path", CORPUS, ids=[os.path.basename(p)
+                                              for p in CORPUS])
+def test_corpus_case_replays_clean(path):
+    d = _load(path)
+    case = fuzz.FuzzCase.from_json(d)
+    r = fuzz.run_case(case)
+    assert r.accepted, r.rejected
+    assert not r.diverged, r.mismatches or r.crashed
+    # lane set is part of the pinned behavior: a gate that silently
+    # widens (re-admitting a buggy shape) or narrows (losing coverage)
+    # shows up here before it shows up as a divergence
+    assert r.lanes == d["lanes"], (r.lanes, d["lanes"])
+
+
+def test_ringbuf_two_sites_stays_out_of_vectorized():
+    """Seed-99 find: two ringbuf_output sites per ring under per-site
+    vectorized apply reorder records; is_vector_safe must keep rejecting
+    this shape."""
+    d = _load(os.path.join(os.path.dirname(__file__), "corpus",
+                           "ringbuf_two_sites.json"))
+    case = fuzz.FuzzCase.from_json(d)
+    r = fuzz.run_case(case)
+    assert "vectorized" not in r.lanes
+
+
+def test_live_fetch_add_stays_out_of_merge():
+    """Seed-136 find: a live fetch_add result is an order-observing read;
+    _merge_eligible must keep refusing the shm-merge lanes."""
+    d = _load(os.path.join(os.path.dirname(__file__), "corpus",
+                           "live_fetch_add_split.json"))
+    case = fuzz.FuzzCase.from_json(d)
+    r = fuzz.run_case(case)
+    assert not any(ln.startswith("merge") for ln in r.lanes)

@@ -1,0 +1,498 @@
+"""Commutativity-widening rules (DESIGN.md §14): the effect-footprint
+lattice the verifier publishes, and the three lane-widening rules that
+consume it — each with its certifying differential (fused/batched output
+bit-identical to the scan/sequential oracle over K seeds), plus the
+negative cases proving the widenings do not over-approximate."""
+import random
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import asm, events as E, fuzz, jit as J, maps as M
+from repro.core import table_interp, verifier
+from repro.core.runtime import (BpftimeRuntime, WIDEN_STATS,
+                                _has_ordering_conflict)
+from repro.core.verifier import MapFootprint, footprints_disjoint
+
+ARR8 = M.MapSpec("a", M.MapKind.ARRAY, max_entries=8)
+HSH8 = M.MapSpec("h", M.MapKind.HASH, max_entries=8)
+
+
+def _verify(text, specs):
+    a = asm.assemble(text)
+    assert not a.map_relocs
+    return verifier.verify(a.insns, specs, ctx_words=8)
+
+
+def _fetch_add(key_lines, fd=0, delta=1):
+    return "\n".join(key_lines + [
+        f"mov r1, {fd}", "mov r2, r10", "add r2, -8",
+        f"mov r3, {delta}", "call map_fetch_add", "mov r0, 0", "exit"])
+
+
+def _distinct_home_keys(max_entries, want=2, lo=0, hi=64):
+    """Keys whose open-addressing home slots are pairwise distinct."""
+    out, homes = [], set()
+    for k in range(lo, hi):
+        h = M._np_hash_idx(k, max_entries)
+        if h not in homes:
+            homes.add(h)
+            out.append(k)
+            if len(out) == want:
+                return out
+    raise AssertionError("no distinct-home keys found")
+
+
+def _colliding_home_keys(max_entries):
+    homes = {}
+    for k in range(64):
+        h = M._np_hash_idx(k, max_entries)
+        if h in homes:
+            return homes[h], k
+        homes[h] = k
+    raise AssertionError("no colliding keys found")
+
+
+# ==========================================================================
+# the footprint lattice itself
+# ==========================================================================
+
+def test_static_key_footprint():
+    vp = _verify(_fetch_add(["stdw [r10-8], 3"]), [ARR8])
+    fp = vp.footprints[0]
+    assert fp.ops == frozenset({"map_fetch_add"})
+    assert fp.commutative_only
+    assert fp.static_keys == frozenset({3})
+    assert vp.footprint_of("a") is fp
+    assert vp.footprint_of("nope") is None
+
+
+def test_dynamic_key_footprint():
+    vp = _verify(_fetch_add(["ldxdw r6, [r1+0]", "and r6, 7",
+                             "stxdw [r10-8], r6"]), [ARR8])
+    fp = vp.footprints[0]
+    assert fp.commutative_only
+    assert fp.static_keys is None          # key not provably constant
+
+
+def test_const_reg_store_is_static():
+    # stxdw of a CONST-typed register carries the constant into the slot
+    vp = _verify(_fetch_add(["mov r6, 5", "stxdw [r10-8], r6"]), [ARR8])
+    assert vp.footprints[0].static_keys == frozenset({5})
+
+
+def test_mixed_ops_not_commutative():
+    text = "\n".join([
+        "stdw [r10-8], 2", "stdw [r10-16], 9",
+        "mov r1, 0", "mov r2, r10", "add r2, -8",
+        "mov r3, r10", "add r3, -16", "mov r4, 0",
+        "call map_update_elem",
+        "stdw [r10-8], 2",
+        "mov r1, 0", "mov r2, r10", "add r2, -8", "mov r3, 1",
+        "call map_fetch_add", "mov r0, 0", "exit"])
+    fp = _verify(text, [ARR8]).footprints[0]
+    assert fp.ops == frozenset({"map_update_elem", "map_fetch_add"})
+    assert not fp.commutative_only
+    assert fp.static_keys == frozenset({2})
+
+
+def test_branch_divergent_key_is_dynamic():
+    """Different constants on two paths: the stack-const lattice merges by
+    intersection, so the key is NOT static at the call."""
+    text = "\n".join([
+        "ldxdw r6, [r1+0]", "stdw [r10-8], 1",
+        "jgt r6, 5, L1", "stdw [r10-8], 2", "L1:",
+        "mov r1, 0", "mov r2, r10", "add r2, -8", "mov r3, 1",
+        "call map_fetch_add", "mov r0, 0", "exit"])
+    assert _verify(text, [ARR8]).footprints[0].static_keys is None
+
+
+def test_branch_same_key_stays_static():
+    text = "\n".join([
+        "ldxdw r6, [r1+0]", "stdw [r10-8], 4",
+        "jgt r6, 5, L1", "stdw [r10-8], 4", "L1:",
+        "mov r1, 0", "mov r2, r10", "add r2, -8", "mov r3, 1",
+        "call map_fetch_add", "mov r0, 0", "exit"])
+    assert _verify(text, [ARR8]).footprints[0].static_keys == \
+        frozenset({4})
+
+
+def _fp(kind=M.MapKind.ARRAY, keys=(0,), n=8, comm=True):
+    return MapFootprint(fd=0, name="x", kind=kind, max_entries=n,
+                        ops=frozenset({"map_fetch_add"}),
+                        commutative_only=comm,
+                        static_keys=None if keys is None
+                        else frozenset(keys))
+
+
+def test_footprints_disjoint_predicate():
+    assert footprints_disjoint(_fp(keys=(0, 1)), _fp(keys=(2, 3)))
+    assert not footprints_disjoint(_fp(keys=(0, 1)), _fp(keys=(1, 2)))
+    assert not footprints_disjoint(_fp(keys=None), _fp(keys=(2,)))
+    assert not footprints_disjoint(None, _fp(keys=(2,)))
+    # out-of-bounds keys: clamp/no-op semantics are not reasoned about
+    assert not footprints_disjoint(_fp(keys=(99,)), _fp(keys=(2,)))
+    # HASH is positional-excluded: layout depends on insert order
+    assert not footprints_disjoint(_fp(kind=M.MapKind.HASH, keys=(0,)),
+                                   _fp(kind=M.MapKind.HASH, keys=(2,)))
+
+
+def test_footprints_survive_relocation():
+    """verify-once/relocate-anywhere must carry static keys through
+    resolve() and recompute footprints against the concrete registry."""
+    from repro.core import loader, reloc
+    obj = loader.build_object("w_reloc", """
+        stdw [r10-8], 3
+        lddw r1, map:rm
+        mov r2, r10
+        add r2, -8
+        mov r3, 1
+        call map_fetch_add
+        mov r0, 0
+        exit
+    """, [M.MapSpec("rm", M.MapKind.ARRAY, max_entries=8)], "uprobe")
+    vabs = reloc.verify_relocatable(obj)
+    spec = [M.MapSpec("other", M.MapKind.ARRAY, max_entries=4),
+            M.MapSpec("rm", M.MapKind.ARRAY, max_entries=8)]
+    vb = reloc.resolve(vabs, {"rm": 1, "other": 0}, spec)
+    assert vb.footprints[1].static_keys == frozenset({3})
+    assert vb.footprints[1].name == "rm"
+
+
+# ==========================================================================
+# rule 1: fused-lane widening — disjoint static positional footprints
+# ==========================================================================
+
+UPD_K = """
+    ldxdw r6, [r1+ctx:layer]
+    stdw [r10-8], {key}
+    stxdw [r10-16], r6
+    lddw r1, map:w_arr
+    mov r2, r10
+    add r2, -8
+    mov r3, r10
+    add r3, -16
+    mov r4, 0
+    call map_update_elem
+    mov r0, 0
+    exit
+"""
+
+W_ARR = M.MapSpec("w_arr", M.MapKind.ARRAY, max_entries=16)
+
+
+def _two_updaters(k1, k2):
+    rt = BpftimeRuntime()
+    p1 = rt.load_asm("upd1", UPD_K.format(key=k1), [W_ARR], "uprobe")
+    rt.attach(p1, "uprobe:wdA")
+    p2 = rt.load_asm("upd2", UPD_K.format(key=k2), [W_ARR], "uprobe")
+    rt.attach(p2, "uprobe:wdB")
+    return rt, [rt.progs[p1].vprog, rt.progs[p2].vprog]
+
+
+def _tape(n=12, sites=("wdA", "wdB")):
+    rng = np.random.default_rng(3)
+    rows = np.zeros((n, E.EVENT_WIDTH), np.int64)
+    rows[:, 0] = [E.SITES.get_or_create(sites[i % len(sites)])
+                  for i in range(n)]
+    rows[:, 1] = E.KIND_ENTRY
+    rows[:, 2] = rng.integers(0, 99, n)
+    import jax.numpy as jnp
+    return jnp.asarray(rows)
+
+
+def test_disjoint_static_updates_widen_fused():
+    """Non-commutative sharing (update/update) on provably disjoint
+    static ARRAY cells: unobservable interleave -> no fused fallback."""
+    rt, vps = _two_updaters(2, 5)
+    before = WIDEN_STATS["fused_disjoint_pairs"]
+    assert not _has_ordering_conflict(vps)
+    assert WIDEN_STATS["fused_disjoint_pairs"] == before + 1
+
+
+def test_overlapping_static_updates_still_conflict():
+    _, vps = _two_updaters(2, 2)
+    assert _has_ordering_conflict(vps)
+
+
+def test_oob_static_key_not_widened():
+    _, vps = _two_updaters(2, 99)          # 99 >= max_entries
+    assert _has_ordering_conflict(vps)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_rule1_certificate_fused_matches_scan(seed):
+    """The certificate: a previously scan-demoted pair now runs in fused
+    mode and stays bit-identical to the scan oracle across seeds."""
+    rt, vps = _two_updaters(3, 7)
+    assert not _has_ordering_conflict(vps)
+    rng = np.random.default_rng(seed)
+    import jax.numpy as jnp
+    rows = np.zeros((16, E.EVENT_WIDTH), np.int64)
+    rows[:, 0] = rng.permutation(
+        [E.SITES.get_or_create(s) for s in ("wdA", "wdB")] * 8)
+    rows[:, 1] = E.KIND_ENTRY
+    rows[:, 2] = rng.integers(0, 1000, 16)
+    rows = jnp.asarray(rows)
+    ms_scan, _ = rt.probe_stage(rows, rt.init_device_maps(),
+                                J.make_aux(), mode="scan")
+    ms_fused, _ = rt.probe_stage(rows, rt.init_device_maps(),
+                                 J.make_aux(), mode="fused")
+    for k in ms_scan["w_arr"]:
+        np.testing.assert_array_equal(np.asarray(ms_fused["w_arr"][k]),
+                                      np.asarray(ms_scan["w_arr"][k]),
+                                      err_msg=f"w_arr.{k} seed={seed}")
+
+
+# ==========================================================================
+# rules 1+2 on the live table: cross-slot widening in _recompute_vec
+# ==========================================================================
+
+LT_ARR = M.MapSpec("wt_counts", M.MapKind.ARRAY, max_entries=64)
+LT_HASH = M.MapSpec("wt_hash", M.MapKind.HASH, max_entries=64)
+
+HASH_STATIC_K = """
+    ldxdw r6, [r1+ctx:layer]
+    stdw [r10-8], {key}
+    lddw r1, map:wt_hash
+    mov r2, r10
+    add r2, -8
+    mov r3, r6
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+HASH_DYN = """
+    ldxdw r6, [r1+ctx:layer]
+    stxdw [r10-8], r6
+    lddw r1, map:wt_hash
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+ARR_STATIC_ADD = """
+    stdw [r10-8], {key}
+    lddw r1, map:wt_counts
+    mov r2, r10
+    add r2, -8
+    mov r3, 1
+    call map_fetch_add
+    mov r0, 0
+    exit
+"""
+
+ARR_STATIC_UPD = """
+    ldxdw r6, [r1+ctx:layer]
+    stdw [r10-8], {key}
+    stxdw [r10-16], r6
+    lddw r1, map:wt_counts
+    mov r2, r10
+    add r2, -8
+    mov r3, r10
+    add r3, -16
+    mov r4, 0
+    call map_update_elem
+    mov r0, 0
+    exit
+"""
+
+
+def _live_rt():
+    rt = BpftimeRuntime()
+    for sp in (LT_ARR, LT_HASH):
+        rt.create_map(sp)
+    rt.enable_live_attach(max_programs=4, max_insns=64,
+                          arm=("uprobe:wt_blk", "uretprobe:wt_blk"))
+    return rt
+
+
+def _wt_tape(seed=7, n=24):
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    rows = np.zeros((n, E.EVENT_WIDTH), np.int64)
+    rows[:, 0] = E.SITES.get_or_create("wt_blk")
+    rows[:, 1] = np.where(np.arange(n) % 3 == 2, E.KIND_EXIT,
+                          E.KIND_ENTRY)
+    rows[:, 2] = rng.integers(1, 32, n)
+    return jnp.asarray(rows)
+
+
+def test_static_hash_sharing_stays_batched():
+    """Rule 2: two slots fetch-adding the SAME hash at static keys whose
+    union is home-slot collision-free keep their batched lanes."""
+    k1, k2 = _distinct_home_keys(LT_HASH.max_entries)
+    rt = _live_rt()
+    pa = rt.load_asm("wt_h1", HASH_STATIC_K.format(key=k1), [LT_HASH],
+                     "uprobe")
+    pb = rt.load_asm("wt_h2", HASH_STATIC_K.format(key=k2), [LT_HASH],
+                     "uprobe")
+    la = rt.attach(pa, "uprobe:wt_blk", mode="table")
+    before = table_interp.WIDEN_STATS["batched_hash_widened"]
+    lb = rt.attach(pb, "uretprobe:wt_blk", mode="table")
+    assert rt.live.host["vec"][la.slot] == 1
+    assert rt.live.host["vec"][lb.slot] == 1
+    assert table_interp.WIDEN_STATS["batched_hash_widened"] > before
+
+
+def test_colliding_home_slots_demote():
+    k1, k2 = _colliding_home_keys(LT_HASH.max_entries)
+    rt = _live_rt()
+    pa = rt.load_asm("wt_h1", HASH_STATIC_K.format(key=k1), [LT_HASH],
+                     "uprobe")
+    pb = rt.load_asm("wt_h2", HASH_STATIC_K.format(key=k2), [LT_HASH],
+                     "uprobe")
+    la = rt.attach(pa, "uprobe:wt_blk", mode="table")
+    lb = rt.attach(pb, "uretprobe:wt_blk", mode="table")
+    assert rt.live.host["vec"][la.slot] == 0
+    assert rt.live.host["vec"][lb.slot] == 0
+
+
+def test_dynamic_hash_sharing_still_demotes():
+    rt = _live_rt()
+    pa = rt.load_asm("wt_h1", HASH_STATIC_K.format(key=1), [LT_HASH],
+                     "uprobe")
+    pb = rt.load_asm("wt_hd", HASH_DYN, [LT_HASH], "uprobe")
+    la = rt.attach(pa, "uprobe:wt_blk", mode="table")
+    lb = rt.attach(pb, "uretprobe:wt_blk", mode="table")
+    assert rt.live.host["vec"][la.slot] == 0
+    assert rt.live.host["vec"][lb.slot] == 0
+
+
+def test_seq_noncommutative_disjoint_widens():
+    """Rule 1 on the table lane: a batched fetch-add slot sharing an
+    ARRAY with a sequential updater stays batched when their static cells
+    are disjoint, demotes when they overlap."""
+    rt = _live_rt()
+    pa = rt.load_asm("wt_add", ARR_STATIC_ADD.format(key=2), [LT_ARR],
+                     "uprobe")
+    pu = rt.load_asm("wt_upd", ARR_STATIC_UPD.format(key=5), [LT_ARR],
+                     "uprobe")
+    la = rt.attach(pa, "uprobe:wt_blk", mode="table")
+    before = table_interp.WIDEN_STATS["seq_disjoint_widened"]
+    lu = rt.attach(pu, "uretprobe:wt_blk", mode="table")
+    assert rt.live.host["vec"][lu.slot] == 0       # updater: sequential
+    assert rt.live.host["vec"][la.slot] == 1       # disjoint: stays vec
+    assert table_interp.WIDEN_STATS["seq_disjoint_widened"] > before
+
+    rt2 = _live_rt()
+    pa2 = rt2.load_asm("wt_add", ARR_STATIC_ADD.format(key=5), [LT_ARR],
+                       "uprobe")
+    pu2 = rt2.load_asm("wt_upd", ARR_STATIC_UPD.format(key=5), [LT_ARR],
+                       "uprobe")
+    la2 = rt2.attach(pa2, "uprobe:wt_blk", mode="table")
+    rt2.attach(pu2, "uretprobe:wt_blk", mode="table")
+    assert rt2.live.host["vec"][la2.slot] == 0     # overlap: demoted
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_rule2_certificate_widened_table_matches_scan(seed):
+    """Certificate: the widened (still-batched) hash-sharing slots are
+    bit-identical to a scan-mode oracle across seeds."""
+    k1, k2 = _distinct_home_keys(LT_HASH.max_entries)
+    rt = _live_rt()
+    pa = rt.load_asm("wt_h1", HASH_STATIC_K.format(key=k1), [LT_HASH],
+                     "uprobe")
+    pb = rt.load_asm("wt_h2", HASH_STATIC_K.format(key=k2), [LT_HASH],
+                     "uprobe")
+    la = rt.attach(pa, "uprobe:wt_blk", mode="table")
+    lb = rt.attach(pb, "uretprobe:wt_blk", mode="table")
+    assert rt.live.host["vec"][la.slot] == 1
+    assert rt.live.host["vec"][lb.slot] == 1
+    rows = _wt_tape(seed=seed)
+    maps_live, _ = jax.jit(
+        lambda r, m: rt.probe_stage(r, m, J.make_aux()))(
+            rows, rt.init_device_maps())
+
+    rt2 = BpftimeRuntime()
+    for sp in (LT_ARR, LT_HASH):
+        rt2.create_map(sp)
+    p1 = rt2.load_asm("wt_h1", HASH_STATIC_K.format(key=k1), [LT_HASH],
+                      "uprobe")
+    rt2.attach(p1, "uprobe:wt_blk")
+    p2 = rt2.load_asm("wt_h2", HASH_STATIC_K.format(key=k2), [LT_HASH],
+                      "uprobe")
+    rt2.attach(p2, "uretprobe:wt_blk")
+    maps_scan, _ = jax.jit(
+        lambda r, m: rt2.probe_stage(r, m, J.make_aux(), mode="scan"))(
+            rows, rt2.init_device_maps())
+    for k in maps_scan["wt_hash"]:
+        np.testing.assert_array_equal(
+            np.asarray(maps_live["wt_hash"][k]),
+            np.asarray(maps_scan["wt_hash"][k]),
+            err_msg=f"wt_hash.{k} seed={seed}")
+
+
+# ==========================================================================
+# rule 3: self-hash collision-free batched encodability
+# ==========================================================================
+
+def _rule3_text(k1, k2):
+    return "\n".join([
+        "ldxdw r6, [r1+0]",
+        "jgt r6, 100, L1",
+        f"stdw [r10-8], {k1}",
+        "mov r1, 1", "mov r2, r10", "add r2, -8", "mov r3, 1",
+        "call map_fetch_add",
+        "L1:",
+        f"stdw [r10-8], {k2}",
+        "mov r1, 1", "mov r2, r10", "add r2, -8", "mov r3, 5",
+        "call map_fetch_add",
+        "mov r0, 0", "exit"])
+
+
+def test_branchy_static_hash_batched_encodable():
+    n = fuzz.FUZZ_SPECS[1].max_entries
+    k1, k2 = _distinct_home_keys(n)
+    vp = _verify(_rule3_text(k1, k2), fuzz.FUZZ_SPECS)
+    assert table_interp.batched_encodable(vp)
+
+    c1, c2 = _colliding_home_keys(n)
+    vp2 = _verify(_rule3_text(c1, c2), fuzz.FUZZ_SPECS)
+    assert not table_interp.batched_encodable(vp2)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_rule3_certificate_all_lanes_and_splits(seed):
+    """Certificate: K seeds x N in {1,2,3} worker splits, every lane the
+    gates admit — bit-identical for the branchy static-key hash program
+    the old no-cond-branch restriction used to demote."""
+    n = fuzz.FUZZ_SPECS[1].max_entries
+    k1, k2 = _distinct_home_keys(n)
+    case = fuzz.FuzzCase(seed=seed, text=_rule3_text(k1, k2),
+                         tape=fuzz._gen_tape(random.Random(seed), 8))
+    r = fuzz.run_case(case)
+    assert r.accepted and not r.diverged, r.mismatches
+    assert "batched" in r.lanes            # rule 3 admitted it
+    assert "merge3" in r.lanes             # commutative + dead results
+
+
+# ==========================================================================
+# satellite: counter plane reset / thread-safety
+# ==========================================================================
+
+def test_verifier_stats_reset_and_concurrent_verify():
+    verifier.reset_stats()
+    assert verifier.STATS["verify_calls"] == 0
+    text = _fetch_add(["stdw [r10-8], 1"])
+    insns = asm.assemble(text).insns
+
+    def worker():
+        for _ in range(20):
+            verifier.verify(insns, [ARR8], ctx_words=8)
+
+    ts = [threading.Thread(target=worker) for _ in range(4)]
+    for t in ts:
+        t.start()
+    for t in ts:
+        t.join()
+    assert verifier.STATS["verify_calls"] == 80
+    verifier.reset_stats()
+    assert verifier.STATS["verify_calls"] == 0
+    assert type(verifier.STATS) is dict    # test_reloc pins plain-dict use
