@@ -35,7 +35,12 @@ Hard floors:
     (rule 2 — hard), colliding keys must still demote (the widening must
     not over-approximate — hard), and batched must beat the demoted row
     loop by >= WIDEN_BATCHED_FLOOR; both ns/event within TOLERANCE of
-    their recorded budgets.
+    their recorded budgets;
+  * fleet scale (DESIGN.md §15): the 32-worker hierarchical (tree) merge
+    must sustain >= TREE_SCALE_FLOOR x the same-run flat 3-worker merge's
+    steady-state throughput (same-machine same-run anchor — a hard ratio,
+    no tolerance), and the tree's global view must be BIT-IDENTICAL to
+    the flat merge of the same publish schedule (hard invariant).
 
     python benchmarks/check_regression.py BENCH_probe.json \
         [--baseline benchmarks/BENCH_baseline.json] [--tolerance 2.0]
@@ -60,6 +65,12 @@ WARM_JOIN_CEIL_MS = 100.0
 # just be eligible for them
 WIDEN_FUSED_FLOOR = 2.0
 WIDEN_BATCHED_FLOOR = 1.5
+# hard floor on what the hierarchical fleet plane buys (DESIGN.md §15):
+# a 32-worker tree must sustain >= 5x the same-run flat 3-worker merge's
+# steady-state throughput. Both sides run in the same process on the
+# same machine moments apart, so the ratio needs no recorded budget and
+# no tolerance.
+TREE_SCALE_FLOOR = 5.0
 
 
 def check(result: dict, baseline: dict, tolerance: float) -> list[str]:
@@ -165,6 +176,23 @@ def check(result: dict, baseline: dict, tolerance: float) -> list[str]:
                 f"fleet recovery {rec['recovery_ms']:.1f}ms exceeds budget "
                 f"{rec_budget:.1f}ms x{tolerance}")
 
+    fs = result.get("fleet_scale")
+    if fs is None:
+        failures.append("result json has no fleet-scale measurement "
+                        "(fleet_scale.tree32_speedup_vs_flat3)")
+    else:
+        if not fs.get("bit_identical", False):
+            failures.append(
+                "fleet tree BROKE BIT-IDENTITY: the hierarchical merge's "
+                "global view diverges from the flat single-level merge "
+                "over the same publish schedule (DESIGN.md §15)")
+        ts = fs.get("tree32_speedup_vs_flat3", 0.0)
+        if ts < TREE_SCALE_FLOOR:
+            failures.append(
+                f"tree-{fs.get('gate_workers', 32)} fleet merge is only "
+                f"{ts:.2f}x the same-run flat-3 baseline, below the "
+                f"{TREE_SCALE_FLOOR}x floor (DESIGN.md §15)")
+
     wid = result.get("widening")
     wid_base = baseline.get("widening", {})
     if wid is None:
@@ -269,6 +297,17 @@ def main(argv=None) -> int:
               f"zero_loss={fr.get('zero_loss')} (budget "
               f"{baseline.get('fleet_recovery', {}).get('recovery_ms', 0):.1f}"
               f"ms x{args.tolerance})")
+    if "fleet_scale" in result:
+        fs = result["fleet_scale"]
+        for c in fs.get("curve", []):
+            print(f"fleet scale:   tree-{c['workers']} "
+                  f"({c['tree_nodes']} nodes, fan-in "
+                  f"{fs.get('fan_in')}): "
+                  f"{c['tree_events_per_s']:.0f} events/s = "
+                  f"{c['tree_speedup_vs_flat3']:.2f}x flat-3 "
+                  f"(floor {TREE_SCALE_FLOOR}x at "
+                  f"{fs.get('gate_workers')} workers, "
+                  f"bit_identical={c['bit_identical']})")
     if "widening" in result:
         wf = result["widening"].get("fused", {})
         wb = result["widening"].get("batched", {})

@@ -369,6 +369,156 @@ def measure_fleet_merge(n_workers: int = 3, rounds: int = 8,
         shutil.rmtree(root, ignore_errors=True)
 
 
+def measure_fleet_scale(worker_counts=(32,), fan_in: int = 6,
+                        rounds: int = 7,
+                        events_per_round: int = 384) -> dict:
+    """Scaling sweep for the hierarchical fleet plane (DESIGN.md §15):
+    for each worker count, the same publish schedule is merged twice —
+    once by the flat single-level aggregator, once by a fan_in-ary tree
+    of node aggregators (each node folds its whole group in one batched
+    device reduction, the root folds delta batches) — and the tree's
+    final global view is checked BIT-IDENTICAL to the flat one.
+
+    Throughput model: every node is a separate process in production and
+    the root drains delta streams asynchronously, so successive rounds
+    pipeline through the levels — steady-state events/s is bounded by the
+    SLOWEST stage (slowest node of a level, or the root), while the sum
+    of stages is the per-round latency (reported per curve entry). The
+    gate anchor is the same-run flat 3-worker merge, so the recorded
+    speedup compares machines to themselves, not to a recorded wall
+    clock."""
+    import shutil
+    import tempfile
+
+    from repro.core import daemon as D, shm as SH
+    from repro.core.treeagg import TreeAggregator
+
+    specs = [M.MapSpec("fs_arr", M.MapKind.ARRAY, max_entries=128),
+             M.MapSpec("fs_hash", M.MapKind.HASH, max_entries=256),
+             M.MapSpec("fs_hist", M.MapKind.LOG2HIST)]
+    per_kind = events_per_round // 3
+
+    def one_run(n_workers: int, tree: bool):
+        root = tempfile.mkdtemp(prefix="bpftime_fleetscale_")
+        try:
+            wids = [f"w{w:03d}" for w in range(n_workers)]
+            regions = {w: SH.ShmRegion.create(root, specs, worker_id=wid)
+                       for w, wid in enumerate(wids)}
+            states = {w: M.init_states(specs, np)
+                      for w in range(n_workers)}
+            # one seed per run: flat and tree merge IDENTICAL worker
+            # content, so the final global views must match bit-for-bit
+            rng = np.random.default_rng(11)
+            if tree:
+                agg = TreeAggregator(root, fan_in=fan_in, depth=1,
+                                     worker_ids=wids)
+            else:
+                agg = D.Aggregator(root)
+            def apply_round():
+                for w in range(n_workers):
+                    st = states[w]
+                    np.add.at(st["fs_arr"]["values"],
+                              rng.integers(0, 128, per_kind), 1)
+                    M.n_hash_fetch_add_batch(
+                        st["fs_hash"],
+                        rng.integers(0, 64, per_kind).astype(np.int64),
+                        np.ones(per_kind, np.int64))
+                    np.add.at(st["fs_hist"]["bins"],
+                              rng.integers(0, 64, per_kind), 1)
+                    regions[w].publish_device(st)
+
+            # warmup must include a DATA round: the coalesce pow2 bucket
+            # and the stacked group fold only compile once real deltas
+            # flow, and that first compile (~300ms) must not land inside
+            # the timed section. Both runs consume the same rng stream,
+            # so the warmup content is identical too.
+            agg.poll_once()
+            apply_round()
+            if tree:
+                for na in agg.node_aggs:
+                    na.poll_once()
+                agg.root_agg.poll_once()
+            else:
+                agg.poll_once()
+            # per-STAGE wall samples across rounds. Every node is its own
+            # process in production (`node run`) and the root consumes
+            # delta streams asynchronously, so successive rounds PIPELINE
+            # through the levels: steady-state throughput is set by the
+            # slowest stage (a node, or the root), and one round's
+            # latency is the sum of stages along a root-ward path. Each
+            # stage's cost is the MEDIAN of its samples — a scheduler
+            # burp in one stage of one round must not masquerade as a
+            # structurally slow pipeline.
+            stage_dts: dict[str, list] = {}
+            for _ in range(rounds):
+                apply_round()
+                if tree:
+                    for na in agg.node_aggs:
+                        t0 = time.perf_counter()
+                        na.poll_once()
+                        stage_dts.setdefault(na.node_id, []).append(
+                            time.perf_counter() - t0)
+                    t0 = time.perf_counter()
+                    agg.root_agg.poll_once()
+                    stage_dts.setdefault("root", []).append(
+                        time.perf_counter() - t0)
+                else:
+                    t0 = time.perf_counter()
+                    agg.poll_once()
+                    stage_dts.setdefault("root", []).append(
+                        time.perf_counter() - t0)
+            g = SH.GlobalView.attach(root)
+            final = (np.array(g.snapshot("fs_arr")["values"]),
+                     np.array(g.snapshot("fs_hist")["bins"]),
+                     M.n_hash_items(g.snapshot("fs_hash")))
+            med = {s: float(np.median(d)) for s, d in stage_dts.items()}
+            # latency: slowest node of each level + the root, end to end
+            by_level: dict[str, float] = {}
+            for s, m in med.items():
+                if s != "root":
+                    lvl = s.split("_")[0]
+                    by_level[lvl] = max(by_level.get(lvl, 0.0), m)
+            latency = sum(by_level.values()) + med["root"]
+            events_round = n_workers * 3 * per_kind
+            return (events_round / max(max(med.values()), 1e-9),
+                    latency * 1e3, final)
+        finally:
+            shutil.rmtree(root, ignore_errors=True)
+
+    # the anchor is a ~3ms cycle: one run is at the mercy of machine
+    # state, so the gate denominator is the median of three full runs
+    flat3_runs = [one_run(3, tree=False) for _ in range(3)]
+    flat3_eps = float(np.median([r[0] for r in flat3_runs]))
+    flat3_lat = float(np.median([r[1] for r in flat3_runs]))
+    curve = []
+    all_identical = True
+    for n in worker_counts:
+        flat_eps, flat_lat, flat_final = one_run(n, tree=False)
+        tree_eps, tree_lat, tree_final = one_run(n, tree=True)
+        identical = (np.array_equal(flat_final[0], tree_final[0])
+                     and np.array_equal(flat_final[1], tree_final[1])
+                     and flat_final[2] == tree_final[2])
+        all_identical = all_identical and identical
+        curve.append({
+            "workers": int(n),
+            "tree_nodes": -(-int(n) // fan_in),
+            "flat_events_per_s": flat_eps,
+            "flat_round_latency_ms": flat_lat,
+            "tree_events_per_s": tree_eps,
+            "tree_round_latency_ms": tree_lat,
+            "tree_speedup_vs_flat3": tree_eps / max(flat3_eps, 1e-9),
+            "bit_identical": bool(identical),
+        })
+    gate = min(curve, key=lambda c: c["workers"])
+    return {"fan_in": fan_in, "rounds": rounds,
+            "events_per_round_per_worker": 3 * per_kind,
+            "flat3_events_per_s": flat3_eps,
+            "curve": curve,
+            "bit_identical": bool(all_identical),
+            "gate_workers": gate["workers"],
+            "tree32_speedup_vs_flat3": gate["tree_speedup_vs_flat3"]}
+
+
 def measure_fleet_recovery(n_workers: int = 3, rounds: int = 6,
                            events_per_round: int = 1024,
                            repeats: int = 5) -> dict:
@@ -565,7 +715,8 @@ def measure_widening(n_events: int = 4096, iters: int = 20) -> dict:
 
 
 def run(n_events: int = 4096, iters: int = 20,
-        modes=("scan", "vectorized", "fused", "interp")) -> dict:
+        modes=("scan", "vectorized", "fused", "interp"),
+        fleet_counts=(32,)) -> dict:
     rt = build_runtime()
     rows = make_tape(n_events)
     out = {"n_events": n_events, "n_programs": len(rt.progs),
@@ -598,6 +749,8 @@ def run(n_events: int = 4096, iters: int = 20,
     # chaos plane: daemon restart latency + zero-loss journal recovery
     out["fleet_recovery"] = measure_fleet_recovery(
         events_per_round=max(384, n_events // 4))
+    # hierarchical fleet plane: tree-vs-flat scaling sweep + identity
+    out["fleet_scale"] = measure_fleet_scale(worker_counts=fleet_counts)
     # commutativity widening: previously-demoted program sets stay fast
     out["widening"] = measure_widening(n_events=n_events, iters=iters)
     return out
@@ -633,6 +786,14 @@ def main():
         fr = res["fleet_recovery"]
         print(f"# fleet recovery: {fr['recovery_ms']:.1f}ms daemon restart "
               f"(zero_loss={fr['zero_loss']})")
+    if "fleet_scale" in res:
+        fs = res["fleet_scale"]
+        for c in fs["curve"]:
+            print(f"# fleet scale: {c['workers']} workers tree "
+                  f"{c['tree_events_per_s']:.0f} events/s "
+                  f"(flat {c['flat_events_per_s']:.0f}, "
+                  f"{c['tree_speedup_vs_flat3']:.1f}x vs flat-3, "
+                  f"bit_identical={c['bit_identical']})")
     if "widening" in res:
         wf, wb = res["widening"]["fused"], res["widening"]["batched"]
         print(f"# widening fused: {wf['n_programs']} progs incl. disjoint "

@@ -38,6 +38,9 @@ def main(argv=None):
     ap.add_argument("--json", metavar="PATH",
                     help="write probe-pipeline results as JSON (runs only "
                          "that section)")
+    ap.add_argument("--fleet-counts", default="32",
+                    help="comma-separated worker counts for the "
+                         "hierarchical fleet-scale sweep (json mode)")
     args = ap.parse_args(argv)
 
     if args.json:
@@ -47,8 +50,10 @@ def main(argv=None):
         with open(tmp, "w"):
             pass
         from benchmarks import probe_pipeline
+        counts = tuple(int(c) for c in args.fleet_counts.split(",") if c)
         res = probe_pipeline.run(n_events=512 if args.fast else 4096,
-                                 iters=3 if args.fast else 10)
+                                 iters=3 if args.fast else 10,
+                                 fleet_counts=counts)
         with open(tmp, "w") as f:
             json.dump(res, f, indent=1)
         os.replace(tmp, args.json)
@@ -78,6 +83,13 @@ def main(argv=None):
             fr = res["fleet_recovery"]
             print(f"# fleet recovery: {fr['recovery_ms']:.1f}ms daemon "
                   f"restart (zero_loss={fr['zero_loss']})")
+        if "fleet_scale" in res:
+            fs = res["fleet_scale"]
+            for c in fs["curve"]:
+                print(f"# fleet scale: {c['workers']}w tree "
+                      f"{c['tree_events_per_s']:.0f} events/s "
+                      f"({c['tree_speedup_vs_flat3']:.1f}x vs flat-3, "
+                      f"bit_identical={c['bit_identical']})")
         if "widening" in res:
             wf, wb = res["widening"]["fused"], res["widening"]["batched"]
             print(f"# widening: disjoint-update set fused at "

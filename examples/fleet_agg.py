@@ -19,7 +19,11 @@ Asserts (exits non-zero on failure):
   * the bpftool-style CLI can read the global view;
   * every worker boots its probe step through the fleet AOT artifact
     cache (DESIGN.md §13), and a LATE joiner booting after the fleet has
-    populated <root>/cache hits it — deserialize, zero retraces.
+    populated <root>/cache hits it — deserialize, zero retraces;
+  * act 2 (DESIGN.md §15): a TWELVE-worker fleet aggregated through the
+    hierarchical tree (worker -> node -> root, fan-in 4, delta streams)
+    converges to the exact bin-wise sum AND comes out bit-identical to a
+    flat aggregator merging the same publish content.
 """
 import json
 import multiprocessing as mp
@@ -86,6 +90,68 @@ def worker_main(root: str, wid: str) -> None:
     # leave the locally-measured truth on disk for the parent's assertion
     np.save(os.path.join(root, f"expect_{wid}.npy"),
             np.asarray(maps["fleet_hist"]["bins"]))
+
+
+TREE_WORKERS = 12
+TREE_FAN_IN = 4
+TREE_ROUNDS = 4
+TREE_EVENTS = 256
+
+
+def tree_worker_main(root: str, wid: str) -> None:
+    """Lightweight shm-only worker for the tree act: publishes LOG2HIST
+    deltas straight through the map plane (no jax runtime — the tree
+    demo is about the aggregation topology, not program execution)."""
+    from repro.core import maps as M, shm as SH
+
+    specs = [M.MapSpec("tree_hist", M.MapKind.LOG2HIST)]
+    region = SH.ShmRegion.create(root, specs, worker_id=wid)
+    state = M.init_states(specs, np)
+    rng = np.random.default_rng(seed=int(wid[1:]))
+    for _ in range(TREE_ROUNDS):
+        np.add.at(state["tree_hist"]["bins"],
+                  rng.integers(0, 64, TREE_EVENTS), 1)
+        region.publish_device(state)
+        time.sleep(0.01)
+    np.save(os.path.join(root, f"expect_{wid}.npy"),
+            np.asarray(state["tree_hist"]["bins"]))
+
+
+def _run_tree_fleet(root: str, tree: bool) -> np.ndarray:
+    """Spawn TREE_WORKERS publishers into `root` and aggregate them live —
+    hierarchically (fan-in-4 tree of NodeAggregators) or flat — returning
+    the final global bins after the dead-worker harvest."""
+    from repro.core import daemon, shm as SH
+    from repro.core.treeagg import TreeAggregator
+
+    ctx = mp.get_context("spawn")
+    wids = [f"w{i:03d}" for i in range(TREE_WORKERS)]
+    procs = [ctx.Process(target=tree_worker_main, args=(root, wid))
+             for wid in wids]
+    for p in procs:
+        p.start()
+    agg = None
+    while any(p.is_alive() for p in procs):
+        if agg is None and len(SH.list_workers(root)) == TREE_WORKERS:
+            agg = (TreeAggregator(root, fan_in=TREE_FAN_IN, worker_ids=wids)
+                   if tree else daemon.Aggregator(root))
+        if agg is not None:
+            agg.poll_once()
+        time.sleep(0.02)
+    for p in procs:
+        p.join()
+    assert all(p.exitcode == 0 for p in procs), \
+        f"tree worker crashed: {[p.exitcode for p in procs]}"
+    if agg is None:
+        agg = (TreeAggregator(root, fan_in=TREE_FAN_IN, worker_ids=wids)
+               if tree else daemon.Aggregator(root))
+    status = agg.poll_once()          # final harvest (dead-worker rule)
+    assert set(status["alive"]) | set(status["dead"]) == set(wids), status
+    expect = sum(np.load(os.path.join(root, f"expect_{w}.npy"))
+                 for w in wids)
+    merged = SH.GlobalView.attach(root).snapshot("tree_hist")["bins"]
+    np.testing.assert_array_equal(merged, expect)
+    return np.asarray(merged)
 
 
 def main() -> int:
@@ -156,6 +222,25 @@ def _run(root: str) -> int:
     assert rc == 0
     print(f"OK: late joiner w{N_WORKERS} warm cold-join in "
           f"{join_info['boot_ms']:.1f}ms (AOT cache hit)")
+
+    # -- act 2: the SAME publish content (per-worker seeds) merged two
+    # ways — a fan-in-4 tree of NodeAggregators over delta streams, and
+    # the flat single-consumer plane — must land on ONE answer
+    tree_root = tempfile.mkdtemp(prefix="bpftime_tree_")
+    flat_root = tempfile.mkdtemp(prefix="bpftime_flat_")
+    try:
+        tree_bins = _run_tree_fleet(tree_root, tree=True)
+        flat_bins = _run_tree_fleet(flat_root, tree=False)
+    finally:
+        shutil.rmtree(tree_root, ignore_errors=True)
+        shutil.rmtree(flat_root, ignore_errors=True)
+    np.testing.assert_array_equal(tree_bins, flat_bins)
+    n_nodes = -(-TREE_WORKERS // TREE_FAN_IN)
+    print(f"\ntree fleet: {TREE_WORKERS} workers -> {n_nodes} node "
+          f"aggregators (fan-in {TREE_FAN_IN}) -> global root: "
+          f"total={int(tree_bins.sum())} "
+          f"(= {TREE_WORKERS} workers x {TREE_ROUNDS * TREE_EVENTS} events)")
+    print("OK: hierarchical tree view is bit-identical to the flat merge")
     return 0
 
 

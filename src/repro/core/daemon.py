@@ -33,6 +33,7 @@ plus the legacy single-process watcher flags:
 from __future__ import annotations
 
 import argparse
+import base64
 import json
 import os
 import sys
@@ -167,6 +168,18 @@ class AggregatorConfig:
     publish_max_lag: int = 4
     # crash recovery
     journal: bool = True
+    # journal cadence: write the fold journal every K output events (root:
+    # cycles; node: emits). Lag is safe — restores re-extract idempotently
+    # against the journaled baselines — and amortizes the json encode on
+    # the hot fleet path
+    journal_every: int = 1
+    # tree aggregation (DESIGN.md §15)
+    # publish sharded global hash views (keyspace partitioned over the
+    # home-slot hash); None = single unsharded view only
+    hash_shards: int | None = None
+    # node-level folds run as jitted device reductions over the whole
+    # worker group (False = numpy twins, bit-identical)
+    device_fold: bool = True
     # ft wiring: heartbeats count aggregation cycles since the worker's
     # seqlock last advanced; step_time_map names a host ARRAY map of
     # per-step wall times the workers publish (sys_step_end probe)
@@ -181,12 +194,44 @@ def _fresh_health() -> dict:
             "quarantined": False, "transitions": []}
 
 
+def _enc_arr(a) -> dict:
+    """Journal array codec: raw little-endian int64 bytes, base64'd. An
+    int-by-int JSON list costs ~40x the encode time at fleet scale (every
+    worker baseline re-encodes each cycle); the decoder still accepts the
+    old list form, so pre-existing journals restore unchanged."""
+    a = np.ascontiguousarray(np.asarray(a), dtype="<i8")
+    return {"s": list(a.shape),
+            "z": base64.b64encode(a.tobytes()).decode("ascii")}
+
+
+def _dec_arr(v) -> np.ndarray:
+    if isinstance(v, dict):
+        return np.frombuffer(base64.b64decode(v["z"]),
+                             dtype="<i8").reshape(v["s"]).astype(np.int64)
+    return np.asarray(v, np.int64)
+
+
 def _enc_state(st: dict) -> dict:
-    return {f: np.asarray(a).tolist() for f, a in st.items()}
+    return {f: _enc_arr(a) for f, a in st.items()}
 
 
 def _dec_state(d: dict) -> dict:
-    return {f: np.asarray(v, np.int64) for f, v in d.items()}
+    return {f: _dec_arr(v) for f, v in d.items()}
+
+
+def _enc_items(items: dict) -> dict:
+    ks = sorted(items)
+    k = np.fromiter(ks, np.int64, len(ks))
+    v = (np.array([items[x] for x in ks], np.int64) if ks
+         else np.zeros(0, np.int64))
+    return {"k": _enc_arr(k), "v": _enc_arr(v)}
+
+
+def _dec_items(x) -> dict:
+    if isinstance(x, dict):
+        k, v = _dec_arr(x["k"]), _dec_arr(x["v"])
+        return dict(zip(k.tolist(), v.tolist()))
+    return {int(k): int(v) for k, v in x}     # old list-of-pairs journals
 
 
 class Aggregator:
@@ -232,6 +277,11 @@ class Aggregator:
     after a restore is invisible).
     """
 
+    # tree position: None = the global root; NodeAggregator overrides with
+    # its node id. Children publishing delta streams under nodes/<nid>/ are
+    # matched against this to wire the tree.
+    _node_id: str | None = None
+
     def __init__(self, root: str, snapshot_retries: int | None = None,
                  config: AggregatorConfig | None = None):
         self.config = config or AggregatorConfig()
@@ -240,7 +290,7 @@ class Aggregator:
         self.snapshot_retries = self.config.snapshot_retries
         self.root = root
         self.specs = SH.read_meta_specs(root)
-        self.view = GlobalView.create(root, self.specs)
+        self.view = self._make_output()
         # global accumulators
         self.summary = {s.name: M.init_state(s, np) for s in self.specs
                         if M.is_summary_kind(s.kind)}
@@ -289,12 +339,38 @@ class Aggregator:
         self._stragglers: list[str] = []
         self.hb = FT.HeartbeatMonitor(
             num_hosts=0, timeout_s=self.config.heartbeat_timeout_cycles)
+        # tree aggregation (DESIGN.md §15): child node-aggregators feed this
+        # level through seq-numbered delta streams instead of raw snapshots
+        self.nodes: dict[str, dict] = {}
+        self.stream_lost: dict[str, int] = {}     # gc'd/corrupt batches
+        self.node_coalesced: dict[str, int] = {}  # subtree back-pressure
+        self._subtree: dict[str, dict] = {}       # last alive/dead rollup
+        self._journal_nodes: dict[str, dict] = {}
+        self._journal_due = 0
+        # sharded global hash views: root-only, dirty shards republished
+        self.shards = None
+        self._shard_last: dict[tuple, tuple] = {}
+        self.shard_publishes = 0
+        if self.config.hash_shards and self._node_id is None:
+            self.shards = SH.HashShards.create(
+                root, self.specs, int(self.config.hash_shards))
         # crash recovery: resume accumulators + baselines from the fold
         # journal the previous incarnation persisted at its last completed
         # cycle (missing/invalid journal = cold start)
         self._journal_workers: dict[str, dict] = {}
+        self._journal_raw: dict | None = None
         if self.config.journal:
             self._restore_journal()
+
+    # -------------------------------------------------------------- tree hooks
+    def _make_output(self):
+        """Where this level's merged state goes: the root publishes the
+        seqlocked global view; a NodeAggregator emits delta batches into
+        its stream instead."""
+        return GlobalView.create(self.root, self.specs)
+
+    def _who(self) -> str:
+        return self._node_id or "global"
 
     # ---------------------------------------------------------------- journal
     def _journal_path(self) -> str:
@@ -309,7 +385,7 @@ class Aggregator:
                 "base": {
                     "summary": {n: _enc_state(st)
                                 for n, st in b["summary"].items()},
-                    "hash_items": {n: sorted(d.items())
+                    "hash_items": {n: _enc_items(d)
                                    for n, d in b["hash_items"].items()},
                     "rb_head": {n: int(v)
                                 for n, v in b["rb_head"].items()},
@@ -320,7 +396,7 @@ class Aggregator:
             "merged_updates": self.merged_updates,
             "coalesced_cycles": self.coalesced_cycles,
             "summary": {n: _enc_state(st) for n, st in self.summary.items()},
-            "hash_items": {n: sorted(M.n_hash_items(t).items())
+            "hash_items": {n: _enc_items(M.n_hash_items(t))
                            for n, t in self.hash_tbl.items()},
             "hash_dropped": dict(self.hash_dropped),
             "rb_tagged": {n: {wid: [[list(tag), [int(x) for x in rec]]
@@ -337,6 +413,16 @@ class Aggregator:
             "workers": workers,
             "health": self.health,
             "hb_last": dict(self.hb.last),
+            # tree: consumption cursors per child node stream. The stream
+            # writer only GCs batches at or below the JOURNALED cursor (we
+            # ack after journaling), so a crashed parent re-reads anything
+            # folded-but-unjournaled idempotently.
+            "node_children": {nid: {"boot": nc["boot"],
+                                    "last_seq": int(nc["last_seq"]),
+                                    "retired": bool(nc.get("retired"))}
+                              for nid, nc in self.nodes.items()},
+            "stream_lost": dict(self.stream_lost),
+            "node_coalesced": dict(self.node_coalesced),
         }
 
     def _restore_journal(self) -> None:
@@ -350,6 +436,7 @@ class Aggregator:
             return               # unreadable journal: cold start
         if j.get("version") != 1:
             return
+        self._journal_raw = j
         spec_of = {s.name: s for s in self.specs}
         self.cycles = int(j["cycles"])
         self.merged_updates = int(j["merged_updates"])
@@ -362,7 +449,7 @@ class Aggregator:
                 # canonical rebuild: content identical; layout drift is
                 # invisible because publishes canonicalize again
                 self.hash_tbl[n] = M.n_hash_canonical(
-                    spec_of[n], {int(k): int(v) for k, v in items})
+                    spec_of[n], _dec_items(items))
         self.hash_dropped.update(
             {n: int(v) for n, v in j["hash_dropped"].items()
              if n in self.hash_dropped})
@@ -379,6 +466,12 @@ class Aggregator:
                     mine[n] = {wid: int(v) for wid, v in d.items()}
         self.corrupt_skipped = {w: int(v)
                                 for w, v in j["corrupt_skipped"].items()}
+        self._journal_nodes = {nid: dict(nc) for nid, nc in
+                               j.get("node_children", {}).items()}
+        self.stream_lost = {nid: int(v) for nid, v in
+                            j.get("stream_lost", {}).items()}
+        self.node_coalesced = {nid: int(v) for nid, v in
+                               j.get("node_coalesced", {}).items()}
         self.dead = dict(j["dead"])
         self.health = j["health"]
         self.hb.last = {w: float(t) for w, t in j.get("hb_last", {}).items()}
@@ -389,7 +482,7 @@ class Aggregator:
                 "base": {
                     "summary": {n: _dec_state(st)
                                 for n, st in b["summary"].items()},
-                    "hash_items": {n: {int(k): int(v) for k, v in items}
+                    "hash_items": {n: _dec_items(items)
                                    for n, items in b["hash_items"].items()},
                     "rb_head": {n: int(v)
                                 for n, v in b["rb_head"].items()},
@@ -404,8 +497,16 @@ class Aggregator:
                 "rb_head": {s.name: 0 for s in self.specs
                             if s.kind == MapKind.RINGBUF}}
 
+    def _worker_candidates(self) -> list[str]:
+        """Workers THIS level polls directly. The root skips every worker a
+        registered node-aggregator claims (dead or alive: the node's stream
+        is that worker's only fold path — folding it directly too would
+        double-count); NodeAggregator overrides with its assigned group."""
+        claimed = SH.claimed_workers(self.root)
+        return [w for w in SH.list_workers(self.root) if w not in claimed]
+
     def _discover(self) -> None:
-        for wid in SH.list_workers(self.root):
+        for wid in self._worker_candidates():
             if wid in self.workers:
                 continue
             boot = SH.worker_info(self.root, wid).get("boot")
@@ -423,15 +524,21 @@ class Aggregator:
                 # deltas the previous incarnation folded in memory (after
                 # its last journal write) re-extract — and already-journaled
                 # folds don't re-extract (idempotent re-fold)
-                base, seq = jw["base"], jw["seq"]
+                base, seq, adopt = jw["base"], jw["seq"], False
             else:
+                # adopt mode (node cold start without a journal but with
+                # emitted stream history): the first snapshot becomes the
+                # baseline WITHOUT folding — already-emitted content must
+                # never re-emit (forfeit the gap, never double-fold)
                 base, seq = self._fresh_baseline(), 0
+                adopt = getattr(self, "_adopt_admits", False)
             self.workers[wid] = {
                 "region": ShmRegion.attach(self.root, mode="r",
                                            worker_id=wid),
                 "boot": boot,
                 "base": base,
                 "seq": seq,
+                "adopt": adopt,
             }
             if wid not in self.health:
                 self.health[wid] = _fresh_health()
@@ -443,6 +550,7 @@ class Aggregator:
             w["boot"] = boot
             w["base"] = self._fresh_baseline()
             w["seq"] = 0
+            w["adopt"] = False   # a fresh incarnation's deltas DO fold
             w["region"] = ShmRegion.attach(self.root, mode="r",
                                            worker_id=wid)
             # the old incarnation's ringbuf contribution stays: its final
@@ -451,18 +559,17 @@ class Aggregator:
                 self.rb_offset[name][wid] = self.rb_heads[name].get(wid, 0)
 
     # ---------------------------------------------------------------- merge
-    def _merge_worker(self, wid: str, w: dict,
-                      retries: int | None = None) -> int:
-        """Snapshot + delta + fold for one worker. Returns the number of
-        updates merged. Raises TimeoutError if the seqlock never settles,
-        SnapshotCorruption on a checksum mismatch (damaged bytes behind a
-        consistent seqlock), SeqRegression if the section was re-created
-        under us (restart mid detection: zeroed files must never fold as a
-        negative delta). Snapshots ALL maps before folding any, so a
-        failure mid-cycle never lands a partial merge."""
+    def _snapshot_worker(self, wid: str, w: dict,
+                         retries: int | None = None) -> dict:
+        """Seqlocked snapshot of ALL of one worker's maps (none folded yet,
+        so a failure mid-cycle never lands a partial merge). Raises
+        TimeoutError if the seqlock never settles, SnapshotCorruption on a
+        checksum mismatch (damaged bytes behind a consistent seqlock),
+        SeqRegression if the section was re-created under us (restart mid
+        detection: zeroed files must never fold as a negative delta)."""
         cfg = self.config
         retries = cfg.snapshot_retries if retries is None else retries
-        region, base = w["region"], w["base"]
+        region = w["region"]
         snaps = {}
         seq_seen = w.get("seq", 0)
         for spec in self.specs:
@@ -474,6 +581,37 @@ class Aggregator:
             seq_seen = max(seq_seen, seq)
             snaps[spec.name] = cur
         w["seq"] = seq_seen
+        return snaps
+
+    def _adopt_baseline(self, wid: str, w: dict, snaps: dict) -> None:
+        """Adopt-mode admission: the snapshot becomes the baseline without
+        folding. Used when a node aggregator cold-starts over a stream it
+        already emitted into (journal lost): the worker's cumulative state
+        includes content the previous incarnation already emitted — fold
+        nothing, forfeit the gap, never double-emit."""
+        base = w["base"]
+        for spec in self.specs:
+            cur = snaps[spec.name]
+            if M.is_summary_kind(spec.kind):
+                base["summary"][spec.name] = cur
+            elif spec.kind == MapKind.HASH:
+                base["hash_items"][spec.name] = M.n_hash_items(cur)
+            elif spec.kind == MapKind.RINGBUF:
+                lane = spec.flags.get("step_lane")
+                _, head = M.n_ringbuf_tagged(cur, wid, lo=0, step_lane=lane)
+                base["rb_head"][spec.name] = head
+                # align the permanent stream so the NEXT record's global
+                # position continues right after the last emitted head
+                self.rb_offset[spec.name][wid] = \
+                    self.rb_heads[spec.name].get(wid, 0) - head
+
+    def _fold_worker(self, wid: str, w: dict, snaps: dict) -> int:
+        """Delta + fold of one worker's snapshots into this level's
+        accumulators. Returns the number of updates merged."""
+        if w.pop("adopt", False):
+            self._adopt_baseline(wid, w, snaps)
+            return 0
+        base = w["base"]
         updates = 0
         for spec in self.specs:
             cur = snaps[spec.name]
@@ -499,36 +637,48 @@ class Aggregator:
                 updates += len(adds) + len(dels)
                 base["hash_items"][spec.name] = items
             elif spec.kind == MapKind.RINGBUF:
-                lane = spec.flags.get("step_lane")
-                lo = base["rb_head"][spec.name]
-                tagged, head = M.n_ringbuf_tagged(
-                    cur, wid, lo=lo, step_lane=lane)
-                # records the ring overwrote before we read them — the
-                # aggregator fell behind; accounted, never silent
-                lost = max(0, (head - spec.max_entries) - lo)
-                if lost:
-                    self.rb_lost[spec.name][wid] = \
-                        self.rb_lost[spec.name].get(wid, 0) + lost
-                # shift this incarnation's local positions onto the
-                # worker's permanent stream, and clamp step tags to the
-                # worker's floor: the interleave key stays monotone in
-                # emit order across restarts (records keep their real
-                # step values — only the sort tags are clamped)
-                off = self.rb_offset[spec.name].get(wid, 0)
-                floor = self.rb_step_floor[spec.name].get(wid, 0)
-                adj = []
-                for (s, w_, i), rec in tagged:
-                    floor = max(floor, s)
-                    adj.append(((floor, w_, off + i), rec))
-                tagged = adj
-                self.rb_step_floor[spec.name][wid] = floor
-                buf = self.rb_tagged[spec.name].setdefault(wid, [])
-                buf.extend(tagged)
-                del buf[:-spec.max_entries]     # ring retention mirror
-                self.rb_heads[spec.name][wid] = off + head
-                updates += len(tagged)
-                base["rb_head"][spec.name] = head
+                updates += self._fold_rb(spec, wid, base, cur)
         return updates
+
+    def _fold_rb(self, spec: MapSpec, wid: str, base: dict,
+                 cur: dict) -> int:
+        """Fold one worker's ringbuf snapshot (shared by the per-worker and
+        the node-level group fold paths — rings stay per-worker tuples)."""
+        lane = spec.flags.get("step_lane")
+        lo = base["rb_head"][spec.name]
+        tagged, head = M.n_ringbuf_tagged(
+            cur, wid, lo=lo, step_lane=lane)
+        # records the ring overwrote before we read them — the
+        # aggregator fell behind; accounted, never silent
+        lost = max(0, (head - spec.max_entries) - lo)
+        if lost:
+            self.rb_lost[spec.name][wid] = \
+                self.rb_lost[spec.name].get(wid, 0) + lost
+        # shift this incarnation's local positions onto the
+        # worker's permanent stream, and clamp step tags to the
+        # worker's floor: the interleave key stays monotone in
+        # emit order across restarts (records keep their real
+        # step values — only the sort tags are clamped)
+        off = self.rb_offset[spec.name].get(wid, 0)
+        floor = self.rb_step_floor[spec.name].get(wid, 0)
+        adj = []
+        for (s, w_, i), rec in tagged:
+            floor = max(floor, s)
+            adj.append(((floor, w_, off + i), rec))
+        tagged = adj
+        self.rb_step_floor[spec.name][wid] = floor
+        buf = self.rb_tagged[spec.name].setdefault(wid, [])
+        buf.extend(tagged)
+        del buf[:-spec.max_entries]     # ring retention mirror
+        self.rb_heads[spec.name][wid] = off + head
+        base["rb_head"][spec.name] = head
+        return len(tagged)
+
+    def _merge_worker(self, wid: str, w: dict,
+                      retries: int | None = None) -> int:
+        """Snapshot-all-then-fold for one worker (harvest/compat path)."""
+        snaps = self._snapshot_worker(wid, w, retries=retries)
+        return self._fold_worker(wid, w, snaps)
 
     # ---------------------------------------------------------------- health
     def _set_state(self, wid: str, to: str, reason: str) -> None:
@@ -591,13 +741,15 @@ class Aggregator:
         """One aggregation cycle: discover, poll, merge, publish, journal.
         Returns the status dict also written to <dir>/global/status.json."""
         cfg = self.config
-        faults.fire("agg:cycle_begin", cycle=self.cycles)
+        faults.fire("agg:cycle_begin", cycle=self.cycles, who=self._who())
         self._discover()
         stale = []
         cycle_updates = 0
+        polled = []
         for wid in sorted(self.workers):
             w = self.workers[wid]
-            faults.fire("agg:pre_merge", wid=wid, cycle=self.cycles)
+            faults.fire("agg:pre_merge", wid=wid, cycle=self.cycles,
+                        who=self._who())
             # restart detection FIRST, even for a dead worker: a worker
             # that restarted AND died within one poll interval must be
             # harvested against the new incarnation's (zero) baseline and
@@ -619,7 +771,7 @@ class Aggregator:
                        else cfg.snapshot_retries)
             seq_before = w.get("seq", 0)
             try:
-                cycle_updates += self._merge_worker(wid, w, retries=retries)
+                snaps = self._snapshot_worker(wid, w, retries=retries)
             except SnapshotCorruption:
                 self.corrupt_skipped[wid] = \
                     self.corrupt_skipped.get(wid, 0) + 1
@@ -632,8 +784,13 @@ class Aggregator:
                 stale.append(wid)
                 self._fail_event(wid, "seq_regression")
             else:
-                faults.fire("agg:post_merge", wid=wid)
-                self._ok_event(wid, advanced=w.get("seq", 0) > seq_before)
+                polled.append((wid, w, snaps, seq_before))
+        # fold phase: every snapshot already taken, so a fold is pure-local
+        # (NodeAggregator overrides this with one batched device pass over
+        # the whole group)
+        cycle_updates += self._fold_polled(polled)
+        # tree: fold child node-aggregators' delta-stream batches
+        cycle_updates += self._poll_node_children()
         self._stragglers = self._detect_stragglers()
         for wid in self._stragglers:
             if self.health.get(wid, {}).get("state") == HEALTHY:
@@ -646,30 +803,20 @@ class Aggregator:
         # skipped (deltas coalesce in the accumulators; ring overruns are
         # counted in rb_lost), but never for more than publish_max_lag
         # cycles.
-        publish_now = (bool(cycle_updates) or not self._published
-                       or self._publish_lag > 0)   # flush pending coalesce
-        if (publish_now and cfg.coalesce_threshold is not None
-                and self._published
-                and cycle_updates > cfg.coalesce_threshold
-                and self._publish_lag + 1 < cfg.publish_max_lag):
-            self._publish_lag += 1
-            self.coalesced_cycles += 1
-            publish_now = False
-        if publish_now:
-            self._publish_lag = 0
-            faults.fire("agg:pre_publish")
-            self.last_states = self.global_states()
-            self.view.publish(self.last_states)
-            self._published = True
-            faults.fire("agg:post_publish")
-        faults.fire("agg:pre_journal")
-        if cfg.journal:
-            SH._atomic_json(self._journal_path(), self._journal_dict())
+        publish_now = self._publish_cycle(cycle_updates)
+        faults.fire("agg:pre_journal", who=self._who())
+        self._maybe_journal(publish_now)
         hb_dead = [w for w in self.hb.dead(now=float(self.cycles))
                    if w in self.workers]
         status = {
-            "alive": sorted(self.workers),
-            "dead": sorted(self.dead),
+            # alive/dead roll up the whole subtree: direct workers plus
+            # everything the child-node batches reported below them
+            "alive": sorted(set(self.workers) | {
+                a for st in self._subtree.values()
+                for a in st.get("alive", [])}),
+            "dead": sorted(set(self.dead) | {
+                d for st in self._subtree.values()
+                for d in st.get("dead", [])}),
             "stale": stale,
             "cycles": self.cycles,
             "merged_updates": self.merged_updates,
@@ -684,11 +831,257 @@ class Aggregator:
                            "quarantined": h["quarantined"],
                            "transitions": h["transitions"]}
                        for w, h in self.health.items()},
+            # tree: per-child-node consumption + back-pressure rollup
+            "nodes": {nid: {"state": self.health.get(nid, {}).get(
+                                "state", HEALTHY),
+                            "last_seq": int(nc["last_seq"]),
+                            "alive": not nc.get("retired", False),
+                            "workers": nc.get("workers", []),
+                            "subtree": self._subtree.get(nid, {})}
+                      for nid, nc in self.nodes.items()},
+            "stream_lost": dict(self.stream_lost),
+            "node_coalesced": dict(self.node_coalesced),
+            "hash_shards": int(self.config.hash_shards or 0),
+            "shard_publishes": self.shard_publishes,
             "time": time.time(),
         }
-        self.view.publish_status(status)
-        faults.fire("agg:cycle_end", cycle=self.cycles)
+        self._publish_status(status)
+        faults.fire("agg:cycle_end", cycle=self.cycles, who=self._who())
         return status
+
+    def _fold_polled(self, polled: list) -> int:
+        """Fold every successfully-snapshotted worker, in worker-id order."""
+        updates = 0
+        for wid, w, snaps, seq_before in polled:
+            updates += self._fold_worker(wid, w, snaps)
+            faults.fire("agg:post_merge", wid=wid, who=self._who())
+            self._ok_event(wid, advanced=w.get("seq", 0) > seq_before)
+        return updates
+
+    def _publish_cycle(self, cycle_updates: int) -> bool:
+        """Rebuild + publish the global view (coalescing under
+        back-pressure). Returns whether an output event happened this
+        cycle; NodeAggregator overrides to emit a delta batch instead."""
+        cfg = self.config
+        publish_now = (bool(cycle_updates) or not self._published
+                       or self._publish_lag > 0)   # flush pending coalesce
+        if (publish_now and cfg.coalesce_threshold is not None
+                and self._published
+                and cycle_updates > cfg.coalesce_threshold
+                and self._publish_lag + 1 < cfg.publish_max_lag):
+            self._publish_lag += 1
+            self.coalesced_cycles += 1
+            publish_now = False
+        if publish_now:
+            self._publish_lag = 0
+            faults.fire("agg:pre_publish", who=self._who())
+            self.last_states = self.global_states()
+            self.view.publish(self.last_states)
+            self._publish_shards()
+            self._published = True
+            faults.fire("agg:post_publish", who=self._who())
+        return publish_now
+
+    def _publish_shards(self) -> None:
+        """Republish DIRTY shards of the sharded global hash views: a
+        shard whose key-partition content didn't change since its last
+        publish is skipped, so steady-state republish cost scales with the
+        touched keyspace, not the table size."""
+        if self.shards is None:
+            return
+        n_sh = self.shards.n_shards
+        for spec in self.specs:
+            if spec.kind != MapKind.HASH:
+                continue
+            ck, cv = M.n_hash_content(self.hash_tbl[spec.name])
+            sh = M.n_shard_of_keys(ck, spec.max_entries, n_sh)
+            for s in range(n_sh):
+                m = sh == s
+                k_s, v_s = ck[m], cv[m]
+                last = self._shard_last.get((spec.name, s))
+                if last is not None and np.array_equal(last[0], k_s) \
+                        and np.array_equal(last[1], v_s):
+                    continue
+                st = M.n_hash_canonical(
+                    spec, dict(zip(k_s.tolist(), v_s.tolist())))
+                self.shards.publish(spec.name, s, st)
+                self._shard_last[(spec.name, s)] = (k_s, v_s)
+                self.shard_publishes += 1
+
+    def _publish_status(self, status: dict) -> None:
+        self.view.publish_status(status)
+
+    def _maybe_journal(self, output_happened: bool) -> None:
+        cfg = self.config
+        if not cfg.journal:
+            # no crash-consistency promised: release child batches eagerly
+            for nc in self.nodes.values():
+                if nc.get("stream") is not None:
+                    nc["stream"].ack(nc["last_seq"])
+            return
+        self._journal_due += 1
+        if self._journal_due < max(1, cfg.journal_every):
+            return
+        if not self._journal_ok(output_happened):
+            return
+        SH._atomic_json(self._journal_path(), self._journal_dict())
+        self._journal_due = 0
+        self._post_journal()
+        # ack only what the journal now covers: the stream writer GCs
+        # acked batches, and a crashed parent must be able to re-read
+        # anything newer than its last journal
+        for nc in self.nodes.values():
+            if nc.get("stream") is not None:
+                nc["stream"].ack(nc["last_seq"])
+
+    def _journal_ok(self, output_happened: bool) -> bool:
+        return True          # root: any cycle boundary is consistent
+
+    def _post_journal(self) -> None:
+        pass
+
+    # ------------------------------------------------------------ tree fold
+    def _discover_nodes(self) -> None:
+        """Admit child node-aggregators (nodes whose registered parent is
+        this level). Dead nodes follow the worker rules: harvested once,
+        retired, re-admitted with their stream cursor intact when a new
+        incarnation (boot change) appears."""
+        for nid in SH.list_nodes(self.root):
+            info = SH.node_info(self.root, nid)
+            if info.get("parent") != self._node_id:
+                continue
+            boot = info.get("boot")
+            cur = self.nodes.get(nid)
+            if cur is not None and cur["boot"] == boot:
+                continue
+            if cur is not None:
+                last = int(cur["last_seq"])     # restart: cursor continues
+                self._set_state(nid, HEALTHY, "new_incarnation")
+            else:
+                jn = self._journal_nodes.pop(nid, None)
+                last = int(jn["last_seq"]) if jn else 0
+            stream = (SH.DeltaStream.attach(self.root, nid)
+                      if SH.DeltaStream.exists(self.root, nid) else None)
+            if stream is not None and stream.head() < last:
+                last = 0        # stream was wiped: node re-emits from zero
+            self.nodes[nid] = {
+                "boot": boot, "stream": stream, "last_seq": last,
+                "workers": info.get("workers", []),
+                "children": info.get("children", []),
+            }
+            if nid not in self.health:
+                self.health[nid] = _fresh_health()
+                self.hb.beat(nid, t=float(self.cycles))
+
+    def _poll_node_children(self) -> int:
+        """Consume every child node's delta stream past our cursor and fold
+        the batches. Batches are idempotent WAL entries: a crashed parent
+        re-reads anything past its journaled cursor; corrupt or GC'd-away
+        batches are detect-and-skip, counted in stream_lost."""
+        self._discover_nodes()
+        updates = 0
+        for nid in sorted(self.nodes):
+            nc = self.nodes[nid]
+            if nc.get("retired"):
+                continue
+            stream = nc.get("stream")
+            if stream is None:
+                if SH.DeltaStream.exists(self.root, nid):
+                    nc["stream"] = stream = \
+                        SH.DeltaStream.attach(self.root, nid)
+                else:
+                    continue
+            faults.fire("agg:pre_merge", wid=nid, cycle=self.cycles,
+                        who=self._who())
+            before = nc["last_seq"]
+            for seq, payload in stream.poll(nc["last_seq"]):
+                if payload is None:
+                    self.stream_lost[nid] = \
+                        self.stream_lost.get(nid, 0) + 1
+                else:
+                    updates += self._fold_batch(nid, payload)
+                nc["last_seq"] = seq
+            faults.fire("agg:post_merge", wid=nid, who=self._who())
+            if not SH.node_alive(self.root, nid):
+                # harvest-once then retire (same contract as dead workers:
+                # the merged contribution stays; a new boot re-admits)
+                nc["retired"] = True
+                self._set_state(nid, DEAD, "node_gone")
+            else:
+                self._ok_event(nid, advanced=nc["last_seq"] > before)
+        return updates
+
+    def _fold_batch(self, nid: str, payload: dict) -> int:
+        """Fold one child delta batch into this level's accumulators. Every
+        piece is commutative/idempotent-by-construction: summary deltas
+        add, hash adds re-coalesce, ringbuf records carry their original
+        (step, wid, pos) tags end-to-end (replayed positions below our
+        per-worker head are skipped)."""
+        js = payload["json"]
+        arrs = payload["arrays"]
+        spec_of = {s.name: s for s in self.specs}
+        for key, arr in arrs.items():
+            parts = key.split("/")
+            if parts[0] == "summary" and parts[1] in self.summary:
+                with np.errstate(over="ignore"):
+                    self.summary[parts[1]][parts[2]] += \
+                        np.asarray(arr, np.int64)
+        for name in self.hash_tbl:
+            ak = arrs.get(f"hash/{name}/keys")
+            if ak is not None and ak.size:
+                ad = np.asarray(arrs[f"hash/{name}/deltas"], np.int64)
+                ak = np.asarray(ak, np.int64)
+                M.n_hash_fetch_add_batch(self.hash_tbl[name], ak, ad)
+                res_k, _ = M.n_hash_content(self.hash_tbl[name])
+                lost = int(np.count_nonzero(~np.isin(ak, res_k)))
+                if lost:
+                    self.hash_dropped[name] += lost
+            for k in js.get("hash_dels", {}).get(name, []):
+                M.n_hash_delete(self.hash_tbl[name], int(k))
+        for name, per_wid in js.get("rb_meta", {}).items():
+            if name not in self.rb_tagged:
+                continue
+            spec = spec_of[name]
+            for wid, meta in per_wid.items():
+                buf = self.rb_tagged[name].setdefault(wid, [])
+                cur_head = self.rb_heads[name].get(wid, 0)
+                steps = arrs.get(f"rb/{name}/{wid}/steps")
+                if steps is not None and np.asarray(steps).size:
+                    poss = np.asarray(arrs[f"rb/{name}/{wid}/pos"],
+                                      np.int64)
+                    recs = np.asarray(arrs[f"rb/{name}/{wid}/recs"],
+                                      np.int64)
+                    for s, p, rec in zip(
+                            np.asarray(steps, np.int64).tolist(),
+                            poss.tolist(), recs):
+                        if p < cur_head:
+                            continue    # replayed batch: already folded
+                        buf.append(((int(s), wid, int(p)), rec))
+                    del buf[:-spec.max_entries]
+                self.rb_heads[name][wid] = max(cur_head,
+                                               int(meta["head"]))
+                self.rb_step_floor[name][wid] = max(
+                    self.rb_step_floor[name].get(wid, 0),
+                    int(meta.get("floor", 0)))
+                lost_d = int(meta.get("lost_delta", 0))
+                if lost_d:
+                    self.rb_lost[name][wid] = \
+                        self.rb_lost[name].get(wid, 0) + lost_d
+        for name, v in js.get("hash_dropped_delta", {}).items():
+            if name in self.hash_dropped:
+                self.hash_dropped[name] += int(v)
+        for wid, v in js.get("corrupt_delta", {}).items():
+            self.corrupt_skipped[wid] = \
+                self.corrupt_skipped.get(wid, 0) + int(v)
+        if js.get("coalesced_delta"):
+            self.node_coalesced[nid] = \
+                self.node_coalesced.get(nid, 0) + int(js["coalesced_delta"])
+        for wid, h in js.get("health", {}).items():
+            self.health[wid] = h        # transitive subtree health rollup
+        self._subtree[nid] = {"alive": js.get("alive", []),
+                              "dead": js.get("dead", []),
+                              "stream_lost": js.get("stream_lost", {})}
+        return int(js.get("updates", 0))
 
     def global_states(self) -> dict:
         """The merged global view, deterministic for a given set of worker
@@ -732,7 +1125,7 @@ class Aggregator:
 # bpftool-style CLI
 # --------------------------------------------------------------------------
 
-_SUBCOMMANDS = ("map", "prog", "attach", "detach", "agg", "fleet")
+_SUBCOMMANDS = ("map", "prog", "attach", "detach", "agg", "node", "fleet")
 
 
 def _section_loader(root: str, section: str, worker: str | None):
@@ -779,7 +1172,76 @@ def _top_entries(spec: MapSpec, st: dict, n: int) -> list[tuple]:
     return []
 
 
+def _cmd_map_shard(root: str, args) -> int:
+    """`map dump|top --shard K`: one keyspace partition of the sharded
+    global hash views (global/shards/), seqlock+CRC consistent."""
+    if not SH.HashShards.exists(root):
+        print("no sharded views published — run `agg --shards K` first",
+              file=sys.stderr)
+        return 1
+    shards = SH.HashShards.attach(root)
+    meta = SH.HashShards.read_meta(root)
+    k = int(args.shard)
+    if not 0 <= k < meta["n_shards"]:
+        print(f"shard {k} out of range (n_shards={meta['n_shards']})",
+              file=sys.stderr)
+        return 1
+    specs = [s for s in SH.read_meta_specs(root)
+             if s.kind == MapKind.HASH and args.name in (None, s.name)]
+    if not specs:
+        print(f"no hash map matches {args.name!r} (shards hold hash maps "
+              f"only)", file=sys.stderr)
+        return 1
+    out_json = []
+    for spec in specs:
+        st, seq, _ = shards.snapshot(spec.name, k)
+        if args.action == "dump":
+            if args.json:
+                out_json.append({**_state_to_json(spec, st),
+                                 "shard": k, "seq": seq})
+            else:
+                print(f"# shard={k}/{meta['n_shards']} seq={seq}")
+                print("\n".join(_summarize_state(spec, st)))
+        else:
+            rows = _top_entries(spec, st, args.top_n)
+            if args.json:
+                out_json.append({"name": spec.name, "shard": k,
+                                 "top": rows})
+            else:
+                print(f"[{spec.name}] shard {k}/{meta['n_shards']} "
+                      f"top {len(rows)}:")
+                for key, v in rows:
+                    print(f"  {key:>8} : {v}")
+    if args.json:
+        print(json.dumps(out_json, indent=1))
+    return 0
+
+
+def _drop_accounting(root: str) -> list[str]:
+    """Back-pressure/drop counters from the aggregation status, for the
+    `map` footer: what the numbers being dumped do NOT include."""
+    if not GlobalView.exists(root):
+        return []
+    status = GlobalView.attach(root).read_status()
+    lines = []
+    rb_lost = {n: d for n, d in status.get("rb_lost", {}).items()
+               if any(d.values())}
+    if rb_lost:
+        lines.append(f"rb_lost={rb_lost}")
+    hd = {n: v for n, v in status.get("hash_dropped", {}).items() if v}
+    if hd:
+        lines.append(f"hash_dropped={hd}")
+    if status.get("coalesced_cycles"):
+        lines.append(f"coalesced_cycles={status['coalesced_cycles']}")
+    sl = {n: v for n, v in status.get("stream_lost", {}).items() if v}
+    if sl:
+        lines.append(f"stream_lost={sl}")
+    return lines
+
+
 def _cmd_map(root: str, args) -> int:
+    if getattr(args, "shard", None) is not None:
+        return _cmd_map_shard(root, args)
     specs = SH.read_meta_specs(root)
     section = args.section or _default_section(root)
     wids = SH.list_workers(root)
@@ -818,6 +1280,10 @@ def _cmd_map(root: str, args) -> int:
                     print(f"  {k:>8} : {v}")
     if args.json:
         print(json.dumps(out_json, indent=1))
+    elif section == "global":
+        footer = _drop_accounting(root)
+        if footer:
+            print("# drops: " + " ".join(footer))
     return 0
 
 
@@ -1033,6 +1499,69 @@ def _cmd_detach(root: str, args) -> int:
     return 0
 
 
+def _cmd_node(root: str, args) -> int:
+    """`node run|ls|rm`: one level of the aggregation tree. `run` hosts a
+    NodeAggregator for a worker group (its parent — another node or the
+    global root — consumes the delta stream it emits); `ls` shows the
+    registered tree topology + stream cursors; `rm` retires a node's
+    registration (its stream stays for the parent to drain)."""
+    from .treeagg import NodeAggregator
+    if args.action == "ls":
+        rows = []
+        for nid in SH.list_nodes(root):
+            info = SH.node_info(root, nid) or {}
+            stream = SH.DeltaStream.attach(root, nid)
+            rows.append({"node": nid, "parent": info.get("parent"),
+                         "workers": info.get("workers", []),
+                         "children": info.get("children", []),
+                         "alive": SH.node_alive(root, nid),
+                         "head": stream.head(), "acked": stream.acked()})
+        if args.json:
+            print(json.dumps(rows, indent=1))
+            return 0
+        if not rows:
+            print("no nodes registered")
+            return 0
+        print(f"{'NODE':10s} {'PARENT':10s} {'ALIVE':6s} "
+              f"{'HEAD':>6s} {'ACKED':>6s} WORKERS/CHILDREN")
+        for r in rows:
+            members = ",".join(r["workers"] + r["children"]) or "-"
+            print(f"{r['node']:10s} {str(r['parent'] or '-'):10s} "
+                  f"{('yes' if r['alive'] else 'no'):6s} "
+                  f"{r['head']:>6d} {r['acked']:>6d} {members}")
+        return 0
+    if args.action == "rm":
+        if not args.node_id:
+            print("node rm needs a node id", file=sys.stderr)
+            return 2
+        if not SH.unregister_node(root, args.node_id):
+            print(f"no such node: {args.node_id}", file=sys.stderr)
+            return 1
+        print(f"retired node {args.node_id} (stream left for the parent "
+              f"to drain)")
+        return 0
+    # run
+    if not args.node_id:
+        print("node run needs a node id", file=sys.stderr)
+        return 2
+    workers = [w for w in (args.workers or "").split(",") if w]
+    children = [c for c in (args.children or "").split(",") if c]
+    if _check_workers(root, workers):
+        return 1
+    if not workers and not children:
+        # group-only start: trainers that join with
+        # --worker-group <node_id> are claimed dynamically
+        print(f"node {args.node_id}: no explicit members — folding "
+              f"workers that join group {args.node_id!r}")
+    cfg = AggregatorConfig()
+    if args.no_device_fold:
+        cfg.device_fold = False
+    na = NodeAggregator(root, args.node_id, workers=workers,
+                        children=children, parent=args.parent, config=cfg)
+    na.loop(watch=args.watch, once=args.once)
+    return 0
+
+
 def _cmd_fleet(root: str, args) -> int:
     """`fleet health`: the per-worker state machine the aggregation engine
     maintains (HEALTHY/DEGRADED/STALE/DEAD, quarantine, transitions) as
@@ -1062,6 +1591,11 @@ def _cmd_fleet(root: str, args) -> int:
         extras.append(f"rb_lost={status['rb_lost']}")
     if status.get("coalesced_cycles"):
         extras.append(f"coalesced_cycles={status['coalesced_cycles']}")
+    if any(status.get("stream_lost", {}).values()):
+        extras.append(f"stream_lost={status['stream_lost']}")
+    if status.get("hash_shards"):
+        extras.append(f"hash_shards={status['hash_shards']} "
+                      f"shard_publishes={status.get('shard_publishes', 0)}")
     if cache_by_worker:
         hits = sum(c.get("hits", 0) for c in cache_by_worker.values())
         misses = sum(c.get("misses", 0) for c in cache_by_worker.values())
@@ -1070,6 +1604,18 @@ def _cmd_fleet(root: str, args) -> int:
                       + (f" cache_corrupt={corrupt}" if corrupt else ""))
     if extras:
         print("  " + " ".join(extras))
+    nodes = status.get("nodes", {})
+    if nodes:
+        print(f"{'NODE':12s} {'STATE':10s} {'SEQ':>6s} {'ALIVE':>6s} "
+              f"WORKERS/SUBTREE")
+        for nid, n in sorted(nodes.items()):
+            sub = n.get("subtree", {})
+            members = ",".join(n.get("workers", [])) or "-"
+            if sub.get("alive"):
+                members += f" (subtree alive={len(sub['alive'])})"
+            print(f"{nid:12s} {n.get('state', '?'):10s} "
+                  f"{n.get('last_seq', 0):>6d} "
+                  f"{('yes' if n.get('alive') else 'no'):>6s} {members}")
     print(f"{'WORKER':12s} {'STATE':10s} {'QUARANTINED':12s} TRANSITIONS")
     for wid, h in sorted(status.get("health", {}).items()):
         print(f"{wid:12s} {h['state']:10s} "
@@ -1092,6 +1638,9 @@ def _main_bpftool(argv: list[str]) -> int:
                     help="default: global if aggregated, else device")
     mp.add_argument("--worker", help="worker id for device/host sections")
     mp.add_argument("-n", "--top-n", type=int, default=10)
+    mp.add_argument("--shard", type=int, default=None,
+                    help="read one keyspace partition of the sharded "
+                         "global hash views instead of a section")
     mp.add_argument("--json", action="store_true")
 
     pp = sub.add_parser("prog",
@@ -1130,6 +1679,31 @@ def _main_bpftool(argv: list[str]) -> int:
                     help="poll cadence (default: AggregatorConfig."
                          "poll_interval)")
     ag.add_argument("--once", action="store_true")
+    ag.add_argument("--tree", action="store_true",
+                    help="hierarchical aggregation: group workers under "
+                         "node-local aggregators (one process drives the "
+                         "whole tree; use `node run` for one-process-per-"
+                         "node fleets)")
+    ag.add_argument("--fan-in", type=int, default=4,
+                    help="workers (or child nodes) per node aggregator")
+    ag.add_argument("--depth", type=int, default=1,
+                    help="levels of node aggregators below the root")
+    ag.add_argument("--shards", type=int, default=None,
+                    help="also publish the global hash views partitioned "
+                         "into K keyspace shards (map ... --shard K)")
+
+    nd = sub.add_parser("node", help="node-level aggregators (tree levels)")
+    nd.add_argument("action", choices=("run", "ls", "rm"))
+    nd.add_argument("node_id", nargs="?")
+    nd.add_argument("--workers", help="comma-separated worker group")
+    nd.add_argument("--children", help="comma-separated child node ids")
+    nd.add_argument("--parent", help="parent node id (default: the root)")
+    nd.add_argument("--watch", type=float, default=None)
+    nd.add_argument("--once", action="store_true")
+    nd.add_argument("--no-device-fold", action="store_true",
+                    help="use the numpy fold twins instead of the jitted "
+                         "device reductions")
+    nd.add_argument("--json", action="store_true")
 
     fl = sub.add_parser("fleet", help="fleet health / failure introspection")
     fl.add_argument("action", choices=("health",))
@@ -1146,8 +1720,20 @@ def _main_bpftool(argv: list[str]) -> int:
         return _cmd_attach(args.shm_dir, args)
     if args.cmd == "detach":
         return _cmd_detach(args.shm_dir, args)
+    if args.cmd == "node":
+        return _cmd_node(args.shm_dir, args)
     if args.cmd == "agg":
-        Aggregator(args.shm_dir).loop(watch=args.watch, once=args.once)
+        cfg = AggregatorConfig()
+        if args.shards:
+            cfg.hash_shards = args.shards
+        if args.tree:
+            from .treeagg import TreeAggregator
+            TreeAggregator(args.shm_dir, fan_in=args.fan_in,
+                           depth=args.depth, config=cfg).loop(
+                watch=args.watch, once=args.once)
+        else:
+            Aggregator(args.shm_dir, config=cfg).loop(
+                watch=args.watch, once=args.once)
         return 0
     return 2            # pragma: no cover - argparse enforces choices
 

@@ -21,8 +21,16 @@ Hook points (ctx keys in parentheses):
     agg:post_publish      global view published, journal not yet written
     agg:pre_journal       about to persist the fold journal
     agg:cycle_end         cycle complete, journal durable (cycle)
+    node:pre_emit         node aggregator about to serialize + commit one
+                          delta batch to its stream (node, seq, who)
+    node:post_commit      delta batch durable on the stream, head bumped,
+                          journal not yet written (node, seq, path, who)
     cache:post_store      AOT artifact payload + CRC meta just written to
                           the artifact cache (path, key)
+
+All agg:* points carry ``who`` (the aggregator identity: ``"global"`` for
+the root, the node id for a NodeAggregator), so a tree chaos schedule can
+target one level of the tree without perturbing the others.
 
 Fault classes (each has a counter, asserted by the chaos tests):
 
@@ -41,6 +49,12 @@ Fault classes (each has a counter, asserted by the chaos tests):
     corrupt_artifact  scribble bytes into a stored cache artifact AFTER its
                       CRC meta was written — CRC-detectable on read, so the
                       cache must degrade to recompile, never serve it
+    node_crash        raise InjectedCrash at a seeded node:* boundary point
+                      (the emit/commit window of a node aggregator)
+    stream_corrupt    scribble bytes into a committed delta batch AFTER its
+                      CRC was embedded — the parent must detect it
+                      (StreamCorruption) and count it as stream loss, never
+                      fold a torn batch
 """
 from __future__ import annotations
 
@@ -53,7 +67,8 @@ from contextlib import contextmanager
 import numpy as np
 
 KINDS = ("torn_publish", "stuck_odd", "corrupt_snapshot", "kill_worker",
-         "daemon_crash", "pid_reuse", "slow_worker", "corrupt_artifact")
+         "daemon_crash", "pid_reuse", "slow_worker", "corrupt_artifact",
+         "node_crash", "stream_corrupt")
 
 EIO = 5            # injected errno for syscall drills (override value -EIO)
 
@@ -116,12 +131,19 @@ class FaultPlan(FaultHooks):
                process SIGKILLs itself (workers install this)
     crash_at   1-based occurrence of any agg:* point at which InjectedCrash
                is raised (the daemon-crash schedule)
+    crash_who  restrict crash_at / node_crash_at counting to agg:*/node:*
+               points fired by this aggregator identity ("global" or a node
+               id); None counts every aggregator — the flat behaviour
+    node_crash_at  1-based occurrence of any node:* point at which
+               InjectedCrash is raised (the node emit/commit window)
     counter_file  path the counters are flushed to before any destructive
                action (SIGKILL survives no in-process assertion)
     """
 
     def __init__(self, seed: int = 0, rates: dict | None = None, *,
                  kill_at: int | None = None, crash_at: int | None = None,
+                 crash_who: str | None = None,
+                 node_crash_at: int | None = None,
                  slow_s: float = 0.002, corrupt_nbytes: int = 8,
                  counter_file: str | None = None):
         self.rng = np.random.default_rng(seed)
@@ -131,12 +153,15 @@ class FaultPlan(FaultHooks):
             raise ValueError(f"unknown fault kind(s): {sorted(unknown)}")
         self.kill_at = kill_at
         self.crash_at = crash_at
+        self.crash_who = crash_who
+        self.node_crash_at = node_crash_at
         self.slow_s = slow_s
         self.corrupt_nbytes = corrupt_nbytes
         self.counter_file = counter_file
         self.counters: dict[str, int] = {k: 0 for k in KINDS}
         self.points: dict[str, int] = {}
         self._agg_seen = 0
+        self._node_seen = 0
         self._publish_begins = 0
 
     # ------------------------------------------------------------------ roll
@@ -163,11 +188,29 @@ class FaultPlan(FaultHooks):
     def fire(self, point: str, **ctx) -> None:
         self.points[point] = self.points.get(point, 0) + 1
         if point.startswith("agg:"):
+            if self.crash_who is not None and \
+                    ctx.get("who", "global") != self.crash_who:
+                return
             self._agg_seen += 1
             if self.crash_at is not None and self._agg_seen == self.crash_at:
                 self._count("daemon_crash")
                 self.flush_counters()
                 raise InjectedCrash(f"{point} (occurrence {self._agg_seen})")
+            return
+        if point.startswith("node:"):
+            if self.crash_who is not None and \
+                    ctx.get("who", ctx.get("node")) != self.crash_who:
+                return
+            self._node_seen += 1
+            if self.node_crash_at is not None and \
+                    self._node_seen == self.node_crash_at:
+                self._count("node_crash")
+                self.flush_counters()
+                raise InjectedCrash(f"{point} (occurrence {self._node_seen})")
+            if point == "node:post_commit" and self._roll("stream_corrupt"):
+                self._scribble_file(ctx["path"])
+                self._count("stream_corrupt")
+                self.flush_counters()
             return
         if point == "cache:post_store":
             if self._roll("corrupt_artifact"):

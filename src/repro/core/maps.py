@@ -679,6 +679,193 @@ def n_ringbuf_tagged(st, wid, lo: int = 0, step_lane: int | None = None
     return out, head
 
 
+# ---- tree aggregation plane (DESIGN.md §15): vectorized content twins,
+# ---- batched group folds, and hash keyspace sharding
+
+_EMPTY_I64 = np.zeros(0, np.int64)
+
+
+def n_hash_content(st) -> tuple[np.ndarray, np.ndarray]:
+    """Vectorized twin of n_hash_items: the lookup-visible content of a hash
+    table as sorted parallel arrays (keys, values) — no per-entry Python
+    loop, so a node aggregator can extract its whole group's content at
+    numpy speed. dict(zip(*n_hash_content(st))) == n_hash_items(st)."""
+    kt = np.asarray(st["keys"], np.int64)
+    u = np.asarray(st["used"], np.int64)
+    occupied = u == 1
+    nonempty = u != 0
+    n = kt.shape[0]
+    if not occupied.any():
+        return _EMPTY_I64, _EMPTY_I64
+    j = np.arange(n)
+    start = _np_hash_idx_vec(kt, n)
+    dist = (j - start) % n
+    reach = occupied & (dist < _np_next_free_dist(nonempty)[start])
+    idx = np.nonzero(reach)[0]
+    if idx.size == 0:
+        return _EMPTY_I64, _EMPTY_I64
+    # duplicate keys (broken chains) resolve to the smallest probe
+    # distance, exactly like n_hash_slots' sequential scan
+    order = np.lexsort((dist[idx], kt[idx]))
+    sk = kt[idx][order]
+    first = np.concatenate([[True], sk[1:] != sk[:-1]])
+    sel = idx[order][first]
+    return kt[sel], np.asarray(st["values"], np.int64)[sel]
+
+
+def n_hash_delta_arrays(cur_k: np.ndarray, cur_v: np.ndarray,
+                        base_k: np.ndarray, base_v: np.ndarray
+                        ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Vectorized twin of n_hash_delta over sorted content arrays:
+    (add_keys, add_deltas, del_keys). New keys are included even at delta 0
+    (inserts must propagate); all outputs sorted by key."""
+    cur_k = np.asarray(cur_k, np.int64)
+    base_k = np.asarray(base_k, np.int64)
+    if base_k.size == 0:
+        return cur_k, np.asarray(cur_v, np.int64), _EMPTY_I64
+    pos = np.searchsorted(base_k, cur_k)
+    posc = np.minimum(pos, base_k.size - 1)
+    in_base = (pos < base_k.size) & (base_k[posc] == cur_k)
+    with np.errstate(over="ignore"):
+        d = np.asarray(cur_v, np.int64) - \
+            np.where(in_base, np.asarray(base_v, np.int64)[posc], 0)
+    keep = (d != 0) | ~in_base
+    if cur_k.size == 0:
+        return _EMPTY_I64, _EMPTY_I64, base_k
+    bpos = np.searchsorted(cur_k, base_k)
+    bposc = np.minimum(bpos, cur_k.size - 1)
+    in_cur = (bpos < cur_k.size) & (cur_k[bposc] == base_k)
+    return cur_k[keep], d[keep], base_k[~in_cur]
+
+
+def n_hash_coalesce(keys: np.ndarray, deltas: np.ndarray
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """Commutative coalesce of a fetch-add batch: per-key delta sums, keys
+    sorted. Zero-sum keys are KEPT — an insert at delta 0 must still
+    propagate up the tree. The numpy twin of j_hash_coalesce."""
+    keys = np.asarray(keys, np.int64)
+    deltas = np.asarray(deltas, np.int64)
+    if keys.size == 0:
+        return _EMPTY_I64, _EMPTY_I64
+    uk, inv = np.unique(keys, return_inverse=True)
+    ud = np.zeros(uk.size, np.int64)
+    with np.errstate(over="ignore"):
+        np.add.at(ud, inv, deltas)
+    return uk, ud
+
+
+@jax.jit
+def _j_coalesce(keys, deltas):
+    order = jnp.argsort(keys, stable=True)
+    ks, ds = keys[order], deltas[order]
+    first = jnp.concatenate(
+        [jnp.ones(1, bool), ks[1:] != ks[:-1]]) if ks.shape[0] else \
+        jnp.ones(0, bool)
+    gid = jnp.cumsum(first.astype(jnp.int64)) - 1
+    sums = jnp.zeros_like(ds).at[gid].add(ds)
+    out_k = jnp.zeros_like(ks).at[gid].set(ks)
+    return out_k, sums, first.sum()
+
+
+def j_hash_coalesce(keys, deltas) -> tuple[np.ndarray, np.ndarray]:
+    """Device-side coalesce (sort + segment-sum) — one jitted reduction for
+    a whole worker group's concatenated fetch-add batch. Returns compacted
+    host arrays; bit-identical to n_hash_coalesce."""
+    keys = np.asarray(keys, np.int64)
+    deltas = np.asarray(deltas, np.int64)
+    if keys.size == 0:
+        return _EMPTY_I64, _EMPTY_I64
+    # pad to a power-of-two bucket with (keys[0], 0) no-op entries: the
+    # padding folds into an already-present group (delta 0, no phantom
+    # zero-sum key is born), while the bucketed shape keeps the jit cache
+    # warm — otherwise every cycle's distinct delta count recompiles
+    n = keys.size
+    cap = max(16, 1 << (n - 1).bit_length())
+    pk = np.full(cap, keys[0], np.int64)
+    pk[:n] = keys
+    pd = np.zeros(cap, np.int64)
+    pd[:n] = deltas
+    out_k, sums, ng = _j_coalesce(jnp.asarray(pk), jnp.asarray(pd))
+    ng = int(ng)
+    return np.asarray(out_k[:ng]), np.asarray(sums[:ng])
+
+
+@jax.jit
+def _j_stack_fold(acc, curs, bases):
+    return acc + jnp.sum(curs - bases, axis=0)
+
+
+def j_group_summary_fold(spec: MapSpec, acc: dict, cur_stack: dict,
+                         base_stack: dict) -> dict:
+    """One batched device reduction folds a whole worker group's summary
+    deltas: acc[f] + sum_w(cur[w][f] - base[w][f]). cur_stack/base_stack
+    hold (W, *field_shape) arrays; returns new acc field arrays (host)."""
+    out = {}
+    for f in SUMMARY_FIELDS[spec.kind]:
+        out[f] = np.asarray(_j_stack_fold(
+            jnp.asarray(acc[f]), jnp.asarray(cur_stack[f]),
+            jnp.asarray(base_stack[f])))
+    return out
+
+
+def n_group_summary_fold(spec: MapSpec, acc: dict, cur_stack: dict,
+                         base_stack: dict) -> dict:
+    """numpy twin of j_group_summary_fold (wrapping i64)."""
+    out = {}
+    for f in SUMMARY_FIELDS[spec.kind]:
+        with np.errstate(over="ignore"):
+            out[f] = acc[f] + np.sum(
+                np.asarray(cur_stack[f], np.int64)
+                - np.asarray(base_stack[f], np.int64), axis=0)
+    return out
+
+
+@jax.jit
+def _j_stack_fold_tree(tree):
+    return jax.tree_util.tree_map(
+        lambda t: t[0] + jnp.sum(t[1] - t[2], axis=0), tree,
+        is_leaf=lambda x: isinstance(x, tuple))
+
+
+def j_group_summary_fold_multi(stacks: dict) -> dict:
+    """ONE device dispatch folds every summary spec's worker-group delta
+    at once: stacks[name][field] = (acc, cur_stack, base_stack) with
+    (W, *shape) stacks. Returns {name: {field: host array}}. Bit-identical
+    to per-spec j_group_summary_fold; the pytree batching exists because
+    per-field dispatch overhead dominated the node poll at fleet scale."""
+    out = _j_stack_fold_tree(stacks)
+    return {n: {f: np.asarray(a) for f, a in d.items()}
+            for n, d in out.items()}
+
+
+def n_group_summary_fold_multi(stacks: dict) -> dict:
+    """numpy twin of j_group_summary_fold_multi (wrapping i64)."""
+    out: dict = {}
+    for n, d in stacks.items():
+        out[n] = {}
+        for f, (acc, cur, base) in d.items():
+            with np.errstate(over="ignore"):
+                out[n][f] = np.asarray(acc, np.int64) + np.sum(
+                    np.asarray(cur, np.int64)
+                    - np.asarray(base, np.int64), axis=0)
+    return out
+
+
+def n_shard_of_keys(keys: np.ndarray, n: int, n_shards: int) -> np.ndarray:
+    """Keyspace partition for sharded global views: a key's shard is its
+    home slot (the same splitmix64 probe start every lookup uses) mod the
+    shard count — every key lands in exactly one shard, and co-homed keys
+    stay together."""
+    keys = np.asarray(keys, np.int64)
+    if keys.size == 0:
+        return _EMPTY_I64
+    return (_np_hash_idx_vec(keys, n) % n_shards).astype(np.int64)
+
+
+def n_shard_of_key(key: int, n: int, n_shards: int) -> int:
+    return _np_hash_idx(key, n) % n_shards
+
+
 def ringbuf_merge_global(spec: MapSpec, tagged: list, total: int) -> dict:
     """Build the global ringbuf state from every worker's retained tagged
     records. The merged order sorts by (step, wid, seq); the global state is

@@ -677,15 +677,19 @@ class BpftimeRuntime:
         return map_states, aux
 
     # ---------------------------------------------------------------- shm
-    def setup_shm(self, root: str, worker_id: str | None = None):
+    def setup_shm(self, root: str, worker_id: str | None = None,
+                  group: str | None = None):
         """Join the shm control plane. worker_id=None keeps the seed
         single-process layout; a worker id places this process's device
         snapshots, host maps, and control queue under
         `<root>/workers/<wid>/` so a fleet daemon can aggregate N such
-        processes into one global view (DESIGN.md §10)."""
+        processes into one global view (DESIGN.md §10). `group` names the
+        node aggregator that folds this worker in a hierarchical fleet
+        (DESIGN.md §15) — the node claims its group members dynamically,
+        so the worker may join before or after its node boots."""
         from .shm import ShmRegion
         self.shm = ShmRegion.create(root, self.map_specs,
-                                    worker_id=worker_id)
+                                    worker_id=worker_id, group=group)
         # host maps become shm-backed (live for the daemon)
         for spec in self.map_specs:
             self.host_maps[spec.name] = self.shm.host[spec.name]

@@ -24,6 +24,7 @@ import numpy as np
 def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
                  runtime=None, shm_dir: str | None = None,
                  worker_id: str | None = None,
+                 worker_group: str | None = None,
                  ckpt_dir: str | None = None, save_every: int = 0,
                  probe_mode: str = "scan", seq_len: int = 64,
                  batch: int = 8, microbatch: int = 0, log_every: int = 10,
@@ -46,8 +47,10 @@ def run_training(arch: str, *, steps: int = 20, smoke: bool = True,
     if runtime is not None and shm_dir:
         # worker_id=None keeps the single-process layout; with an id, this
         # trainer joins <shm_dir>/workers/<wid>/ so a fleet daemon can
-        # aggregate several trainers into one global map view
-        runtime.setup_shm(shm_dir, worker_id=worker_id)
+        # aggregate several trainers into one global map view; worker_group
+        # additionally names the node aggregator that folds this trainer in
+        # a hierarchical fleet (DESIGN.md §15)
+        runtime.setup_shm(shm_dir, worker_id=worker_id, group=worker_group)
 
     data = SyntheticDataset(cfg, shape, tcfg, runtime=runtime)
     state = init_train_state(jax.random.PRNGKey(0), cfg, tcfg, runtime)
@@ -150,6 +153,10 @@ def main(argv=None):
     ap.add_argument("--worker-id",
                     help="join the fleet layout as <shm>/workers/<id>/ "
                          "(multi-trainer aggregation, DESIGN.md §10)")
+    ap.add_argument("--worker-group",
+                    help="aggregation group: the node aggregator (`node "
+                         "run <group>`) that folds this trainer in a "
+                         "hierarchical fleet (DESIGN.md §15)")
     ap.add_argument("--ckpt")
     ap.add_argument("--save-every", type=int, default=0)
     ap.add_argument("--cache",
@@ -161,7 +168,8 @@ def main(argv=None):
     rt = BpftimeRuntime() if (args.shm or args.cache) else None
     state, hist = run_training(
         args.arch, steps=args.steps, smoke=args.smoke, runtime=rt,
-        shm_dir=args.shm, worker_id=args.worker_id, ckpt_dir=args.ckpt,
+        shm_dir=args.shm, worker_id=args.worker_id,
+        worker_group=args.worker_group, ckpt_dir=args.ckpt,
         save_every=args.save_every, batch=args.batch, seq_len=args.seq,
         cache_dir=args.cache)
     print(f"final loss {hist[-1]['loss']:.4f} after {len(hist)} steps")

@@ -3,8 +3,9 @@ process (subprocess) against a live shm region — the paper's bpftime-daemon
 story, not just same-process API calls — plus the live program-table
 round trip (request_load_attach(live=True) -> table update -> detach)."""
 import os
-import subprocess
 import sys
+
+import waiters
 
 import jax
 import jax.numpy as jnp
@@ -30,11 +31,10 @@ def test_daemon_subprocess_reads_live_maps(tmp_path):
     rt.publish(dev)
 
     env = dict(os.environ, PYTHONPATH="src")
-    out = subprocess.run(
+    out = waiters.run_cli(
         [sys.executable, "-m", "repro.core.daemon",
          str(tmp_path / "shm"), "--once"],
-        capture_output=True, text=True, env=env, cwd=os.getcwd(),
-        timeout=120)
+        env=env, cwd=os.getcwd())
     assert out.returncode == 0, out.stderr[-2000:]
     assert "counters" in out.stdout
     assert "{1: 99}" in out.stdout          # device snapshot visible
@@ -64,11 +64,10 @@ def test_daemon_subprocess_injects_program(tmp_path):
     objpath.write_text(obj.to_json())
 
     env = dict(os.environ, PYTHONPATH="src")
-    out = subprocess.run(
+    out = waiters.run_cli(
         [sys.executable, "-m", "repro.core.daemon",
          str(tmp_path / "shm"), "--attach", str(objpath)],
-        capture_output=True, text=True, env=env, cwd=os.getcwd(),
-        timeout=120)
+        env=env, cwd=os.getcwd())
     assert out.returncode == 0, out.stderr[-2000:]
 
     applied = rt.poll_control()
@@ -273,11 +272,10 @@ def test_daemon_cli_live_inject(tmp_path):
     objpath.write_text(obj.to_json())
 
     env = dict(os.environ, PYTHONPATH="src")
-    out = subprocess.run(
+    out = waiters.run_cli(
         [sys.executable, "-m", "repro.core.daemon",
          str(tmp_path / "shm"), "--attach", str(objpath), "--live"],
-        capture_output=True, text=True, env=env, cwd=os.getcwd(),
-        timeout=120)
+        env=env, cwd=os.getcwd())
     assert out.returncode == 0, out.stderr[-2000:]
     assert "live" in out.stdout
 

@@ -1,0 +1,206 @@
+"""Sharded global hash views (DESIGN.md §15): property + stress tests.
+
+Each shard is its own seqlocked + CRC'd mini-section holding exactly the
+keys whose home slot is congruent to it. Invariants pinned here:
+
+  * partition completeness: the shards are a disjoint cover of the global
+    table's reachable content, with every key in the shard
+    n_shard_of_key says (the reader's routing function);
+  * per-shard torn-read contract under a republish storm: observed seq
+    always even, payload never mixed, retry budget never approached;
+  * isolation: the aggregator republishes ONLY dirty shards, so a reader
+    polling shard A never retries against traffic on shard B;
+  * corruption detect-and-skip: bytes flipped after the CRC was written
+    surface as SnapshotCorruption, never as a silently wrong table.
+"""
+import multiprocessing as mp
+import os
+
+import numpy as np
+import pytest
+
+import waiters
+from repro.core import daemon as D, maps as M, shm as SH
+from test_shm_merge_differential import (SPECS, apply_event, gen_tape)
+
+HSH = next(s for s in SPECS if s.kind == M.MapKind.HASH)
+
+
+def _fleet_with_shards(root, tape, n_workers, n_shards):
+    regions = {w: SH.ShmRegion.create(root, SPECS, worker_id=f"w{w}")
+               for w in range(n_workers)}
+    states = {w: M.init_states(SPECS, np) for w in range(n_workers)}
+    for step, w, _, ev in tape:
+        apply_event(states[w], ev, step)
+    for w in range(n_workers):
+        regions[w].publish_device(states[w])
+    agg = D.Aggregator(root,
+                       config=D.AggregatorConfig(hash_shards=n_shards))
+    agg.poll_once()
+    return agg, regions, states
+
+
+@pytest.mark.parametrize("n_shards", [1, 2, 4, 7])
+@pytest.mark.parametrize("seed", [0, 3])
+def test_shards_partition_global_content(tmp_path, n_shards, seed):
+    root = str(tmp_path / "shm")
+    rng = np.random.default_rng(seed)
+    tape = gen_tape(rng, 3, n_events=150,
+                    ops=("hash_add", "hash_set", "hash_del"))
+    agg, _, _ = _fleet_with_shards(root, tape, 3, n_shards)
+
+    shards = SH.HashShards.attach(root)
+    want = M.n_hash_items(agg.hash_tbl[HSH.name])
+    union: dict = {}
+    for s in range(n_shards):
+        st, seq, retries = shards.snapshot(HSH.name, s)
+        assert seq % 2 == 0 and retries == 0
+        items = M.n_hash_items(st)
+        for k, v in items.items():
+            # disjointness + routing: each key in exactly the shard the
+            # reader-side routing function names
+            assert k not in union
+            assert M.n_shard_of_key(k, HSH.max_entries, n_shards) == s
+            union[k] = v
+    assert union == want            # completeness
+
+
+def test_only_dirty_shards_republish(tmp_path):
+    """Isolation: touching keys of one shard must not bump the seqlock of
+    any other shard (a polling reader on a quiet shard sees zero write
+    traffic)."""
+    root = str(tmp_path / "shm")
+    n_shards = 4
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    # one key per shard
+    keys = {}
+    for k in range(200):
+        s = M.n_shard_of_key(k, HSH.max_entries, n_shards)
+        if s not in keys:
+            keys[s] = k
+        if len(keys) == n_shards:
+            break
+    assert len(keys) == n_shards
+    for s, k in keys.items():
+        M.n_hash_update(st["hsh"], k, 1)
+    region.publish_device(st)
+    agg = D.Aggregator(root,
+                       config=D.AggregatorConfig(hash_shards=n_shards))
+    agg.poll_once()
+    shards = SH.HashShards.attach(root)
+    seqs0 = {s: shards.snapshot(HSH.name, s)[1] for s in range(n_shards)}
+    publishes0 = agg.shard_publishes
+
+    # touch ONLY shard 0's key
+    M.n_hash_update(st["hsh"], keys[0], 5)
+    region.publish_device(st)
+    agg.poll_once()
+    seqs1 = {s: shards.snapshot(HSH.name, s)[1] for s in range(n_shards)}
+    assert seqs1[0] > seqs0[0]
+    for s in range(1, n_shards):
+        assert seqs1[s] == seqs0[s], f"quiet shard {s} republished"
+    assert agg.shard_publishes == publishes0 + 1
+
+    # a no-op cycle republishes nothing at all
+    agg.poll_once()
+    assert agg.shard_publishes == publishes0 + 1
+    assert {s: shards.snapshot(HSH.name, s)[1]
+            for s in range(n_shards)} == seqs1
+
+
+def test_shard_corruption_detected_never_served(tmp_path):
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    M.n_hash_update(st["hsh"], 3, 9)
+    region.publish_device(st)
+    agg = D.Aggregator(root, config=D.AggregatorConfig(hash_shards=2))
+    agg.poll_once()
+    s = M.n_shard_of_key(3, HSH.max_entries, 2)
+    shards = SH.HashShards.attach(root)
+    st0, seq0, _ = shards.snapshot(HSH.name, s)
+    assert M.n_hash_items(st0) == {3: 9}
+
+    # flip payload bytes AFTER the CRC was written (consistent seq):
+    # corrupt through the file, the reader's attach is read-only
+    d = os.path.join(SH.HashShards._dir(root), HSH.name, str(s))
+    fn = next(f for f in sorted(os.listdir(d))
+              if f.endswith(".npy") and not f.startswith("."))
+    arr = np.lib.format.open_memmap(os.path.join(d, fn), mode="r+")
+    arr.reshape(-1).view(np.uint8)[0] ^= 0xA5
+    arr.flush()
+
+    with pytest.raises(SH.SnapshotCorruption):
+        shards.snapshot(HSH.name, s)
+
+
+# --------------------------------------------------------------------------
+# republish storm: writers vs polling readers (real processes)
+# --------------------------------------------------------------------------
+
+N_READS = 150
+RETRY_BUDGET = 2000
+
+
+def _storm_writer(root, stop_file):
+    """Republish every shard as fast as possible; iteration i writes value
+    i to every key, so any torn read surfaces as a mixed-value table."""
+    shards = SH.HashShards.attach(root)
+    # writer needs r+ sections: reopen in create mode over the same files
+    shards = SH.HashShards.create(root, SH.read_meta_specs(root),
+                                  shards.n_shards)
+    n_shards = shards.n_shards
+    by_shard = {s: [] for s in range(n_shards)}
+    for k in range(64):
+        s = M.n_shard_of_key(k, HSH.max_entries, n_shards)
+        if len(by_shard[s]) < 2:
+            by_shard[s].append(k)
+    i = 0
+    while not os.path.exists(stop_file):
+        i += 1
+        for s in range(n_shards):
+            state = M.n_hash_canonical(
+                HSH, {k: i for k in by_shard[s]})
+            shards.publish(HSH.name, s, state)
+
+
+@pytest.mark.slow
+def test_no_torn_shard_reads_under_republish_storm(tmp_path):
+    root = str(tmp_path / "shm")
+    SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    n_shards = 3
+    SH.HashShards.create(root, SPECS, n_shards)
+    stop = str(tmp_path / "stop")
+    ctx = mp.get_context("spawn")
+    p = ctx.Process(target=_storm_writer, args=(root, stop))
+    p.start()
+    try:
+        shards = SH.HashShards.attach(root)
+        waiters.wait_for(
+            lambda: any(shards.snapshot(HSH.name, s, retries=RETRY_BUDGET)[1]
+                        > 0 for s in range(n_shards)),
+            msg="first shard publish")
+        max_retries = 0
+        last = {s: 0 for s in range(n_shards)}
+        for _ in range(N_READS):
+            for s in range(n_shards):
+                st, seq, retries = shards.snapshot(
+                    HSH.name, s, retries=RETRY_BUDGET)
+                assert seq % 2 == 0, f"torn shard read: odd seq {seq}"
+                vals = set(M.n_hash_items(st).values())
+                assert len(vals) <= 1, \
+                    f"torn shard read: mixed values {vals}"
+                if vals:
+                    cur = vals.pop()
+                    assert cur >= last[s], f"shard {s} went backwards"
+                    last[s] = cur
+                max_retries = max(max_retries, retries)
+        assert any(v > 0 for v in last.values()), "never saw a publish"
+        assert max_retries < RETRY_BUDGET // 4, \
+            f"retry pressure too high: {max_retries}"
+    finally:
+        with open(stop, "w") as f:
+            f.write("stop")
+        exitcode = waiters.wait_for_exit(p)
+    assert exitcode == 0

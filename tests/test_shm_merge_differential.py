@@ -257,8 +257,8 @@ def _mark_worker_dead(root: str, wid: str) -> dict:
         info = json.load(f)
     old = dict(info)
     info["pid"] = 2 ** 22 + 11  # above default pid_max: never a live pid
-    with open(p, "w") as f:
-        json.dump(info, f)
+    # atomic replace (fresh inode): the registry parse cache keys on stat
+    SH._atomic_json(p, info)
     return old
 
 
@@ -316,8 +316,7 @@ def test_seq_regression_never_folds_negative_delta(tmp_path):
     with open(p) as f:
         new_info = json.load(f)
     old_info["pid"] = 2 ** 22 + 11
-    with open(p, "w") as f:
-        json.dump(old_info, f)
+    SH._atomic_json(p, old_info)
 
     status = agg.poll_once()            # harvest forfeited, not -100'd
     assert status["dead"] == ["w0"]
@@ -325,8 +324,7 @@ def test_seq_regression_never_folds_negative_delta(tmp_path):
     assert M.n_hash_items(agg.hash_tbl["hsh"]) == {3: 7}
 
     # the restart completes: worker.json now names the live new boot
-    with open(p, "w") as f:
-        json.dump(new_info, f)
+    SH._atomic_json(p, new_info)
     st2 = M.init_states(SPECS, np)
     st2["arr"]["values"][0] = 1
     region2.publish_device(st2)

@@ -16,11 +16,11 @@ tier-1.
 import multiprocessing as mp
 import os
 import signal
-import time
 
 import numpy as np
 import pytest
 
+import waiters
 from repro.core import daemon as D, maps as M, shm as SH
 
 SPECS = [
@@ -53,15 +53,7 @@ def _victim_main(root: str, specs, ready_file: str) -> None:
     region.publish_device(st)
     with open(ready_file, "w") as f:
         f.write("ok")
-    time.sleep(600)          # parent SIGKILLs us long before this
-
-
-def _wait_for(pred, timeout=60.0, msg="condition"):
-    t0 = time.monotonic()
-    while not pred():
-        if time.monotonic() - t0 > timeout:
-            raise TimeoutError(f"timed out waiting for {msg}")
-        time.sleep(0.02)
+    waiters.park()           # parent SIGKILLs us
 
 
 @pytest.mark.slow
@@ -72,10 +64,12 @@ def test_no_torn_reads_under_republish_storm(tmp_path):
     p = ctx.Process(target=_writer_main, args=(root, SPECS, stop))
     p.start()
     try:
-        _wait_for(lambda: "w0" in SH.list_workers(root), msg="worker dir")
+        waiters.wait_for(lambda: "w0" in SH.list_workers(root),
+                         msg="worker dir")
         region = SH.ShmRegion.attach(root, mode="r", worker_id="w0")
         # wait until the writer is actually publishing
-        _wait_for(lambda: int(region.seq[0]) > 2, msg="first publishes")
+        waiters.wait_for(lambda: int(region.seq[0]) > 2,
+                         msg="first publishes")
 
         max_retries = 0
         last = {"arr": 0, "hist": 0}
@@ -101,11 +95,8 @@ def test_no_torn_reads_under_republish_storm(tmp_path):
     finally:
         with open(stop, "w") as f:
             f.write("stop")
-        p.join(timeout=60)
-        if p.is_alive():          # pragma: no cover - cleanup path
-            p.kill()
-            p.join()
-    assert p.exitcode == 0
+        exitcode = waiters.wait_for_exit(p)
+    assert exitcode == 0
 
 
 @pytest.mark.slow
@@ -116,7 +107,7 @@ def test_killed_worker_detected_and_excluded(tmp_path):
     p = ctx.Process(target=_victim_main, args=(root, SPECS, ready))
     p.start()
     try:
-        _wait_for(lambda: os.path.exists(ready), msg="victim publish")
+        waiters.wait_for_path(ready)
         agg = D.Aggregator(root)
         status = agg.poll_once()
         assert status["alive"] == ["victim"] and status["dead"] == []
@@ -124,7 +115,7 @@ def test_killed_worker_detected_and_excluded(tmp_path):
         assert int(g.snapshot("arr")["values"][7]) == 123
 
         os.kill(p.pid, signal.SIGKILL)
-        p.join(timeout=60)
+        waiters.wait_for_exit(p)
         status = agg.poll_once()
         # dead: harvested once, then excluded from polling forever
         assert status["dead"] == ["victim"] and status["alive"] == []

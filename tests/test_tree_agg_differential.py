@@ -1,0 +1,279 @@
+"""Differential testing of HIERARCHICAL aggregation (DESIGN.md §15).
+
+The tree (worker -> node-local aggregator -> global) must be observably
+equivalent to the flat plane: for any tape and any topology, the published
+global view is bit-identical to the flat sequential oracle from
+test_shm_merge_differential — same summary sums, same canonical hash
+tables, same (step, wid, pos) ringbuf interleave. The per-kind merge twins
+were designed commutative and associative precisely so they reassociate
+into a tree; these tests are the proof obligation for that claim.
+
+Also covers the tree-specific failure rules: a worker restarting mid-tree
+(its node resets the baseline, the old contribution survives), and a dead
+node whose unconsumed stream batches the parent harvests before retiring
+it (workers orphaned, re-admission on a new boot keeps the cursor).
+"""
+import numpy as np
+import pytest
+
+from repro.core import daemon as D, maps as M, shm as SH
+from repro.core.treeagg import NodeAggregator, TreeAggregator, plan_tree
+from test_shm_merge_differential import (
+    SPECS, apply_event, assert_global_matches_oracle, gen_tape,
+    oracle_states)
+
+
+def run_tree(root: str, tape: list[tuple], n_workers: int, fan_in: int,
+             depth: int, rounds: int = 3, device_fold: bool = True) -> dict:
+    """run_fleet's tree twin: workers apply their subtapes in `rounds`
+    publish chunks with a full tree cycle (leaves first, then the root)
+    between chunks, exercising incremental delta-batch extraction at every
+    level."""
+    # zero-padded ids: the ringbuf interleave key is (step, wid, pos) with
+    # wid compared as the REGISTERED string — w02 < w10 keeps the string
+    # order equal to the oracle's numeric order at any fleet size
+    regions = {w: SH.ShmRegion.create(root, SPECS, worker_id=f"w{w:02d}")
+               for w in range(n_workers)}
+    states = {w: M.init_states(SPECS, np) for w in range(n_workers)}
+    per_worker = {w: [t for t in tape if t[1] == w]
+                  for w in range(n_workers)}
+    chunks = {w: np.array_split(np.arange(len(per_worker[w])), rounds)
+              for w in range(n_workers)}
+    cfg = D.AggregatorConfig(device_fold=device_fold)
+    tree = TreeAggregator(root, fan_in=fan_in, depth=depth, config=cfg,
+                          worker_ids=[f"w{w:02d}"
+                                      for w in range(n_workers)])
+    for r in range(rounds):
+        for w in range(n_workers):
+            for i in chunks[w][r]:
+                step, _, _, ev = per_worker[w][i]
+                apply_event(states[w], ev, step)
+            regions[w].publish_device(states[w])
+        tree.poll_once()
+    return tree.poll_once()
+
+
+# --------------------------------------------------------------------------
+# random tapes x random topologies: bit-identity against the flat oracle
+# --------------------------------------------------------------------------
+
+TOPOLOGIES = [
+    # (n_workers, fan_in, depth, seed) — fan-in 2..8, depth 1..3, 4..32
+    (4, 2, 1, 0),
+    (6, 2, 3, 1),
+    (8, 3, 2, 2),
+    (12, 4, 2, 3),
+    (16, 4, 1, 4),
+    (24, 5, 2, 5),
+    (32, 8, 1, 6),
+    (32, 8, 2, 7),
+]
+
+
+@pytest.mark.parametrize("n_workers,fan_in,depth,seed", TOPOLOGIES)
+def test_tree_matches_flat_oracle(tmp_path, n_workers, fan_in, depth, seed):
+    rng = np.random.default_rng(seed)
+    tape = gen_tape(rng, n_workers, n_events=max(150, 8 * n_workers))
+    run_tree(str(tmp_path / "shm"), tape, n_workers, fan_in, depth)
+    assert_global_matches_oracle(str(tmp_path / "shm"),
+                                 oracle_states(tape))
+
+
+@pytest.mark.parametrize("ops", [
+    ("arr_add", "arr_set"),
+    ("pc_add",),
+    ("hist_obs",),
+    ("hash_add", "hash_set", "hash_del"),
+    ("rb_emit",),
+])
+@pytest.mark.parametrize("n_workers,fan_in,depth", [(8, 3, 2), (9, 2, 3)])
+def test_tree_per_kind_identity(tmp_path, ops, n_workers, fan_in, depth):
+    """Each map kind's merge twin reassociates independently: tapes
+    restricted to one kind stay bit-identical through any topology."""
+    rng = np.random.default_rng(sum(map(ord, "".join(ops))) % 997)
+    tape = gen_tape(rng, n_workers, n_events=120, ops=ops)
+    run_tree(str(tmp_path / "shm"), tape, n_workers, fan_in, depth)
+    assert_global_matches_oracle(str(tmp_path / "shm"),
+                                 oracle_states(tape))
+
+
+def test_tree_numpy_fold_twin_identical(tmp_path):
+    """device_fold=False (numpy twins) and the jitted device reductions
+    are merge twins of each other: both bit-identical to the oracle."""
+    rng = np.random.default_rng(11)
+    tape = gen_tape(rng, 8, n_events=200)
+    run_tree(str(tmp_path / "a"), tape, 8, 3, 2, device_fold=True)
+    run_tree(str(tmp_path / "b"), tape, 8, 3, 2, device_fold=False)
+    oracle = oracle_states(tape)
+    assert_global_matches_oracle(str(tmp_path / "a"), oracle)
+    assert_global_matches_oracle(str(tmp_path / "b"), oracle)
+
+
+def test_plan_tree_shapes():
+    """Topology planner invariants: every worker lands in exactly one
+    level-0 node, every node has exactly one consumer (parent node or the
+    root), no single-child chains."""
+    for nw, fi, dp in [(4, 2, 1), (32, 8, 2), (7, 3, 3), (2, 2, 3)]:
+        plan = plan_tree([f"w{i}" for i in range(nw)], fan_in=fi, depth=dp)
+        covered = [w for nd in plan["levels"][0] for w in nd["workers"]]
+        assert sorted(covered) == sorted(f"w{i}" for i in range(nw))
+        consumed = [c for nd in plan["nodes"].values()
+                    for c in nd["children"]]
+        tops = [nid for nid, nd in plan["nodes"].items()
+                if nd["parent"] is None]
+        assert sorted(consumed + tops) == sorted(plan["nodes"])
+        for lvl in plan["levels"][1:]:
+            for nd in lvl:
+                assert len(nd["children"]) >= 1
+            assert sum(len(nd["children"]) for nd in lvl) > len(lvl) \
+                or len(lvl) == 1
+
+
+# --------------------------------------------------------------------------
+# worker restart mid-tree
+# --------------------------------------------------------------------------
+
+def test_worker_restart_mid_tree_keeps_old_contribution(tmp_path):
+    """A worker rebooting under a node aggregator: the node resets that
+    worker's baseline (never subtracts the old counts), forwards only the
+    new incarnation's deltas, and the global view ends at old + new —
+    the same rule the flat plane pins, proven through a stream hop."""
+    root = str(tmp_path / "shm")
+    regions = {w: SH.ShmRegion.create(root, SPECS, worker_id=f"w{w}")
+               for w in range(4)}
+    states = {w: M.init_states(SPECS, np) for w in range(4)}
+    for w in range(4):
+        states[w]["arr"]["values"][1] = 5 + w
+        M.n_hash_update(states[w]["hsh"], 3 + 8 * w, 10 + w)
+        regions[w].publish_device(states[w])
+    tree = TreeAggregator(root, fan_in=2, depth=1,
+                          worker_ids=[f"w{w}" for w in range(4)])
+    tree.poll_once()
+    g = SH.GlobalView.attach(root)
+    assert int(g.snapshot("arr")["values"][1]) == 5 + 6 + 7 + 8
+
+    # w1 reboots: fresh boot id, zeroed maps, then publishes new counts
+    region2 = SH.ShmRegion.create(root, SPECS, worker_id="w1")
+    st2 = M.init_states(SPECS, np)
+    st2["arr"]["values"][1] = 2
+    M.n_hash_update(st2["hsh"], 11, 100)
+    region2.publish_device(st2)
+    tree.poll_once()
+    tree.poll_once()
+    assert int(g.snapshot("arr")["values"][1]) == 5 + 6 + 7 + 8 + 2
+    # key 11 (= 3 + 8*1): old incarnation set it to 11, the rebooted one
+    # to 100 — a fresh baseline makes the new content a +100 delta
+    items = M.n_hash_items(tree.root_agg.hash_tbl["hsh"])
+    assert items[11] == 11 + 100
+
+
+def test_worker_dies_under_node_contribution_stays(tmp_path):
+    """Dead-worker harvest one level down: the node harvests the final
+    snapshot, reports the worker dead in its batch, and the root's global
+    view keeps the contribution while listing the worker dead."""
+    root = str(tmp_path / "shm")
+    regions = {w: SH.ShmRegion.create(root, SPECS, worker_id=f"w{w}")
+               for w in range(4)}
+    states = {w: M.init_states(SPECS, np) for w in range(4)}
+    for w in range(4):
+        states[w]["arr"]["values"][2] = 10 * (w + 1)
+        regions[w].publish_device(states[w])
+    tree = TreeAggregator(root, fan_in=2, depth=1,
+                          worker_ids=[f"w{w}" for w in range(4)])
+    tree.poll_once()
+
+    from test_shm_merge_differential import _mark_worker_dead
+    _mark_worker_dead(root, "w2")
+    tree.poll_once()
+    status = tree.poll_once()
+    assert "w2" in status["dead"] and "w2" not in status["alive"]
+    g = SH.GlobalView.attach(root)
+    assert int(g.snapshot("arr")["values"][2]) == 10 + 20 + 30 + 40
+
+
+# --------------------------------------------------------------------------
+# dead node: harvest-only retirement
+# --------------------------------------------------------------------------
+
+def _mark_node_dead(root: str, nid: str) -> None:
+    import json
+    import os
+    p = os.path.join(SH.node_base(root, nid), "node.json")
+    with open(p) as f:
+        info = json.load(f)
+    info["pid"] = 2 ** 22 + 11
+    # atomic replace (fresh inode): the registry parse cache keys on stat
+    SH._atomic_json(p, info)
+
+
+def test_dead_node_remaining_batches_harvested(tmp_path):
+    """A node that died with committed-but-unconsumed batches: the parent
+    drains the stream to its head, folds every batch, THEN retires the
+    node (DEAD, node_gone). Nothing emitted is ever lost; nothing is
+    double-folded; the node's workers go orphaned (not silently adopted —
+    each worker has exactly one fold path)."""
+    root = str(tmp_path / "shm")
+    regions = {w: SH.ShmRegion.create(root, SPECS, worker_id=f"w{w}")
+               for w in range(2)}
+    states = {w: M.init_states(SPECS, np) for w in range(2)}
+    for w in range(2):
+        states[w]["arr"]["values"][0] = 7 * (w + 1)
+        regions[w].publish_device(states[w])
+
+    node = NodeAggregator(root, "n0_0", workers=["w0", "w1"])
+    node.poll_once()                       # emits batch 1
+    for w in range(2):
+        states[w]["arr"]["values"][0] += 100
+        regions[w].publish_device(states[w])
+    node.poll_once()                       # emits batch 2
+    assert node.stream.head() == 2
+
+    _mark_node_dead(root, "n0_0")
+    root_agg = D.Aggregator(root)          # has consumed NOTHING yet
+    status = root_agg.poll_once()
+    # both batches harvested before retirement
+    g = SH.GlobalView.attach(root)
+    assert int(g.snapshot("arr")["values"][0]) == 107 + 114
+    assert status["nodes"]["n0_0"]["alive"] is False
+    assert status["nodes"]["n0_0"]["last_seq"] == 2
+    assert status["health"]["n0_0"]["state"] == D.DEAD
+    reasons = [t[3] for t in status["health"]["n0_0"]["transitions"]]
+    assert "node_gone" in reasons
+    # workers stay orphaned: claimed by the (retired) node's registration,
+    # never direct-folded by the root
+    assert "w0" not in root_agg.workers and "w1" not in root_agg.workers
+
+    # retired means retired: further cycles don't resurrect it
+    status = root_agg.poll_once()
+    assert status["nodes"]["n0_0"]["alive"] is False
+
+
+def test_dead_node_readmitted_on_new_boot_keeps_cursor(tmp_path):
+    """A restarted node (same id, new boot) is re-admitted and the parent
+    keeps its stream cursor — the stream outlives incarnations, so batches
+    the old incarnation committed are folded exactly once."""
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    st["arr"]["values"][4] = 50
+    region.publish_device(st)
+
+    node = NodeAggregator(root, "n0_0", workers=["w0"])
+    node.poll_once()
+    root_agg = D.Aggregator(root)
+    root_agg.poll_once()
+    g = SH.GlobalView.attach(root)
+    assert int(g.snapshot("arr")["values"][4]) == 50
+
+    _mark_node_dead(root, "n0_0")
+    status = root_agg.poll_once()
+    assert status["nodes"]["n0_0"]["alive"] is False
+
+    # supervisor restarts the node: journal intact -> same emit baseline
+    node2 = NodeAggregator(root, "n0_0", workers=["w0"])
+    st["arr"]["values"][4] = 53
+    region.publish_device(st)
+    node2.poll_once()
+    status = root_agg.poll_once()
+    assert status["nodes"]["n0_0"]["alive"] is True
+    assert int(g.snapshot("arr")["values"][4]) == 53    # not 50 + 53

@@ -1,0 +1,343 @@
+"""Chaos matrix for HIERARCHICAL aggregation (DESIGN.md §15).
+
+Every fault class from the flat chaos plane, re-aimed at the new tree
+boundaries: a node aggregator crashing mid-fold, in the emit/commit
+window, or between commit and journal; a committed delta batch corrupted
+on disk; a node process SIGKILLed outright. The invariant is the flat
+plane's, lifted one level: after recovery the global view is bit-identical
+to the no-fault oracle — forfeit-never-double at every tree level.
+
+The seeded single-process matrix carries the `chaos` marker (tier-1 runs
+a fast subset; CI's chaos job runs everything); the wide sweeps and the
+real-SIGKILL scenarios are `chaos + slow`.
+"""
+import os
+import signal
+import time
+
+import numpy as np
+import pytest
+
+import waiters
+from repro.core import daemon as D, faults as F, maps as M, shm as SH
+from repro.core.treeagg import NodeAggregator, TreeAggregator
+
+from test_shm_merge_differential import (
+    SPECS, apply_event, assert_global_matches_oracle, gen_tape,
+    oracle_states)
+
+pytestmark = pytest.mark.chaos
+
+
+def _fast_cfg(**kw):
+    kw.setdefault("snapshot_retries", 8)
+    kw.setdefault("backoff_base", 1e-5)
+    kw.setdefault("backoff_max", 1e-4)
+    return D.AggregatorConfig(**kw)
+
+
+def _make_tree(root, n_workers, fan_in, depth, config):
+    return TreeAggregator(root, fan_in=fan_in, depth=depth, config=config,
+                          worker_ids=[f"w{w}" for w in range(n_workers)])
+
+
+def _chaos_tree(root, tape, n_workers, plan, fan_in=2, depth=1, rounds=4,
+                config=None):
+    """The tree twin of test_faults._chaos_fleet: a crash anywhere in the
+    tree (a node's fold/emit window or the root's own cycle) tears down
+    the WHOLE in-process tree and rebuilds it — every node recovers from
+    its journal + its own stream (the WAL replay path), the root from its
+    journal + stream cursors. Ends with a fault-free convergence round."""
+    config = config or _fast_cfg()
+    regions = {w: SH.ShmRegion.create(root, SPECS, worker_id=f"w{w}")
+               for w in range(n_workers)}
+    states = {w: M.init_states(SPECS, np) for w in range(n_workers)}
+    per_worker = {w: [t for t in tape if t[1] == w]
+                  for w in range(n_workers)}
+    chunks = {w: np.array_split(np.arange(len(per_worker[w])), rounds)
+              for w in range(n_workers)}
+    tree = _make_tree(root, n_workers, fan_in, depth, config)
+    restarts = 0
+    with F.plan(plan):
+        for r in range(rounds):
+            for w in range(n_workers):
+                for i in chunks[w][r]:
+                    step, _, _, ev = per_worker[w][i]
+                    apply_event(states[w], ev, step)
+                try:
+                    regions[w].publish_device(states[w])
+                except F.TornPublish:
+                    pass
+            try:
+                tree.poll_once()
+            except F.InjectedCrash:
+                tree = _make_tree(root, n_workers, fan_in, depth, config)
+                restarts += 1
+    for w in range(n_workers):
+        regions[w].publish_device(states[w])
+    tree.poll_once()
+    status = tree.poll_once()
+    return tree, status, restarts
+
+
+# --------------------------------------------------------------------------
+# node crash mid-fold / emit window: seeded sweeps
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_node_crash_mid_fold_converges(tmp_path, seed):
+    """InjectedCrash at a seeded agg:* point INSIDE one node aggregator
+    (crash_who pins the schedule to that node): the rebuilt tree must
+    converge bit-identical — the node's journal covers an emit boundary,
+    so a crash mid-fold re-folds idempotent cumulative deltas."""
+    root = str(tmp_path / "shm")
+    rng = np.random.default_rng(200 + seed)
+    tape = gen_tape(rng, 4, n_events=80)
+    crash_at = int(rng.integers(1, 25))
+    plan = F.FaultPlan(seed=seed, crash_at=crash_at, crash_who="n0_0")
+    _, _, restarts = _chaos_tree(root, tape, 4, plan, rounds=5)
+    assert restarts == 1 and plan.counters["daemon_crash"] == 1
+    assert_global_matches_oracle(root, oracle_states(tape))
+
+
+@pytest.mark.parametrize("occurrence", [1, 2, 3, 4])
+def test_node_crash_in_emit_commit_window_converges(tmp_path, occurrence):
+    """node_crash_at sweeps the node:pre_emit / node:post_commit points —
+    the commit-vs-journal window where double-emission would be born. A
+    crash after post_commit but before the journal is the hazard: the
+    restarted node must replay its own committed batch into the emit base
+    (stream-as-WAL) and never re-emit it."""
+    root = str(tmp_path / "shm")
+    rng = np.random.default_rng(300 + occurrence)
+    tape = gen_tape(rng, 4, n_events=80)
+    plan = F.FaultPlan(seed=occurrence, node_crash_at=occurrence)
+    _, _, restarts = _chaos_tree(root, tape, 4, plan, rounds=5)
+    assert restarts == 1 and plan.counters["node_crash"] == 1
+    assert_global_matches_oracle(root, oracle_states(tape))
+
+
+def test_node_crash_between_commit_and_journal_no_double_fold(tmp_path):
+    """Deterministic pin of the node-level double-fold hazard (the tree
+    twin of the flat crash_at=6 test): batch committed to the stream,
+    journal NOT yet written. The restarted node replays the batch into its
+    emit base, so the content is emitted exactly once; the parent folds it
+    exactly once."""
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    st["arr"]["values"][2] = 10
+    region.publish_device(st)
+    node = NodeAggregator(root, "n0_0", workers=["w0"])
+    node.poll_once()                    # batch 1 committed + journaled
+    root_agg = D.Aggregator(root)
+    root_agg.poll_once()
+    g = SH.GlobalView.attach(root)
+    assert int(g.snapshot("arr")["values"][2]) == 10
+
+    st["arr"]["values"][2] = 17         # +7 delta
+    region.publish_device(st)
+    # node:post_commit is the 2nd node:* point of the cycle — the crash
+    # lands with the batch durable on the stream and the journal stale
+    plan = F.FaultPlan(seed=0, node_crash_at=2)
+    with F.plan(plan):
+        with pytest.raises(F.InjectedCrash):
+            node.poll_once()
+    assert plan.points.get("node:post_commit", 0) == 1
+    assert node.stream.head() == 2
+
+    node2 = NodeAggregator(root, "n0_0", workers=["w0"])   # WAL replay
+    node2.poll_once()
+    node2.poll_once()
+    # batch 2's CONTENT is never re-emitted: a restarted node may push one
+    # membership heartbeat batch (parent health refresh), but every batch
+    # past the replayed one must carry zero data updates
+    for seq, payload in node2.stream.poll(2):
+        assert payload is not None and payload.get("updates", 0) == 0, \
+            f"batch {seq} re-emitted content after WAL replay"
+    root_agg.poll_once()
+    root_agg.poll_once()
+    assert int(g.snapshot("arr")["values"][2]) == 17       # NOT 24
+
+
+def test_parent_crash_before_journal_refolds_batch_idempotently(tmp_path):
+    """The consumer-side window: the root folds a node batch, publishes,
+    then crashes before journaling its stream cursor. The restarted root
+    re-reads the unacked batch — ringbuf replay guards and cumulative
+    summary deltas make the re-fold land on the identical view."""
+    root = str(tmp_path / "shm")
+    rng = np.random.default_rng(77)
+    tape = gen_tape(rng, 2, n_events=60)
+    regions = {w: SH.ShmRegion.create(root, SPECS, worker_id=f"w{w}")
+               for w in range(2)}
+    states = {w: M.init_states(SPECS, np) for w in range(2)}
+    for step, w, _, ev in tape:
+        apply_event(states[w], ev, step)
+    for w in range(2):
+        regions[w].publish_device(states[w])
+    node = NodeAggregator(root, "n0_0", workers=["w0", "w1"])
+    node.poll_once()
+
+    root_agg = D.Aggregator(root)
+    # cycle with no direct workers: cycle_begin, node pre/post_merge,
+    # pre_publish, post_publish, then pre_journal (6th) — crash there
+    plan = F.FaultPlan(seed=0, crash_at=6, crash_who="global")
+    with F.plan(plan):
+        with pytest.raises(F.InjectedCrash):
+            root_agg.poll_once()
+    assert plan.points.get("agg:post_publish", 0) == 1
+    assert node.stream.acked() == 0     # ack follows the JOURNAL, not fold
+
+    root2 = D.Aggregator(root)          # journal restart: re-reads batch 1
+    root2.poll_once()
+    root2.poll_once()
+    assert node.stream.acked() == 1
+    assert_global_matches_oracle(root, oracle_states(tape))
+
+
+# --------------------------------------------------------------------------
+# stream corruption: detect-and-skip with accounting, never silent-fold
+# --------------------------------------------------------------------------
+
+def test_stream_corrupt_batch_detected_and_accounted(tmp_path):
+    """Bytes flipped in a committed batch AFTER node:post_commit: the
+    parent must detect (embedded CRC / container damage), skip the batch
+    with stream_lost accounting, and keep folding later clean batches.
+    Forfeit with a receipt — never a torn fold, never a crash."""
+    root = str(tmp_path / "shm")
+    region = SH.ShmRegion.create(root, SPECS, worker_id="w0")
+    st = M.init_states(SPECS, np)
+    st["arr"]["values"][0] = 5
+    region.publish_device(st)
+    node = NodeAggregator(root, "n0_0", workers=["w0"])
+    plan = F.FaultPlan(seed=1, rates={"stream_corrupt": 1.0})
+    with F.plan(plan):
+        node.poll_once()                # batch 1 committed, then scribbled
+    assert plan.counters["stream_corrupt"] == 1
+
+    root_agg = D.Aggregator(root)
+    status = root_agg.poll_once()
+    assert status["stream_lost"].get("n0_0") == 1
+    g = SH.GlobalView.attach(root)
+    assert int(g.snapshot("arr")["values"][0]) == 0   # forfeited, not torn
+
+    # the stream keeps working: the next clean batch folds normally
+    st["arr"]["values"][0] = 12
+    region.publish_device(st)
+    node.poll_once()                    # batch 2: +7 delta, clean
+    status = root_agg.poll_once()
+    assert int(g.snapshot("arr")["values"][0]) == 7
+    assert status["stream_lost"].get("n0_0") == 1     # no new loss
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_full_tree_fault_matrix_converges(tmp_path, seed):
+    """Everything at once, tree edition: worker publish faults, node
+    crashes, root crashes, and corrupt worker snapshots across a depth-2
+    tree. Stream corruption is excluded here — it forfeits real content
+    by design (accounted, tested above), which breaks oracle identity."""
+    root = str(tmp_path / "shm")
+    tape = gen_tape(np.random.default_rng(400 + seed), 6, n_events=120)
+    plan = F.FaultPlan(
+        seed=seed, crash_at=11 + 5 * seed, node_crash_at=3 + seed,
+        rates={"torn_publish": 0.2, "stuck_odd": 0.1,
+               "corrupt_snapshot": 0.2, "slow_worker": 0.05},
+        slow_s=0.0003)
+    _, _, restarts = _chaos_tree(root, tape, 6, plan, fan_in=2, depth=2,
+                                 rounds=6)
+    assert restarts >= 2
+    assert plan.counters["node_crash"] >= 1
+    assert plan.counters["daemon_crash"] >= 1
+    assert_global_matches_oracle(root, oracle_states(tape))
+
+
+# --------------------------------------------------------------------------
+# SIGKILL of a real node process mid-tree
+# --------------------------------------------------------------------------
+
+def _node_child(root, node_id, workers, ready_file):
+    cfg = D.AggregatorConfig(snapshot_retries=8, backoff_base=1e-5,
+                             backoff_max=1e-4)
+    na = NodeAggregator(root, node_id, workers=workers, config=cfg)
+    with open(ready_file, "w") as f:
+        f.write("ok")
+    while True:
+        na.poll_once()
+        time.sleep(0.005)
+
+
+@pytest.mark.slow
+def test_sigkill_node_process_harvest_restart_converges(tmp_path):
+    """A REAL node process SIGKILLed mid-run: the root harvests whatever
+    the dead incarnation committed, retires the node, and a restarted node
+    process (same id, new boot, journal + stream intact) is re-admitted
+    at the kept cursor. Final view: bit-identical to the oracle."""
+    import multiprocessing as mp
+    root = str(tmp_path / "shm")
+    rng = np.random.default_rng(500)
+    n_workers = 4
+    tape = gen_tape(rng, n_workers, n_events=100)
+    regions = {w: SH.ShmRegion.create(root, SPECS, worker_id=f"w{w}")
+               for w in range(n_workers)}
+    states = {w: M.init_states(SPECS, np) for w in range(n_workers)}
+    per_worker = {w: [t for t in tape if t[1] == w]
+                  for w in range(n_workers)}
+    chunks = {w: np.array_split(np.arange(len(per_worker[w])), 2)
+              for w in range(n_workers)}
+
+    ctx = mp.get_context("spawn")
+    ready = str(tmp_path / "ready")
+    p = ctx.Process(target=_node_child,
+                    args=(root, "n0_0", ["w0", "w1"], ready))
+    p.start()
+    try:
+        waiters.wait_for_path(ready)
+        # w2/w3 under a second, in-process node; root consumes both
+        node_b = NodeAggregator(root, "n0_1", workers=["w2", "w3"])
+        root_agg = D.Aggregator(root)
+
+        for w in range(n_workers):           # round 1
+            for i in chunks[w][0]:
+                step, _, _, ev = per_worker[w][i]
+                apply_event(states[w], ev, step)
+            regions[w].publish_device(states[w])
+        node_b.poll_once()
+        # wait until the child consumed round 1 and committed a batch
+        stream_a = SH.DeltaStream.attach(root, "n0_0")
+        waiters.wait_for(lambda: stream_a.head() >= 1,
+                         msg="child node emit")
+        root_agg.poll_once()
+
+        os.kill(p.pid, signal.SIGKILL)
+        waiters.wait_for_exit(p)
+        status = root_agg.poll_once()        # harvest + retire
+        assert status["nodes"]["n0_0"]["alive"] is False
+
+        for w in range(n_workers):           # round 2
+            for i in chunks[w][1]:
+                step, _, _, ev = per_worker[w][i]
+                apply_event(states[w], ev, step)
+            regions[w].publish_device(states[w])
+        node_b.poll_once()
+
+        # supervisor restarts the node: new boot, same id, kept cursor
+        ready2 = str(tmp_path / "ready2")
+        p = ctx.Process(target=_node_child,
+                        args=(root, "n0_0", ["w0", "w1"], ready2))
+        p.start()
+        waiters.wait_for_path(ready2)
+        waiters.wait_for(lambda: stream_a.head() >= 2,
+                         msg="restarted node emit")
+
+        def converged():
+            root_agg.poll_once()
+            try:
+                assert_global_matches_oracle(root, oracle_states(tape))
+                return True
+            except AssertionError:
+                return False
+        waiters.wait_for(converged, timeout=30, msg="tree convergence")
+    finally:
+        if p.is_alive():
+            p.kill()
+            p.join()

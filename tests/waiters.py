@@ -1,0 +1,81 @@
+"""Bounded condition-wait helpers for multi-process tests.
+
+Every cross-process rendezvous in the suite goes through these instead of
+bare ``time.sleep`` loops: each wait has an explicit deadline, polls with
+exponential backoff (fast when the condition flips quickly, cheap when it
+does not), and raises a TimeoutError naming the condition — so a hung
+child turns into a diagnosable failure, never a silent 10-minute stall.
+"""
+from __future__ import annotations
+
+import signal
+import subprocess
+import time
+
+
+def wait_for(pred, timeout: float = 60.0, msg: str = "condition",
+             initial: float = 0.001, max_interval: float = 0.05):
+    """Poll `pred` until truthy; returns its value. Backoff doubles from
+    `initial` to `max_interval`, so a condition that flips in microseconds
+    costs microseconds and a slow one costs ~20 polls/second, not a spin."""
+    deadline = time.monotonic() + timeout
+    interval = initial
+    while True:
+        val = pred()
+        if val:
+            return val
+        if time.monotonic() > deadline:
+            raise TimeoutError(f"timed out after {timeout}s waiting "
+                               f"for {msg}")
+        time.sleep(interval)
+        interval = min(interval * 2, max_interval)
+
+
+def wait_for_path(path: str, timeout: float = 60.0):
+    """Wait for a file to exist (child-process ready files)."""
+    import os
+    return wait_for(lambda: os.path.exists(path), timeout=timeout,
+                    msg=f"path {path}")
+
+
+def wait_for_exit(proc, timeout: float = 60.0):
+    """Join a multiprocessing.Process with a deadline; SIGKILL + reap on
+    timeout so the test fails with a message instead of leaking a child.
+    Returns the exit code."""
+    proc.join(timeout=timeout)
+    if proc.is_alive():
+        proc.kill()
+        proc.join()
+        raise TimeoutError(f"process pid={proc.pid} still alive after "
+                           f"{timeout}s; killed")
+    return proc.exitcode
+
+
+def park() -> None:
+    """Block until a signal arrives — for victim children the parent will
+    SIGKILL. Unlike ``time.sleep(<huge>)`` this documents the intent and
+    never outlives the test on its own (pytest-level timeouts see a
+    signal-interruptible wait, and any terminating signal ends it)."""
+    while True:
+        signal.pause()
+
+
+def run_cli(cmd, timeout: float = 120.0, **kw) -> subprocess.CompletedProcess:
+    """subprocess.run with capture + a bounded deadline that reports the
+    child's output so far on expiry (subprocess.TimeoutExpired swallows it
+    unless capture was requested — always request it)."""
+    kw.setdefault("capture_output", True)
+    kw.setdefault("text", True)
+    try:
+        return subprocess.run(cmd, timeout=timeout, **kw)
+    except subprocess.TimeoutExpired as e:
+        out = (e.stdout or b"")
+        err = (e.stderr or b"")
+        if isinstance(out, bytes):
+            out = out.decode(errors="replace")
+        if isinstance(err, bytes):
+            err = err.decode(errors="replace")
+        raise TimeoutError(
+            f"{cmd[:3]}... exceeded {timeout}s\n"
+            f"--- stdout so far ---\n{out[-2000:]}\n"
+            f"--- stderr so far ---\n{err[-2000:]}") from e
